@@ -1,0 +1,41 @@
+"""Shared benchmark plumbing: timing, row printing, JSON persistence."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]) -> None:
+    print(f"\n== {title} ==")
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    print("  ".join(c.rjust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).rjust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def save_json(name: str, rows: list[dict], meta: dict | None = None) -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    payload = {"name": name, "meta": meta or {}, "rows": rows}
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def rel_err(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(b), 1e-12)

@@ -1,0 +1,107 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+per grid step — NOT indicative of TPU speed), so wall-time here measures the
+*reference* jnp paths plus the simulator's page-move throughput; the Pallas
+kernels' performance story is the structural roofline in EXPERIMENTS.md.
+What this bench asserts is end-to-end viability: ref-path throughput and
+the host-side cleaning-policy evaluation rate (segments/s), which bounds how
+often a serving pod can afford to re-evaluate MDC priorities.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policies
+from repro.kernels import ops, ref
+
+from ._util import print_table, save_json
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # warm (compile)
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash-attention ref path (the XLA path models lower on CPU/dry-run)
+    B, S, H, Kh, D = (1, 512, 8, 2, 64) if quick else (2, 2048, 16, 4, 128)
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, Kh, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, Kh, D), jnp.float32)
+    from repro.models.attention import chunked_attention
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
+                                                  q_block=128, kv_block=128))
+    us = _time(f, q, k, v)
+    flops = 4 * B * H * S * S * D / 2  # causal
+    rows.append({"kernel": "attention (XLA chunked ref)",
+                 "shape": f"B{B} S{S} H{H} D{D}", "us_per_call": round(us, 1),
+                 "derived": f"{flops/us/1e3:.1f} GFLOP/s"})
+
+    # paged attention ref
+    P, T = 32, 16
+    kp = jax.random.normal(key, (B * P + 1, T, Kh, D), jnp.float32)
+    bt = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    sl = jnp.full((B,), P * T, jnp.int32)
+    qd = jax.random.normal(key, (B, H, D), jnp.float32)
+    g = jax.jit(lambda q, kp, bt, sl: ref.paged_attention_ref(q, kp, kp, bt, sl))
+    us = _time(g, qd, kp, bt, sl)
+    rows.append({"kernel": "paged_attention (ref)",
+                 "shape": f"B{B} pages{P} T{T}", "us_per_call": round(us, 1),
+                 "derived": f"{B*P*T} kv-tokens"})
+
+    # segment compact (jnp take path == what the engine does on CPU)
+    N, E = (512, 4096) if quick else (4096, 16384)
+    pool = jax.random.normal(key, (N, E), jnp.float32)
+    src = jax.random.randint(key, (N // 2,), 0, N, jnp.int32)
+    h = jax.jit(lambda p, s: p[s])
+    us = _time(h, pool, src)
+    bytes_moved = (N // 2) * E * 4 * 2
+    rows.append({"kernel": "segment_compact (gather ref)",
+                 "shape": f"{N//2}x{E}f32", "us_per_call": round(us, 1),
+                 "derived": f"{bytes_moved/us/1e3:.1f} GB/s"})
+
+    # MDC priority evaluation rate (host numpy — the simulator's hot loop)
+    n = 51_200  # the paper's segment count
+    live = np.random.default_rng(0).integers(0, 512, n)
+    up2 = np.random.default_rng(1).uniform(0, 1e6, n)
+    t0 = time.time()
+    reps = 20
+    for _ in range(reps):
+        policies.key_mdc(live=live, S=512, up2=up2, u_now=2e6)
+    us = (time.time() - t0) / reps * 1e6
+    rows.append({"kernel": "mdc_priority (numpy, paper-scale 51200 segs)",
+                 "shape": f"{n} segs", "us_per_call": round(us, 1),
+                 "derived": f"{n/us:.1f} seg/us"})
+
+    # jnp/pallas-interpret correctness spot check rolled into bench
+    got = ops.mdc_priority(jnp.asarray(live[:1024]), jnp.asarray(up2[:1024]),
+                           2e6, S=512)
+    want = policies.key_mdc(live=live[:1024], S=512, up2=up2[:1024], u_now=2e6)
+    finite = np.isfinite(want)
+    assert np.allclose(np.asarray(got)[finite], want[finite], rtol=1e-5)
+    return rows
+
+
+def main(quick: bool = True) -> None:
+    rows = run(quick)
+    print_table("Kernel reference-path micro-benchmarks (CPU)", rows,
+                ["kernel", "shape", "us_per_call", "derived"])
+    save_json("bench_kernels", rows, {"quick": quick})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Figure 5: Wamp of all cleaning policies vs fill factor, under
+uniform / 80-20 Zipfian (θ=0.99) / 90-10 Zipfian (θ=1.35) updates.
+
+Expected (paper §6.2.2): uniform — age ≈ greedy ≈ MDC-opt optimal,
+cost-benefit worst; skewed — age ≫ greedy > cost-benefit > multi-log > MDC,
+with MDC ≈ MDC-opt lowest everywhere.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.simulator import run_policy
+
+from ._util import print_table, save_json
+
+POLICIES = ("age", "greedy", "cost_benefit", "multilog", "multilog_opt",
+            "mdc", "mdc_opt")
+DISTS = (("uniform", {}), ("zipf_0.99", {"theta": 0.99}),
+         ("zipf_1.35", {"theta": 1.35}))
+
+
+def run(quick: bool = True) -> list[dict]:
+    Fs = (0.6, 0.7, 0.8, 0.9) if quick else (0.5, 0.6, 0.7, 0.8, 0.85, 0.9)
+    nseg0, S = (256, 256) if quick else (512, 512)
+    mult = 8 if quick else 20
+    rows = []
+    for dist, wkw in DISTS:
+        workload = "uniform" if dist == "uniform" else "zipfian"
+        for F in Fs:
+            nseg = max(nseg0, int(round(48 / (1 - F))))
+            row = {"dist": dist, "F": F}
+            t0 = time.time()
+            for pol in POLICIES:
+                st = run_policy(pol, workload, nseg=nseg, S=S, F=F,
+                                multiplier=mult, warmup_frac=0.4, **wkw)
+                row[pol] = st.wamp()
+            row["sim_s"] = round(time.time() - t0, 2)
+            rows.append(row)
+    return rows
+
+
+def main(quick: bool = True) -> None:
+    rows = run(quick)
+    print_table("Figure 5 — Wamp vs fill factor, per policy", rows,
+                ["dist", "F", *POLICIES, "sim_s"])
+    save_json("fig5_policies", rows, {"quick": quick})
+
+
+if __name__ == "__main__":
+    main()

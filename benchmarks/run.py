@@ -1,0 +1,61 @@
+"""Benchmark driver — one module per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick (~5-10 min)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale stores
+    PYTHONPATH=src python -m benchmarks.run --only table1_uniform fig5_policies
+
+Results print as tables and persist to experiments/bench/<name>.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (bench_checkpoint, bench_kernels, bench_serving,
+               fig3_breakdown, fig4_sortbuf, fig5_policies, fig6_tpcc,
+               table1_uniform, table2_hotcold)
+
+BENCHES = {
+    "table1_uniform": table1_uniform.main,
+    "table2_hotcold": table2_hotcold.main,
+    "fig3_breakdown": fig3_breakdown.main,
+    "fig4_sortbuf": fig4_sortbuf.main,
+    "fig5_policies": fig5_policies.main,
+    "fig6_tpcc": fig6_tpcc.main,
+    "bench_serving": bench_serving.main,
+    "bench_checkpoint": bench_checkpoint.main,
+    "bench_kernels": bench_kernels.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale stores (slow)")
+    ap.add_argument("--only", nargs="*", choices=list(BENCHES),
+                    help="subset of benches")
+    args = ap.parse_args()
+
+    names = args.only or list(BENCHES)
+    t_all = time.time()
+    failed = []
+    for name in names:
+        t0 = time.time()
+        print(f"\n##### {name} {'(full)' if args.full else '(quick)'} #####")
+        try:
+            BENCHES[name](quick=not args.full)
+        except Exception:  # noqa: BLE001 — keep the suite running
+            failed.append(name)
+            traceback.print_exc()
+        print(f"##### {name} done in {time.time()-t0:.1f}s #####")
+    print(f"\n===== benchmarks finished in {time.time()-t_all:.1f}s; "
+          f"{len(names)-len(failed)}/{len(names)} ok"
+          + (f"; FAILED: {failed}" if failed else "") + " =====")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

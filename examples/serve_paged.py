@@ -1,0 +1,40 @@
+"""End-to-end serving example (the paper's kind of system): continuous
+batching through the log-structured paged KV pool, with MDC compaction
+keeping whole-slab free extents available — compare cleaning policies by the
+block-move overhead they cost the decode path.
+
+    PYTHONPATH=src python examples/serve_paged.py
+    PYTHONPATH=src python examples/serve_paged.py --requests 24 \
+        --policies mdc greedy age cost_benefit
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.serve import serve_run
+from repro.models import Model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=14)
+    ap.add_argument("--policies", nargs="*", default=["mdc", "greedy", "age"])
+    args = ap.parse_args()
+
+    model = Model(get_config(args.arch).smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"serving reduced {args.arch} ({model.n_params()/1e6:.1f}M params) "
+          f"— mixed-length request stream, tiny pool to force compaction\n")
+    results = [serve_run(arch=args.arch, requests=args.requests, policy=p,
+                         params=params, model=model) for p in args.policies]
+    best = min(results, key=lambda r: r["wamp"])
+    print(f"\nlowest compaction overhead: {best['policy']} "
+          f"(Wamp {best['wamp']:.3f}) — every moved block is HBM bandwidth "
+          f"taken from decode.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Log-structured incremental checkpointing with MDC space reclamation."""
+
+from .logstore import LogStructuredCheckpointStore
+from .manager import CheckpointManager, flatten_tree, unflatten_like
+
+__all__ = ["LogStructuredCheckpointStore", "CheckpointManager",
+           "flatten_tree", "unflatten_like"]

@@ -1,0 +1,396 @@
+"""Log-structured checkpoint store with MDC garbage collection.
+
+The paper's *variable-size page* case (§4.4): a "page" is one chunk of one
+tensor leaf (params / optimizer moments / RNG — different supersede
+lifetimes), a "segment" is one append-only segment file on disk.  Saves are
+incremental: only chunks whose content changed are appended; unchanged
+chunks are re-referenced.  Old chunk versions die in place when the last
+retained step referencing them is dropped — segment files checkerboard
+exactly like Figure 1, and GC evacuates live chunks ordered by the paper's
+variable-size declining-cost key
+
+    -dCost/du ∝ ((B-A)/A)^2 · 1/(C·(u_now - u_p2))        (§5.1.3)
+
+with the clock ticking once per chunk death (paper: once per update),
+u_p2 carry-forward per §5.2.2 (supersede: new = old + 0.5·(now-old); GC
+move: inherit the segment mean; first write: coldest of the batch), and GC
+survivors sorted by u_p2 before re-packing (§5.3) so slow-changing chunks
+(frozen layers, embedding tables) cluster away from hot ones (optimizer
+moments).
+
+Wamp here is *bytes moved / bytes written* — checkpoint-bandwidth overhead,
+the exact quantity that competes with training-step I/O on a real cluster.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+
+from ..core.policies import key_mdc_bytes
+
+_FIRST_WRITE_COLD = 0.0
+
+
+@dataclasses.dataclass
+class ChunkVersion:
+    key: str            # "<leaf path>#<chunk idx>"
+    seg: int            # segment id
+    offset: int
+    size: int
+    sha: str
+    up2: float
+    pins: set = dataclasses.field(default_factory=set)  # steps referencing
+
+
+@dataclasses.dataclass
+class Segment:
+    sid: int
+    path: pathlib.Path
+    written: int = 0          # bytes appended (B once sealed)
+    live_bytes: int = 0       # B - A
+    live_chunks: int = 0      # C
+    up2_sum: float = 0.0      # Σ up2 of appended chunks (mean at seal)
+    up2: float = 0.0          # sealed segment mean (paper §5.2.2)
+    sealed: bool = False
+
+
+@dataclasses.dataclass
+class StoreStats:
+    bytes_written: int = 0    # user (checkpoint) bytes appended
+    bytes_moved: int = 0      # GC-relocated bytes
+    chunks_moved: int = 0
+    segments_cleaned: int = 0
+    deaths: int = 0
+
+    def wamp(self) -> float:
+        return self.bytes_moved / max(self.bytes_written, 1)
+
+
+class LogStructuredCheckpointStore:
+    """Append-only segment files + MDC cleaning.  Not thread-safe; the
+    CheckpointManager serializes access."""
+
+    def __init__(self, root: str | pathlib.Path, *, seg_bytes: int = 8 << 20,
+                 chunk_bytes: int = 1 << 20, policy: str = "mdc",
+                 gc_dead_frac: float = 0.35, gc_batch: int = 4):
+        self.root = pathlib.Path(root)
+        (self.root / "segments").mkdir(parents=True, exist_ok=True)
+        (self.root / "manifests").mkdir(parents=True, exist_ok=True)
+        self.seg_bytes = seg_bytes
+        self.chunk_bytes = chunk_bytes
+        self.policy = policy
+        self.gc_dead_frac = gc_dead_frac
+        self.gc_batch = gc_batch
+
+        self.segments: dict[int, Segment] = {}
+        self.versions: dict[str, list[ChunkVersion]] = {}  # key -> versions
+        self.steps: dict[int, dict] = {}  # step -> manifest dict
+        self.u_now = 0.0
+        self.stats = StoreStats()
+        self._open_sid: int | None = None
+        self._next_sid = 0
+        self._load_state()
+
+    # ----------------------------------------------------------- persistence
+    def _state_path(self) -> pathlib.Path:
+        return self.root / "store_state.json"
+
+    def _save_state(self) -> None:
+        state = {
+            "u_now": self.u_now,
+            "next_sid": self._next_sid,
+            "open_sid": self._open_sid,
+            "segments": {
+                str(s.sid): dict(written=s.written, live_bytes=s.live_bytes,
+                                 live_chunks=s.live_chunks, up2=s.up2,
+                                 up2_sum=s.up2_sum, sealed=s.sealed)
+                for s in self.segments.values()},
+            "versions": {
+                key: [dict(seg=v.seg, offset=v.offset, size=v.size, sha=v.sha,
+                           up2=v.up2, pins=sorted(v.pins)) for v in vs]
+                for key, vs in self.versions.items()},
+            "steps": {str(k): v for k, v in self.steps.items()},
+            "stats": dataclasses.asdict(self.stats),
+        }
+        tmp = self._state_path().with_suffix(".tmp")
+        tmp.write_text(json.dumps(state))
+        tmp.replace(self._state_path())  # atomic: a torn save never corrupts
+
+    def _load_state(self) -> None:
+        p = self._state_path()
+        if not p.exists():
+            return
+        state = json.loads(p.read_text())
+        self.u_now = state["u_now"]
+        self._next_sid = state["next_sid"]
+        self._open_sid = state["open_sid"]
+        for sid_s, d in state["segments"].items():
+            sid = int(sid_s)
+            self.segments[sid] = Segment(sid, self._seg_path(sid), **d)
+        for key, vs in state["versions"].items():
+            self.versions[key] = [
+                ChunkVersion(key, v["seg"], v["offset"], v["size"], v["sha"],
+                             v["up2"], set(v["pins"])) for v in vs]
+        self.steps = {int(k): v for k, v in state["steps"].items()}
+        self.stats = StoreStats(**state["stats"])
+
+    def _seg_path(self, sid: int) -> pathlib.Path:
+        return self.root / "segments" / f"seg_{sid:06d}.bin"
+
+    # -------------------------------------------------------------- segments
+    def _open_segment(self) -> Segment:
+        if self._open_sid is not None:
+            return self.segments[self._open_sid]
+        sid = self._next_sid
+        self._next_sid += 1
+        seg = Segment(sid, self._seg_path(sid))
+        seg.path.write_bytes(b"")
+        self.segments[sid] = seg
+        self._open_sid = sid
+        return seg
+
+    def _seal(self, seg: Segment) -> None:
+        seg.up2 = seg.up2_sum / max(seg.live_chunks, 1)
+        seg.sealed = True
+        if self._open_sid == seg.sid:
+            self._open_sid = None
+
+    def _append(self, data: bytes, up2: float) -> tuple[int, int]:
+        """Append one chunk payload; returns (segment id, offset)."""
+        seg = self._open_segment()
+        if seg.written + len(data) > self.seg_bytes and seg.written > 0:
+            self._seal(seg)
+            seg = self._open_segment()
+        with seg.path.open("ab") as f:
+            off = f.tell()
+            f.write(data)
+        seg.written = off + len(data)
+        seg.live_bytes += len(data)
+        seg.live_chunks += 1
+        seg.up2_sum += up2
+        if seg.written >= self.seg_bytes:
+            self._seal(seg)
+        return seg.sid, off
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, leaves: dict[str, np.ndarray],
+             keep_last: int = 0) -> dict:
+        """Incremental save.  ``leaves``: flat {path: host ndarray}.  Returns
+        the manifest.  ``keep_last``>0 drops older steps (their chunk pins)."""
+        manifest = {"step": step, "leaves": {}}
+        batch_up2: list[float] = []
+        first_writes: list[ChunkVersion] = []
+
+        for path, arr in leaves.items():
+            arr = np.ascontiguousarray(arr)
+            raw = arr.tobytes()
+            chunks = []
+            n = max(1, -(-len(raw) // self.chunk_bytes))
+            for ci in range(n):
+                data = raw[ci * self.chunk_bytes:(ci + 1) * self.chunk_bytes]
+                key = f"{path}#{ci}"
+                sha = hashlib.sha1(data).hexdigest()
+                vs = self.versions.setdefault(key, [])
+                latest = vs[-1] if vs else None
+                if latest is not None and latest.sha == sha:
+                    latest.pins.add(step)       # unchanged: re-reference
+                    chunks.append(key)
+                    continue
+                if latest is not None:
+                    # §5.2.2 non-first write: supersede event updates u_p2
+                    up2 = latest.up2 + 0.5 * (self.u_now - latest.up2)
+                    self._unpin_from_latest(latest, step)
+                else:
+                    up2 = None                   # first write: assign below
+                batch_up2.append(up2)
+                sid, off = self._append(data, up2 if up2 is not None else 0.0)
+                v = ChunkVersion(key, sid, off, len(data), sha,
+                                 up2 if up2 is not None else 0.0, {step})
+                vs.append(v)
+                if up2 is None:
+                    first_writes.append(v)
+                self.stats.bytes_written += len(data)
+                chunks.append(key)
+            manifest["leaves"][path] = {
+                "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "chunks": chunks}
+
+        # §5.2.2 first write: assign the coldest u_p2 seen in this batch
+        # (they were appended with a 0.0 placeholder; retag + fix seg sums)
+        known = [u for u in batch_up2 if u is not None]
+        cold = min(known) if known else _FIRST_WRITE_COLD
+        for v in first_writes:
+            v.up2 = cold
+            seg = self.segments[v.seg]
+            seg.up2_sum += cold
+            if seg.sealed:
+                seg.up2 = seg.up2_sum / max(seg.live_chunks, 1)
+
+        self.steps[step] = manifest
+        json_path = self.root / "manifests" / f"step_{step:09d}.json"
+        json_path.write_text(json.dumps(manifest))
+
+        if keep_last > 0:
+            for old in sorted(self.steps)[:-keep_last]:
+                self.drop_step(old)
+        self.maybe_gc()
+        self._save_state()
+        return manifest
+
+    def _unpin_from_latest(self, v: ChunkVersion, new_step: int) -> None:
+        """The new save supersedes v *for this step onward*; v stays alive
+        while older retained steps pin it."""
+        if not v.pins:
+            self._kill(v)
+
+    def drop_step(self, step: int) -> None:
+        if step not in self.steps:
+            return
+        man = self.steps.pop(step)
+        for path, meta in man["leaves"].items():
+            for key in meta["chunks"]:
+                for v in self.versions.get(key, []):
+                    if step in v.pins:
+                        v.pins.discard(step)
+                        if not v.pins:
+                            self._kill(v)
+        (self.root / "manifests" / f"step_{step:09d}.json").unlink(
+            missing_ok=True)
+
+    def _kill(self, v: ChunkVersion) -> None:
+        """A chunk version died: tick the clock, checkerboard its segment."""
+        seg = self.segments.get(v.seg)
+        if seg is None:
+            return
+        seg.live_bytes -= v.size
+        seg.live_chunks -= 1
+        seg.up2_sum -= v.up2
+        self.u_now += 1.0
+        self.stats.deaths += 1
+        self.versions[v.key].remove(v)
+        if not self.versions[v.key]:
+            del self.versions[v.key]
+        if seg.sealed and seg.live_chunks == 0:
+            self._delete_segment(seg)
+
+    def _delete_segment(self, seg: Segment) -> None:
+        seg.path.unlink(missing_ok=True)
+        del self.segments[seg.sid]
+        if self._open_sid == seg.sid:
+            self._open_sid = None
+
+    # -------------------------------------------------------------------- gc
+    def dead_frac(self) -> float:
+        total = sum(s.written for s in self.segments.values())
+        live = sum(s.live_bytes for s in self.segments.values())
+        return (total - live) / max(total, 1)
+
+    def maybe_gc(self) -> int:
+        cleaned = 0
+        while self.dead_frac() > self.gc_dead_frac:
+            n = self.gc()
+            if n == 0:
+                break
+            cleaned += n
+        return cleaned
+
+    def select_victims(self, k: int) -> list[int]:
+        cands = [s for s in self.segments.values()
+                 if s.sealed and s.live_bytes < s.written]
+        if not cands:
+            return []
+        live_b = np.array([s.live_bytes for s in cands], np.float64)
+        free_b = np.array([s.written - s.live_bytes for s in cands], np.float64)
+        chunks = np.array([s.live_chunks for s in cands], np.float64)
+        up2 = np.array([s.up2 for s in cands], np.float64)
+        if self.policy == "mdc":
+            key = key_mdc_bytes(live_b, free_b, chunks, up2, self.u_now)
+        elif self.policy == "greedy":
+            key = live_b / np.maximum(live_b + free_b, 1.0)
+        else:  # age
+            key = np.array([s.sid for s in cands], np.float64)
+        order = np.argsort(key)[:k]
+        return [cands[i].sid for i in order]
+
+    def gc(self, k: int | None = None) -> int:
+        """Evacuate up to k victim segments; returns segments cleaned."""
+        victims = self.select_victims(k or self.gc_batch)
+        if not victims:
+            return 0
+        movers: list[tuple[ChunkVersion, bytes, float]] = []
+        for sid in victims:
+            seg = self.segments[sid]
+            data = seg.path.read_bytes()
+            for vs in self.versions.values():
+                for v in vs:
+                    if v.seg == sid:
+                        # §5.2.2 GC write: u_p2 from the containing segment
+                        movers.append((v, data[v.offset:v.offset + v.size],
+                                       seg.up2))
+        # §5.3: sort survivors by u_p2 (hottest together)
+        movers.sort(key=lambda t: -t[2])
+        for sid in victims:
+            seg = self.segments[sid]
+            self.stats.segments_cleaned += 1
+            self._delete_segment(seg)
+        for v, data, up2 in movers:
+            v.up2 = up2
+            sid, off = self._append(data, up2)
+            v.seg, v.offset = sid, off
+            self.stats.bytes_moved += len(data)
+            self.stats.chunks_moved += 1
+        return len(victims)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        return max(self.steps) if self.steps else None
+
+    def restore(self, step: int | None = None) -> dict[str, np.ndarray]:
+        import ml_dtypes  # noqa: F401 — registers bfloat16 with numpy
+        if step is None:
+            step = self.latest_step()
+        if step is None or step not in self.steps:
+            raise FileNotFoundError(f"no checkpoint for step {step}")
+        man = self.steps[step]
+        out = {}
+        for path, meta in man["leaves"].items():
+            parts = []
+            for key in meta["chunks"]:
+                v = self._version_for(key, step)
+                with self.segments[v.seg].path.open("rb") as f:
+                    f.seek(v.offset)
+                    parts.append(f.read(v.size))
+            raw = b"".join(parts)
+            out[path] = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])
+                                      ).reshape(meta["shape"]).copy()
+        return out
+
+    def _version_for(self, key: str, step: int) -> ChunkVersion:
+        for v in self.versions.get(key, []):
+            if step in v.pins:
+                return v
+        raise KeyError(f"chunk {key} has no live version for step {step}")
+
+    # ------------------------------------------------------------ invariants
+    def check_invariants(self) -> None:
+        live_b = {sid: 0 for sid in self.segments}
+        live_c = {sid: 0 for sid in self.segments}
+        for vs in self.versions.values():
+            for v in vs:
+                assert v.pins, f"unpinned version survived: {v.key}"
+                assert v.seg in self.segments, f"dangling segment {v.seg}"
+                live_b[v.seg] += v.size
+                live_c[v.seg] += 1
+        for sid, seg in self.segments.items():
+            assert seg.live_bytes == live_b[sid], (sid, seg.live_bytes, live_b[sid])
+            assert seg.live_chunks == live_c[sid]
+            assert seg.path.stat().st_size == seg.written
+        for step, man in self.steps.items():
+            for meta in man["leaves"].values():
+                for key in meta["chunks"]:
+                    self._version_for(key, step)

@@ -1,0 +1,19 @@
+"""Architecture registry: --arch <id> resolves here."""
+from . import (deepseek_v2_lite_16b, granite_3_2b, internvl2_76b, mamba2_1p3b,
+               nemotron_4_340b, qwen3_1p7b, qwen3_moe_30b_a3b, whisper_medium,
+               yi_34b, zamba2_7b)
+from .base import SHAPES, ModelConfig, ShapeConfig, applicable_shapes, skip_reason
+
+_MODULES = [internvl2_76b, whisper_medium, zamba2_7b, qwen3_1p7b, granite_3_2b,
+            nemotron_4_340b, yi_34b, qwen3_moe_30b_a3b, deepseek_v2_lite_16b,
+            mamba2_1p3b]
+
+REGISTRY = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+ARCHS = list(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCHS}")
+    return REGISTRY[name]

@@ -1,0 +1,165 @@
+"""Cleaning priorities.
+
+Every policy is expressed as a *priority key* over segments; cleaning selects
+the ``k`` segments with the **smallest** key.  Keys are provided both as NumPy
+functions (simulator) and as pure-``jnp`` functions (jit/vmap-able, used by the
+on-device serving pool).  ``np`` and ``jnp`` twins are property-tested equal.
+
+Paper mapping
+-------------
+age           clean oldest seal time first                       (§2.2)
+greedy        clean emptiest first                               (§4.5)
+cost_benefit  LFS [23] benefit/cost = E*age/(2-E), largest first (§6.1.3)
+mdc           smallest declining-cost rate first (§4, §5.1.3):
+                  -dCost/du ∝ ((B-A)/A)^2 * 1/(C * (u_now - u_p2))
+mdc_opt       same, with the exact per-segment live update probability
+              replacing the (u_now - u_p2) estimate                (§6.1.3)
+
+For fixed-size pages, with E = empty fraction = (S-C)/S:
+  (B-A)/A == (1-E)/E == C/(S-C).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+try:  # jnp twins are optional at import time (simulator works without jax)
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jnp = None
+
+_INF = np.float64(np.inf)
+_EPS = 1e-12
+
+POLICIES = ("age", "greedy", "cost_benefit", "mdc", "mdc_opt")
+
+
+# ---------------------------------------------------------------------------
+# NumPy keys (smaller key == cleaned earlier)
+# ---------------------------------------------------------------------------
+
+def key_age(seal_time: np.ndarray, **_) -> np.ndarray:
+    return seal_time.astype(np.float64)
+
+
+def key_greedy(live: np.ndarray, S: int, **_) -> np.ndarray:
+    # emptiest first == fewest live pages first
+    return live.astype(np.float64)
+
+
+def key_cost_benefit(live: np.ndarray, S: int, seal_time: np.ndarray,
+                     u_now: float, **_) -> np.ndarray:
+    E = (S - live) / S
+    age = np.maximum(u_now - seal_time, 1.0)
+    benefit = E * age / (2.0 - E)
+    return -benefit  # largest benefit/cost first
+
+
+def key_mdc(live: np.ndarray, S: int, up2: np.ndarray, u_now: float, **_) -> np.ndarray:
+    """Declining-cost rate (paper §5.1.3), fixed-size pages; smallest first."""
+    C = live.astype(np.float64)
+    A = (S - C)  # free frames ∝ free bytes
+    interval = np.maximum(u_now - up2, 1.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        decline = np.where(A > 0, (C / np.maximum(A, _EPS)) ** 2 / (np.maximum(C, 1.0) * interval), _INF)
+    # Fully-empty segments (C == 0) have decline 0: reclaimed first, for free.
+    return np.where(C == 0, -1.0, decline)
+
+
+def key_mdc_bytes(live_bytes: np.ndarray, free_bytes: np.ndarray,
+                  n_chunks: np.ndarray, up2: np.ndarray,
+                  u_now: float) -> np.ndarray:
+    """Variable-size-page MDC (paper §4.4 / §5.1.3), smallest first.
+
+    -dCost/du ∝ ((B-A)/A)^2 · 1/(C·(u_now - u_p2)) with B-A = live bytes,
+    A = free (dead+unused) bytes, C = live chunk count.  Used by the
+    log-structured checkpoint store, whose "pages" (tensor chunks) differ in
+    size.
+    """
+    BA = live_bytes.astype(np.float64)
+    A = free_bytes.astype(np.float64)
+    C = np.maximum(n_chunks.astype(np.float64), 1.0)
+    interval = np.maximum(u_now - up2, 1.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        decline = np.where(A > 0, (BA / np.maximum(A, _EPS)) ** 2 / (C * interval), _INF)
+    return np.where(BA == 0, -1.0, decline)
+
+
+def key_mdc_opt(live: np.ndarray, S: int, seg_prob: np.ndarray, **_) -> np.ndarray:
+    """MDC with the oracle update rate: dE/du ∝ Σ_live p(page) (paper §6.1.3).
+
+    decline ∝ (1-E)/E^2 * U_seg * Δ_E  with  U_seg = Σ_live prob,
+    and (1-E) * Δ_E constant factors folded in:  key = U_seg / E^2 weighted by
+    the same ((B-A)/A)^2 / C shape as `key_mdc` (the two differ only in the
+    update-rate estimator).
+    """
+    C = live.astype(np.float64)
+    A = (S - C)
+    rate = np.maximum(seg_prob, 0.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        decline = np.where(A > 0, (C / np.maximum(A, _EPS)) ** 2 * rate / np.maximum(C, 1.0), _INF)
+    return np.where(C == 0, -1.0, decline)
+
+
+_KEYS = {
+    "age": key_age,
+    "greedy": key_greedy,
+    "cost_benefit": key_cost_benefit,
+    "mdc": key_mdc,
+    "mdc_opt": key_mdc_opt,
+}
+
+
+def select_victims(policy: str, k: int, *, live: np.ndarray, S: int,
+                   up2: np.ndarray, seal_time: np.ndarray, u_now: float,
+                   seg_prob: np.ndarray, eligible: np.ndarray) -> np.ndarray:
+    """Return up to ``k`` eligible segment ids with the smallest policy key."""
+    key = _KEYS[policy](live=live, S=S, up2=up2, seal_time=seal_time,
+                        u_now=u_now, seg_prob=seg_prob)
+    key = np.where(eligible, key, _INF)
+    # Never pick segments with zero reclaimable space (E == 0): cleaning them
+    # frees nothing (and MDC's decline is infinite there anyway).
+    key = np.where(live >= S, _INF, key)
+    n_ok = int((key < _INF).sum())
+    k = min(k, n_ok)
+    if k == 0:
+        return np.empty(0, dtype=np.int64)
+    idx = np.argpartition(key, k - 1)[:k]
+    return idx[np.argsort(key[idx])]
+
+
+# ---------------------------------------------------------------------------
+# jnp twins — used on-device by the serving pool (repro.serving.kvcache)
+# ---------------------------------------------------------------------------
+
+if jnp is not None:
+
+    def jnp_key_mdc(live, S, up2, u_now):
+        C = live.astype(jnp.float32)
+        A = S - C
+        interval = jnp.maximum(u_now - up2, 1.0)
+        decline = jnp.where(
+            A > 0,
+            (C / jnp.maximum(A, _EPS)) ** 2 / (jnp.maximum(C, 1.0) * interval),
+            jnp.inf,
+        )
+        return jnp.where(C == 0, -1.0, decline)
+
+    def jnp_key_greedy(live, S):
+        return live.astype(jnp.float32)
+
+    def jnp_key_cost_benefit(live, S, seal_time, u_now):
+        E = (S - live.astype(jnp.float32)) / S
+        age = jnp.maximum(u_now - seal_time, 1.0)
+        return -(E * age / (2.0 - E))
+
+    def jnp_select_victims(key, eligible, k: int):
+        """top-k smallest keys among eligible; returns (ids, valid_mask)."""
+        key = jnp.where(eligible, key, jnp.inf)
+        neg = -key
+        vals, ids = jax_top_k(neg, k)
+        return ids, jnp.isfinite(vals)
+
+    def jax_top_k(x, k):
+        import jax
+        return jax.lax.top_k(x, k)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMStream
+
+__all__ = ["SyntheticLMStream"]

@@ -1,0 +1,118 @@
+"""Logical-axis sharding rules → NamedSharding, divisibility-safe.
+
+Rules map each logical axis name to an ordered list of mesh-axis candidates
+(tuples are joint shardings, tried as a whole).  The resolver walks a
+tensor's dims left-to-right, assigns the first candidate whose mesh axes are
+(a) present in the mesh, (b) not already used by an earlier dim of the same
+tensor, and (c) divide the dim size.  Anything else falls back to replication
+instead of failing — this is what lets kv_heads=8 coexist with a 16-way model
+axis (the cache shards on seq instead; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# Preference-ordered candidates per logical axis.
+DEFAULT_RULES: dict[Any, list[tuple[str, ...]]] = {
+    "batch": [("pod", "data"), ("data",)],
+    "seq": [],                       # train/prefill activations: replicated
+    "seq_act": [("model",)],         # sequence-parallel residual activations
+    "seq_kv": [("model",)],          # decode KV cache shards its length
+    "vocab": [("model",)],
+    "embed": [("data",)],            # FSDP-style weight sharding
+    "heads": [("model",)],
+    # kv heads fall back to the data axis when "model" is taken — in
+    # long-context decode (batch=1) the batch can't use "data", and the KV
+    # cache is the footprint that matters (see EXPERIMENTS.md §Perf)
+    "kv": [("model",), ("data",)],
+    "head_dim": [],
+    "ff": [("model",)],
+    "experts": [("model",)],         # EP
+    "lora": [("model",)],
+    "layers": [],
+    "state": [],
+    None: [],
+}
+
+
+def resolve_spec(shape: tuple, axes: tuple, mesh: Mesh,
+                 rules: dict | None = None) -> PartitionSpec:
+    rules = rules or DEFAULT_RULES
+    used: set[str] = set()
+    parts = []
+    for size, ax in zip(shape, axes):
+        choice = None
+        for cand in rules.get(ax, ()):
+            ok = all(m in mesh.axis_names and m not in used for m in cand)
+            if not ok:
+                # try a suffix of a joint candidate, e.g. ("pod","data")->("data",)
+                continue
+            total = math.prod(mesh.shape[m] for m in cand)
+            if size % total == 0 and size > 0:
+                choice = cand
+                break
+        if choice:
+            used.update(choice)
+            parts.append(choice if len(choice) > 1 else choice[0])
+        else:
+            parts.append(None)
+    # strip trailing Nones (canonical form)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def _is_axes(x):
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(axes_tree, abstract_tree, mesh: Mesh, rules=None):
+    """logical-axes tree + ShapeDtypeStruct tree -> NamedSharding tree."""
+    def one(ax, ab):
+        return NamedSharding(mesh, resolve_spec(ab.shape, tuple(ax), mesh, rules))
+
+    return jax.tree.map(one, axes_tree, abstract_tree, is_leaf=_is_axes)
+
+
+def logical_constraint(x, axes: tuple, rules=None):
+    """with_sharding_constraint by *logical* axes, resolved against the mesh
+    active at trace time; no-op outside a mesh context (single-device tests).
+
+    Used to steer GSPMD where its operand-replication heuristics pick a
+    pathological protocol (e.g. all-gathering (B,S,V) logits in the unembed
+    backward instead of all-reducing the (V/mp, d) partial grad).
+    """
+    from jax.interpreters import pxla
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+    spec = resolve_spec(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_shards(spec: PartitionSpec, mesh: Mesh) -> int:
+    n = 1
+    for p in spec:
+        if p is None:
+            continue
+        for a in (p,) if isinstance(p, str) else p:
+            n *= mesh.shape[a]
+    return n
+
+
+def tree_bytes_per_device(axes_tree, abstract_tree, mesh: Mesh, rules=None) -> int:
+    """Per-device bytes of a sharded abstract tree (memory budgeting)."""
+    total = 0
+    specs = jax.tree.map(
+        lambda ax, ab: (ab, resolve_spec(ab.shape, tuple(ax), mesh, rules)),
+        axes_tree, abstract_tree, is_leaf=_is_axes)
+    for ab, sp in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple)
+                                  and len(x) == 2 and hasattr(x[0], "shape")):
+        n = math.prod(ab.shape) if ab.shape else 1
+        total += n * ab.dtype.itemsize // spec_shards(sp, mesh)
+    return total

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical data paths.
+
+flash_attention  — train/prefill attention (online softmax, causal skip)
+paged_attention  — decode over the log-structured KV slab pool
+segment_compact  — the paper's cleaner: block-table-driven slab evacuation
+mdc_priority     — fused §5.1.3 declining-cost key (+ top-k victim select)
+
+All validated against ref.py oracles in interpret mode (CPU); Mosaic-compiled
+on TPU.  See each module's docstring for BlockSpec/VMEM tiling rationale.
+"""
+
+from . import ops, ref
+from .ops import (flash_attention, mdc_priority, mdc_select_victims,
+                  paged_attention, segment_compact)
+
+__all__ = [
+    "ops", "ref", "flash_attention", "paged_attention", "segment_compact",
+    "mdc_priority", "mdc_select_victims",
+]

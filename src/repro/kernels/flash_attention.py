@@ -1,0 +1,135 @@
+"""Flash attention (train/prefill hot spot) as a Pallas TPU kernel.
+
+Tiling: grid (B, H, Sq/q_block, Skv/kv_block), kv innermost so the online-
+softmax state (m, l, acc) lives in VMEM scratch across kv iterations of one
+q block.  GQA is expressed in the k/v index maps (query head h reads kv head
+h // group_size), so no materialized head broadcast.  Causal q/kv block pairs
+that are entirely masked are skipped (`pl.when`), which halves the causal
+FLOPs exactly as the paper-agnostic flash schedule should.
+
+Block sizes default to 128 — MXU-aligned (128×128 systolic array) and a
+multiple of the f32 (8, 128) VMEM tile.  VMEM working set per grid step is
+  q_block·D (q) + 2·kv_block·D (k,v) + q_block·D (acc) + O(q_block)
+≈ 4·128·128·4 B ≈ 256 KiB at D=128 — comfortably inside the ~16 MiB budget,
+leaving room for the pipeline's double buffering.
+
+`ops.flash_attention` is the jit'd public wrapper (padding, head layout,
+interpret-mode auto-detect); `ref.flash_attention_ref` is the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               causal: bool, sq_valid: int, skv_valid: int, scale: float,
+               n_kv: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    qb = q_ref.shape[2]
+    kvb = k_ref.shape[2]
+    q_start = qi * qb
+    k_start = kj * kvb
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # A causal (qi, kj) pair computes only if some kv column is visible to
+    # some q row: k_start <= q_start + qb - 1.
+    live = (k_start < q_start + qb) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (qb, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (kvb, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (kvb, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (qb, kvb)
+
+        col = k_start + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 1)
+        mask = col < skv_valid                         # kv padding
+        if causal:
+            row = q_start + jax.lax.broadcasted_iota(jnp.int32, (qb, kvb), 0)
+            mask = mask & (col <= row)
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]                            # (qb, 1)
+        m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+        # fully-masked rows keep m == -inf; exp(-inf - -inf) guarded to 0
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.where(m_new == NEG_INF, 0.0, jnp.exp(logits - m_new))
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # Last kv block this q block will ever see (causal skip truncates the kv
+    # range) — write the normalized output exactly once.
+    last_kj = n_kv - 1
+    if causal:
+        last_kj = jnp.minimum(last_kj, (q_start + qb - 1) // kvb)
+
+    @pl.when(kj == last_kj)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_block", "kv_block", "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, q_block: int = 128,
+                         kv_block: int = 128, interpret: bool = True):
+    """Core entry: q (B, H, Sq, D); k/v (B, Kh, Skv, D); H % Kh == 0.
+
+    Sq/Skv need not be multiples of the block sizes (padded + masked here).
+    Returns (B, H, Sq, D) in q.dtype.
+    """
+    B, H, Sq, D = q.shape
+    _, Kh, Skv, _ = k.shape
+    assert H % Kh == 0, (H, Kh)
+    G = H // Kh
+    qb = min(q_block, max(8, Sq))
+    kvb = min(kv_block, max(8, Skv))
+    pq, pkv = (-Sq) % qb, (-Skv) % kvb
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    n_q, n_kv = (Sq + pq) // qb, (Skv + pkv) // kvb
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, sq_valid=Sq, skv_valid=Skv,
+        scale=1.0 / (D ** 0.5), n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, D), lambda b, h, qi, kj: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, kvb, D), lambda b, h, qi, kj: (b, h // G, kj, 0)),
+            pl.BlockSpec((1, 1, kvb, D), lambda b, h, qi, kj: (b, h // G, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, D), lambda b, h, qi, kj: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 1), jnp.float32),   # m — running row max
+            pltpu.VMEM((qb, 1), jnp.float32),   # l — running row sum
+            pltpu.VMEM((qb, D), jnp.float32),   # acc — unnormalized output
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,73 @@
+"""MDC cleaning-priority evaluation as a fused Pallas kernel.
+
+The paper's §5.1.3 declining-cost key, evaluated over the whole segment
+struct-of-arrays in one pass:
+
+    key = ((B-A)/A)^2 / (C · (u_now − u_p2))      (fixed-size pages)
+
+On a serving pod the pool holds tens of thousands of slabs and the key is
+re-evaluated every compaction cycle inside the decode loop — a host round
+trip would serialize against decode, so the key (and the top-k victim
+selection around it, via jax.lax.top_k in ops.py) stays on device.  This is
+the "per-segment heap becomes a vectorized VPU computation" adaptation from
+DESIGN.md §2: one elementwise pass over three f32 vectors, tiled (8, 128).
+
+Oracle: ref.mdc_priority_ref == repro.core.policies.key_mdc (numpy twin).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+_ROWS = 8
+
+
+def _priority_kernel(live_ref, up2_ref, unow_ref, o_ref, *, S: int):
+    C = live_ref[...].astype(jnp.float32)
+    A = jnp.float32(S) - C
+    interval = jnp.maximum(unow_ref[0, 0] - up2_ref[...], 1.0)
+    decline = jnp.where(
+        A > 0,
+        (C / jnp.maximum(A, 1e-12)) ** 2 / (jnp.maximum(C, 1.0) * interval),
+        jnp.inf,
+    )
+    o_ref[...] = jnp.where(C == 0, -1.0, decline)
+
+
+@functools.partial(jax.jit, static_argnames=("S", "block_rows", "interpret"))
+def mdc_priority(live, up2, u_now, *, S: int, block_rows: int = _ROWS,
+                 interpret: bool = True):
+    """live (N,) int/float, up2 (N,) float, u_now scalar → key (N,) f32.
+
+    N is padded to a (block_rows·128) multiple; padding returns +inf keys
+    (never selected).
+    """
+    (N,) = live.shape
+    tile = block_rows * _LANES
+    pad = (-N) % tile
+    livef = jnp.pad(live.astype(jnp.float32), (0, pad),
+                    constant_values=float(S))  # pad looks "full" ⇒ +inf key
+    up2f = jnp.pad(up2.astype(jnp.float32), (0, pad))
+    rows = (N + pad) // _LANES
+    livem = livef.reshape(rows, _LANES)
+    up2m = up2f.reshape(rows, _LANES)
+    unow = jnp.full((1, 1), u_now, jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_priority_kernel, S=S),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, _LANES), jnp.float32),
+        interpret=interpret,
+    )(livem, up2m, unow)
+    return out.reshape(-1)[:N]

@@ -1,0 +1,68 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Each op auto-selects interpret mode off-TPU (this container is CPU-only; on
+a real pod the compiled Mosaic kernel runs).  Layouts match the model code:
+attention tensors are (B, S, H, D) head-interleaved, the pool layouts match
+repro.serving.kvcache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .mdc_priority import mdc_priority as _mdc_priority
+from .paged_attention import paged_attention_bkgd
+from .segment_compact import segment_compact as _segment_compact
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
+                    kv_block: int = 128):
+    """q: (B, Sq, H, D); k/v: (B, Skv, Kh, D) → (B, Sq, H, D)."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, q_block=q_block,
+                               kv_block=kv_block, interpret=_interpret())
+    return jnp.swapaxes(out, 1, 2)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens):
+    """q: (B, H, D); pools: (num_pages, T, Kh, D); block_tables: (B, P);
+    seq_lens: (B,) → (B, H, D)."""
+    B, H, D = q.shape
+    Kh = k_pool.shape[2]
+    G = H // Kh
+    bt = jnp.clip(block_tables, 0, k_pool.shape[0] - 1).astype(jnp.int32)
+    out = paged_attention_bkgd(q.reshape(B, Kh, G, D), k_pool, v_pool, bt,
+                               seq_lens.astype(jnp.int32),
+                               interpret=_interpret())
+    return out.reshape(B, H, D)
+
+
+def segment_compact(pool, src_idx, *, tile: int = 8192):
+    """pool: (N, E); src_idx: (M,) → (M, E) relocated payloads."""
+    return _segment_compact(pool, src_idx.astype(jnp.int32), tile=tile,
+                            interpret=_interpret())
+
+
+def mdc_priority(live, up2, u_now, *, S: int):
+    """Fused §5.1.3 key over all segments → (N,) f32."""
+    return _mdc_priority(live, up2, u_now, S=S, interpret=_interpret())
+
+
+def mdc_select_victims(live, up2, u_now, *, S: int, k: int):
+    """Fused priority + on-device top-k victim selection.
+
+    Returns (ids (k,), valid (k,) bool) — invalid entries (nothing cleanable)
+    are masked False.  Stays entirely on device: no host sync in the serving
+    loop.
+    """
+    key = mdc_priority(live, up2, u_now, S=S)
+    neg, ids = jax.lax.top_k(-key, k)
+    return ids, jnp.isfinite(neg)

@@ -1,0 +1,103 @@
+"""Paged decode attention over the log-structured KV slab pool.
+
+This is the serving-side consumer of the paper's technique: sequences write
+KV blocks append-only into slabs; the MDC cleaner relocates live blocks and
+rewrites the block tables; this kernel reads through those tables.
+
+Tiling: grid (B, Kh, n_pages); the block table and sequence lengths ride in
+scalar-prefetch SMEM (`PrefetchScalarGridSpec`) so each grid step's k/v page
+fetch address is known *before* the step runs — the Pallas pipeline can then
+overlap the HBM→VMEM page pull with the previous page's compute, exactly the
+"overlap compaction/compute" property DESIGN.md §2 calls for.
+
+Per grid step the VMEM working set is one (T, D) K page + one V page + the
+(G, D) query group + (G, D) accumulator ≈ 2·T·D·2B + small — for T=64,
+D=128: ~33 KiB.  Pages beyond a sequence's length are skipped via pl.when
+(no compute, though the page fetch itself is pipelined regardless).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _pa_kernel(block_tables_ref, seq_lens_ref,   # scalar prefetch (SMEM)
+               q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               page_T: int, n_pages: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = seq_lens_ref[b]
+    valid_here = seq_len - j * page_T  # tokens of this page that are live
+
+    @pl.when(valid_here > 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (T, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (T, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, T)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(col < valid_here, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+        alpha = jnp.where(m_prev == NEG_INF, 0.0, jnp.exp(m_prev - m_new))
+        p = jnp.where(m_new == NEG_INF, 0.0, jnp.exp(logits - m_new))
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_bkgd(q, k_pool, v_pool, block_tables, seq_lens, *,
+                         interpret: bool = True):
+    """q: (B, Kh, G, D); k_pool/v_pool: (num_pages, T, Kh, D);
+    block_tables: (B, P) int32 (clamped to valid page ids by the caller);
+    seq_lens: (B,) int32.  Returns (B, Kh, G, D)."""
+    B, Kh, G, D = q.shape
+    _, T, _, _ = k_pool.shape
+    P = block_tables.shape[1]
+
+    kernel = functools.partial(_pa_kernel, page_T=T, n_pages=P,
+                               scale=1.0 / (D ** 0.5))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Kh, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, kh, j, bt, sl: (b, kh, 0, 0)),
+            pl.BlockSpec((1, T, 1, D), lambda b, kh, j, bt, sl: (bt[b, j], 0, kh, 0)),
+            pl.BlockSpec((1, T, 1, D), lambda b, kh, j, bt, sl: (bt[b, j], 0, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, kh, j, bt, sl: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kh, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, q, k_pool, v_pool)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are property-tested
+against (tests/test_kernels.py sweeps shapes × dtypes with assert_allclose).
+They are deliberately written in the most obvious O(S²)/gather form — clarity
+over speed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Naive softmax attention with GQA head-group broadcast.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Kh, D) with H % Kh == 0.
+    Returns (B, Sq, H, D) in q.dtype; softmax math in f32.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Kh, _ = k.shape
+    G = H // Kh
+    qg = q.reshape(B, Sq, Kh, G, D)
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens):
+    """Decode attention over a paged KV pool.
+
+    q: (B, H, D) — one query token per sequence.
+    k_pool/v_pool: (num_pages, T, Kh, D) — the log-structured slab pool.
+    block_tables: (B, P) int32 — physical page id of each logical page
+                  (entries beyond the sequence's pages may be arbitrary).
+    seq_lens: (B,) int32 — valid KV tokens per sequence.
+    Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    _, T, Kh, _ = k_pool.shape
+    P = block_tables.shape[1]
+    G = H // Kh
+
+    k_seq = k_pool[block_tables].reshape(B, P * T, Kh, D)
+    v_seq = v_pool[block_tables].reshape(B, P * T, Kh, D)
+    qg = q.reshape(B, Kh, G, D)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k_seq,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(D))
+    valid = jnp.arange(P * T)[None] < seq_lens[:, None]
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_seq.dtype), v_seq,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def segment_compact_ref(pool, src_idx):
+    """The cleaner's data path: relocate live blocks into fresh slabs.
+
+    pool: (N, E) block payloads; src_idx: (M,) int32 source block per
+    destination slot.  Returns (M, E) = pool[src_idx].
+    """
+    return pool[src_idx]
+
+
+def mdc_priority_ref(live, up2, u_now, S):
+    """Paper §5.1.3 declining-cost key, fixed-size pages (see core.policies).
+
+    live: (N,) live-page counts; up2: (N,) penultimate-update clocks;
+    u_now: scalar clock; S: pages per segment.  Smaller key = cleaned earlier.
+    """
+    C = live.astype(jnp.float32)
+    A = jnp.float32(S) - C
+    interval = jnp.maximum(jnp.float32(u_now) - up2.astype(jnp.float32), 1.0)
+    decline = jnp.where(
+        A > 0,
+        (C / jnp.maximum(A, 1e-12)) ** 2 / (jnp.maximum(C, 1.0) * interval),
+        jnp.inf,
+    )
+    return jnp.where(C == 0, -1.0, decline)

@@ -1,0 +1,62 @@
+"""Segment compaction — the paper's cleaning data path on TPU.
+
+"Read the segment, re-write its still-live pages" (paper §2) becomes, on a
+TPU HBM pool, a block-table-driven gather: for each destination slot of a
+fresh slab, pull the payload of one live source block.  The source plan is
+produced by the MDC victim selection (repro.serving.kvcache) and rides in
+scalar-prefetch SMEM, so the pipeline prefetches source block i+1's payload
+while block i is being written — the copy runs at HBM bandwidth, which is
+exactly the cost model the paper's Wamp metric prices (each moved byte is an
+HBM read + write stolen from decode).
+
+Grid: (M destination blocks, E/tile payload tiles).  Payload is treated as
+flat bytes-of-block reshaped (N, E); a (1, tile) VMEM window bounds the
+working set regardless of block payload size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compact_kernel(src_ref, pool_ref, out_ref):
+    del src_ref  # only used by the index maps
+    out_ref[...] = pool_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def segment_compact(pool, src_idx, *, tile: int = 8192,
+                    interpret: bool = True):
+    """pool: (N, E) block payloads; src_idx: (M,) int32.
+
+    Returns (M, E) == pool[src_idx], as a pipelined HBM gather-copy.
+    E is padded to a lane multiple (128) if needed.
+    """
+    N, E = pool.shape
+    (M,) = src_idx.shape
+    pad = (-E) % 128
+    if pad:
+        pool = jnp.pad(pool, ((0, 0), (0, pad)))
+    Ep = E + pad
+    t = min(tile, Ep)
+    # tile must divide the padded payload; fall back to one full-row window
+    if Ep % t:
+        t = Ep
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M, Ep // t),
+        in_specs=[pl.BlockSpec((1, t), lambda i, e, src: (src[i], e))],
+        out_specs=pl.BlockSpec((1, t), lambda i, e, src: (i, e)),
+    )
+    out = pl.pallas_call(
+        _compact_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, Ep), pool.dtype),
+        interpret=interpret,
+    )(src_idx, pool)
+    return out[:, :E]

@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax-importing module: jax locks the device count on
+# first init.  512 host devices stand in for 2 pods × 256 TPU v5e chips.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, get_config, skip_reason  # noqa: E402
+from repro.distributed.sharding import tree_bytes_per_device  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+from repro.models import Model  # noqa: E402
+from repro.roofline.hlo_cost import HloCost  # noqa: E402
+
+OUT_DEFAULT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def parse_overrides(pairs):
+    out = {}
+    for kv in pairs or ():
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        out[k] = v
+    return out
+
+
+def cell_id(arch, shape, mesh_kind, tag):
+    return f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             overrides: dict, tag: str = "", force: bool = False) -> dict:
+    mesh_kind = "multi" if multi_pod else "single"
+    cid = cell_id(arch, shape_name, mesh_kind, tag)
+    path = out_dir / f"{cid}.json"
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    cfg = get_config(arch).with_(**overrides) if overrides else get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "overrides": overrides, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch, "kind": shape.kind,
+    }
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = reason
+        path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rec["mesh_shape"] = dict(zip(mesh.axis_names, mesh.devices.shape))
+        t0 = time.time()
+        jitted, args = build_cell(cfg, shape, mesh)
+        with mesh:  # trace-time mesh context for logical_constraint
+            lowered = jitted.lower(*args)
+        rec["t_lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.time() - t0, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "peak_memory_in_bytes", "alias_size_in_bytes")
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                    if k in ("flops", "bytes accessed")}
+        t0 = time.time()
+        hc = HloCost(compiled.as_text()).summary()
+        rec["t_hlocost_s"] = round(time.time() - t0, 2)
+        rec["hlo_cost"] = hc
+
+        model = Model(cfg)
+        rec["n_params"] = model.n_params()
+        rec["n_active_params"] = model.n_active_params()
+        # analytic per-device steady-state bytes (TPU-side; the CPU backend
+        # upcasts bf16 weights to f32 which inflates memory_analysis)
+        from repro.optim import AdamW
+        p_abs = model.abstract()
+        pb = tree_bytes_per_device(model.axes(), p_abs, mesh)
+        rec["param_bytes_per_device"] = pb
+        if shape.kind == "train":
+            o_abs = AdamW().abstract_state(p_abs)
+            rec["opt_bytes_per_device"] = tree_bytes_per_device(
+                model.axes(), o_abs.mu, mesh) * 2
+        if shape.kind in ("decode", "prefill"):
+            c_abs, c_axes = model.cache_spec(shape.global_batch, shape.seq_len)
+            rec["cache_bytes_per_device"] = tree_bytes_per_device(c_axes, c_abs, mesh)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — a failed cell is a recorded result
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile "
+                                 "every (arch × shape × mesh) cell")
+    ap.add_argument("--arch", choices=ARCHS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", type=pathlib.Path, default=OUT_DEFAULT)
+    ap.add_argument("--set", nargs="*", metavar="KEY=VAL", dest="overrides",
+                    help="ModelConfig overrides (hillclimbing), e.g. remat=dots")
+    ap.add_argument("--tag", default="", help="suffix for override runs")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    args.out.mkdir(parents=True, exist_ok=True)
+    overrides = parse_overrides(args.overrides)
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    # cheapest cells first so early results stream out
+    def cost_key(cell):
+        a, s = cell
+        m = Model(get_config(a))
+        return m.n_params() * SHAPES[s].seq_len * SHAPES[s].global_batch
+
+    cells = sorted(((a, s) for a in archs for s in shapes), key=cost_key)
+    t_all = time.time()
+    for a, s in cells:
+        for mp in meshes:
+            t0 = time.time()
+            rec = run_cell(a, s, mp, args.out, overrides, args.tag, args.force)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                hc = rec["hlo_cost"]
+                extra = (f" flops/dev={hc['flops_per_device']:.3g}"
+                         f" coll={hc['total_collective_bytes']:.3g}B"
+                         f" peak={rec['memory_analysis']['peak_memory_in_bytes']/2**30:.2f}GiB"
+                         f" ({rec.get('t_lower_s', 0)}s lower,"
+                         f" {rec.get('t_compile_s', 0)}s compile)")
+            elif status == "error":
+                extra = " " + rec["error"][:120]
+            print(f"[{time.time()-t_all:7.1f}s] {cell_id(a, s, 'multi' if mp else 'single', args.tag):60s}"
+                  f" {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh builders.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — dryrun.py must set XLA_FLAGS before any jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod (TPU v5e-256); 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over however many (host) devices exist — used by tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,90 @@
+"""Step factories: build the jitted train/prefill/decode steps with their
+shardings for a (config × shape × mesh) cell.  Used by dryrun.py, train.py,
+and serve.py so all three lower the exact same computations."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..distributed.sharding import tree_shardings
+from ..models import Model, input_specs
+from ..models.layers import abstract_params
+from ..optim import AdamW
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def make_train_fn(model: Model, opt: AdamW):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_decode_fn(model: Model):
+    def serve_step(params, cache, token):
+        logits, cache = model.decode_step(params, cache, token)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    return serve_step
+
+
+def make_prefill_fn(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
+        logits, cache = model.prefill(params, batch["tokens"], max_len,
+                                      extras or None)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, opt: AdamW | None = None):
+    """Returns (jitted_fn, abstract_args) ready to .lower(*abstract_args)."""
+    model = Model(cfg)
+    p_abs = model.abstract()
+    p_shard = tree_shardings(model.axes(), p_abs, mesh)
+    in_specs, in_axes = input_specs(cfg, shape)
+    in_shard = tree_shardings(in_axes, in_specs, mesh)
+
+    if shape.kind == "train":
+        opt = opt or AdamW(lr=1e-4, weight_decay=0.1, clip_norm=1.0)
+        o_abs = opt.abstract_state(p_abs)
+        o_shard = type(o_abs)(replicated(mesh),
+                              tree_shardings(model.axes(), o_abs.mu, mesh),
+                              tree_shardings(model.axes(), o_abs.nu, mesh))
+        fn = make_train_fn(model, opt)
+        jitted = jax.jit(fn,
+                         in_shardings=(p_shard, o_shard, in_shard),
+                         out_shardings=(p_shard, o_shard, replicated(mesh)),
+                         donate_argnums=(0, 1))
+        return jitted, (p_abs, o_abs, in_specs)
+
+    B = shape.global_batch
+    out_tok_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    out_tok_shard = tree_shardings(("batch",), out_tok_abs, mesh)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_fn(model, max_len=shape.seq_len)
+        c_abs, c_axes = model.cache_spec(B, shape.seq_len)
+        c_shard = tree_shardings(c_axes, c_abs, mesh)
+        jitted = jax.jit(fn, in_shardings=(p_shard, in_shard),
+                         out_shardings=(out_tok_shard, c_shard))
+        return jitted, (p_abs, in_specs)
+
+    # decode
+    fn = make_decode_fn(model)
+    c_abs, c_axes = model.cache_spec(B, shape.seq_len)
+    c_shard = tree_shardings(c_axes, c_abs, mesh)
+    jitted = jax.jit(fn,
+                     in_shardings=(p_shard, c_shard, out_tok_shard),
+                     out_shardings=(out_tok_shard, c_shard),
+                     donate_argnums=(1,))
+    return jitted, (p_abs, c_abs, out_tok_abs)

@@ -1,0 +1,157 @@
+"""Training driver: data pipeline -> sharded train step -> log-structured
+checkpoints, with straggler detection, failure injection and restart/resume.
+
+CPU smoke scale by default (reduced configs); the exact same step/sharding
+code lowers for the production meshes in dryrun.py.  Every piece of state
+survives a mid-run failure: params+optimizer via the MDC checkpoint store,
+the data cursor by construction (batch = f(seed, step)).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --steps 30 --save-every 10 --fail-at 17
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..checkpoint import CheckpointManager
+from ..configs import ARCHS, get_config
+from ..data import SyntheticLMStream
+from ..distributed.fault import (FailureInjector, SimulatedFailure,
+                                 StragglerDetector, run_with_restarts)
+from ..distributed.sharding import tree_shardings
+from ..models import Model
+from ..optim import AdamW
+from ..optim.schedule import cosine_with_warmup
+from .steps import make_train_fn
+
+
+def make_host_mesh() -> Mesh:
+    """Mesh over whatever devices this host has (1 CPU here; the production
+    meshes live in mesh.py and are exercised by dryrun.py)."""
+    devs = np.array(jax.devices())
+    return Mesh(devs.reshape(len(devs), 1), ("data", "model"))
+
+
+def train(*, arch: str = "qwen3-1.7b", smoke: bool = True, steps: int = 30,
+          global_batch: int = 4, seq_len: int = 128, lr: float = 3e-4,
+          warmup: int = 10, ckpt_dir: str | None = None, save_every: int = 10,
+          keep_last: int = 3, fail_at: tuple = (), max_restarts: int = 3,
+          log_every: int = 5, seed: int = 0, ckpt_policy: str = "mdc",
+          verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    model = Model(cfg)
+    mesh = make_host_mesh()
+    opt = AdamW(lr=cosine_with_warmup(lr, warmup, steps), b2=0.95,
+                weight_decay=0.1, clip_norm=1.0)
+    train_step = jax.jit(make_train_fn(model, opt), donate_argnums=(0, 1))
+
+    manager = (CheckpointManager(ckpt_dir, keep_last=keep_last,
+                                 policy=ckpt_policy,
+                                 seg_bytes=1 << 20, chunk_bytes=64 << 10)
+               if ckpt_dir else None)
+    injector = FailureInjector(fail_at_steps=tuple(fail_at))
+    detector = StragglerDetector(threshold=4.0)
+    log: dict = {"loss": [], "restarts": 0, "resumed_from": []}
+
+    def make_state(attempt: int):
+        params = model.init(jax.random.PRNGKey(seed))
+        opt_state = opt.init(params)
+        start = 0
+        if manager is not None and manager.latest_step() is not None:
+            start = manager.latest_step()
+            template = {"params": params, "opt_state": opt_state}
+            axes = {"params": model.axes(),
+                    "opt_state": _opt_axes(model, opt_state)}
+            restored = manager.restore(template, start, mesh=mesh, axes=axes)
+            params, opt_state = restored["params"], restored["opt_state"]
+            log["resumed_from"].append(start)
+            if verbose:
+                print(f"[train] attempt {attempt}: resumed step {start}")
+        stream = SyntheticLMStream(
+            vocab_size=cfg.vocab_size, seq_len=seq_len,
+            global_batch=global_batch, seed=seed, start_step=start)
+        return dict(params=params, opt_state=opt_state, stream=stream,
+                    start=start)
+
+    def loop(state):
+        params, opt_state = state["params"], state["opt_state"]
+        stream = state["stream"]
+        tokens_per_step = global_batch * seq_len
+        for step in range(state["start"], steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+            try:
+                injector.check(step)
+            except SimulatedFailure:
+                stream.close()
+                log["restarts"] += 1
+                raise
+            params, opt_state, loss = train_step(params, opt_state, batch)
+            dt = time.time() - t0
+            detector.observe(step, dt)
+            log["loss"].append(float(loss))
+            if manager is not None and (step + 1) % save_every == 0:
+                manager.save(step + 1, {"params": params,
+                                        "opt_state": opt_state})
+                # flat save of both trees under one manifest
+            if verbose and (step % log_every == 0 or step == steps - 1):
+                print(f"[train] step {step:5d} loss {float(loss):8.4f} "
+                      f"{tokens_per_step/dt:9.0f} tok/s {dt*1e3:7.1f} ms")
+        stream.close()
+        if manager is not None:
+            manager.save(steps, {"params": params, "opt_state": opt_state})
+            manager.wait()
+        return dict(params=params, opt_state=opt_state,
+                    final_loss=log["loss"][-1])
+
+    result, rstats = run_with_restarts(make_state, loop,
+                                       max_restarts=max_restarts)
+    log["final_loss"] = result["final_loss"]
+    log["stragglers"] = detector.stragglers
+    if manager is not None:
+        log["ckpt_wamp"] = manager.wamp()
+        log["ckpt_stats"] = manager.stats()
+    log["params"] = result["params"]
+    return log
+
+
+def _opt_axes(model: Model, opt_state):
+    """Logical axes for the AdamW state (moments mirror param axes)."""
+    return type(opt_state)((), model.axes(), model.axes())
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS, default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=10)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    log = train(arch=args.arch, smoke=args.smoke, steps=args.steps,
+                global_batch=args.global_batch, seq_len=args.seq_len,
+                lr=args.lr, ckpt_dir=args.ckpt_dir,
+                save_every=args.save_every, fail_at=tuple(args.fail_at),
+                seed=args.seed)
+    print(f"[train] done: final loss {log['final_loss']:.4f}, "
+          f"restarts {log['restarts']}"
+          + (f", ckpt Wamp {log['ckpt_wamp']:.3f}" if "ckpt_wamp" in log else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .model import Model, input_specs  # noqa: F401
+from . import attention, layers, moe, ssm, transformer  # noqa: F401

@@ -1,0 +1,136 @@
+"""Primitive layers + parameter-spec machinery.
+
+Parameters are declared as ``Spec`` leaves (shape, dtype, logical axes, init
+scale).  The same spec tree serves three consumers:
+  * ``init_params``      — materialize real arrays (training/examples),
+  * ``abstract_params``  — ShapeDtypeStructs for the multi-pod dry-run,
+  * ``logical_axes``     — the sharding rules in repro.distributed.sharding.
+
+Logical axis vocabulary (resolved to mesh axes by distributed/sharding.py):
+  "embed"   — d_model                     "vocab"  — vocabulary
+  "heads"   — query heads                 "kv"     — kv heads
+  "head_dim"— per-head dim                "ff"     — mlp hidden
+  "experts" — MoE experts                 "layers" — stacked layer axis
+  "lora"    — MLA latent                  "state"  — SSM state
+  None      — replicated
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Spec(NamedTuple):
+    shape: tuple
+    dtype: Any
+    axes: tuple  # logical axis names, len == len(shape)
+    scale: float  # stddev for normal init; 0 ⇒ zeros; -1 ⇒ ones
+
+
+def spec(shape, axes, scale=None, dtype=jnp.bfloat16):
+    assert len(shape) == len(axes), (shape, axes)
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[-1] if len(shape) else 1)
+    return Spec(tuple(int(s) for s in shape), dtype, tuple(axes), float(scale))
+
+
+def norm_spec(dim, layers=None):
+    shape = (layers, dim) if layers else (dim,)
+    axes = ("layers", "embed") if layers else ("embed",)
+    return Spec(shape, jnp.float32, axes, -1.0)
+
+
+def is_spec(x):
+    return isinstance(x, Spec)
+
+
+def init_params(specs, key):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(s: Spec, k):
+        if s.scale == 0.0:
+            return jnp.zeros(s.shape, s.dtype)
+        if s.scale == -1.0:
+            return jnp.ones(s.shape, s.dtype)
+        return (jax.random.normal(k, s.shape, jnp.float32) * s.scale).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+                        is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+# ---------------------------------------------------------------- primitives
+
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_cos_sin(positions, dim, theta):
+    """positions: (...,) int; returns cos/sin of shape (..., dim//2), f32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., dim); rotate-half convention; cos/sin broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ w_down
+
+
+def sq_relu_mlp(x, w_up, w_down):
+    """Squared-ReLU MLP (nemotron-4)."""
+    h = jnp.square(jax.nn.relu((x @ w_up).astype(jnp.float32))).astype(x.dtype)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    h = jax.nn.gelu((x @ w_up + b_up).astype(jnp.float32)).astype(x.dtype)
+    return h @ w_down + b_down
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits (..., V) any float dtype; labels int; mean over unmasked.
+
+    The label pick is a masked reduction, NOT take_along_axis: a gather over
+    a vocab dim that is model-sharded forces GSPMD to all-gather the whole
+    (B, S, V) logits (hundreds of GB/step at 4k×256×150k vocab), while the
+    iota-mask reduce keeps every shard local and all-reduces only (B, S)
+    scalars.  The backward stays sharded too (d logits = softmax − mask).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab_pos = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_pos == labels[..., None], lf, 0.0), axis=-1)
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

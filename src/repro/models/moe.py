@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN: top-k routing, grouped sort-based dispatch.
+
+GShard-style grouping: tokens are split into ``moe_groups`` groups (the group
+axis shards over the data mesh axes), so the argsort / position-in-expert /
+scatter machinery is *group-local* — no cross-device sort.  The
+(groups, experts, capacity, d) dispatch buffer then moves from group-sharded
+to expert-sharded at the expert einsum, which GSPMD lowers to the EP
+all-to-all.  Dispatch state stays O(tokens·k), never O(tokens·experts).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import spec, swiglu
+
+
+def moe_specs(cfg, layers):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = {
+        "router": spec((layers, d, E), ("layers", "embed", "experts"),
+                       dtype=jnp.float32),
+        "w_gate": spec((layers, E, d, ff), ("layers", "experts", "embed", "ff")),
+        "w_up": spec((layers, E, d, ff), ("layers", "experts", "embed", "ff")),
+        "w_down": spec((layers, E, ff, d), ("layers", "experts", "ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        s["shared_gate"] = spec((layers, d, sff), ("layers", "embed", "ff"))
+        s["shared_up"] = spec((layers, d, sff), ("layers", "embed", "ff"))
+        s["shared_down"] = spec((layers, sff, d), ("layers", "ff", "embed"))
+    return s
+
+
+def _dispatch_group(xt, top_e, top_p, E, k, capacity):
+    """Group-local dispatch. xt: (T,d); top_e/top_p: (T,k).
+    Returns (gathered (E,capacity,d), combine metadata)."""
+    T, d = xt.shape
+    flat_e = top_e.reshape(-1)                 # (T·k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = top_p.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_tok, sw = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[se]
+    keep = pos < capacity
+    slot = jnp.where(keep, se * capacity + pos, E * capacity)
+    gathered = jnp.zeros((E * capacity + 1, d), xt.dtype).at[slot].set(xt[st_tok])
+    return gathered[:-1].reshape(E, capacity, d), (st_tok, slot, sw, keep)
+
+
+def _combine_group(y, meta, T):
+    """y: (E, capacity, d) expert outputs -> (T, d)."""
+    st_tok, slot, sw, keep = meta
+    E_cap, d = y.shape[0] * y.shape[1], y.shape[2]
+    yflat = y.reshape(E_cap, d)
+    contrib = jnp.where(keep, sw, 0.0)[:, None].astype(yflat.dtype)
+    slot_safe = jnp.minimum(slot, E_cap - 1)
+    return jnp.zeros((T, d), y.dtype).at[st_tok].add(yflat[slot_safe] * contrib)
+
+
+def moe_ffn(x, p, cfg, capacity_factor=1.25, moe_groups=32):
+    """x: (B, S, d) -> (B, S, d).  Dropping MoE with per-group capacity."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = math.gcd(T, moe_groups)
+    Tg = T // G
+    xg = x.reshape(G, Tg, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"][None]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)            # (G, Tg, E)
+    top_p, top_e = jax.lax.top_k(probs, k)             # (G, Tg, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ceil + clamp to [1, Tg]: capacity==Tg holds the worst case, so
+    # decode-sized groups and no-drop configs never drop.
+    capacity = min(Tg, max(1, math.ceil(Tg * k * capacity_factor / E)))
+
+    gathered, meta = jax.vmap(
+        lambda xt, te, tp: _dispatch_group(xt, te, tp, E, k, capacity)
+    )(xg, top_e, top_p)                                # (G, E, capacity, d)
+
+    # expert compute — E shards over "model" (EP): GSPMD inserts the
+    # all-to-all at this group-sharded -> expert-sharded boundary.
+    g = jnp.einsum("gecd,edf->gecf", gathered, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", gathered, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])   # (G, E, capacity, d)
+
+    out = jax.vmap(lambda yg, mg: _combine_group(yg, mg, Tg))(y, meta)
+    out = out.reshape(B, S, d)
+
+    if cfg.n_shared_experts:
+        xt = x.reshape(B * S, d)
+        out = out + swiglu(xt, p["shared_gate"], p["shared_up"],
+                           p["shared_down"]).reshape(B, S, d)
+    return out
+
+
+def aux_load_balance_loss(x, p, cfg):
+    """Switch-style auxiliary load-balance loss (used by the trainer)."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_e = jax.lax.top_k(probs, cfg.top_k)[1]
+    E = cfg.n_experts
+    frac_tokens = jnp.zeros(E).at[top_e.reshape(-1)].add(1.0) / (B * S * cfg.top_k)
+    frac_probs = probs.mean(axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs)

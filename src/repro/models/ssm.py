@@ -1,0 +1,214 @@
+"""Mamba2 / SSD (state-space duality) blocks  [arXiv:2405.21060].
+
+Chunked SSD forward for train/prefill (sub-quadratic: O(L·Q) intra-chunk +
+O(L/Q) inter-chunk scan) and an O(1)-per-token recurrent decode step — this is
+what makes the ``long_500k`` cells runnable for mamba2/zamba2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm, spec
+
+CONV_K = 4  # depthwise causal conv width
+
+
+def ssm_specs(cfg, layers):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    # Separate projections per stream (z, x, BC, dt) instead of one fused
+    # [z|x|B|C|dt] matrix: a fused 2·di+2N+H output dim shards on boundaries
+    # that misalign with the stream split points, and GSPMD then lowers every
+    # stream slice as a collective-permute *inside the layer scan* (measured:
+    # ~1 TB/step of permutes on mamba2 train_4k — EXPERIMENTS.md §Perf).
+    # Same parameter count, same math; slicing is now shard-aligned.
+    return {
+        "in_z": spec((layers, d, di), ("layers", "embed", "ff")),
+        "in_x": spec((layers, d, di), ("layers", "embed", "ff")),
+        "in_bc": spec((layers, d, 2 * N), ("layers", "embed", "ff")),
+        "in_dt": spec((layers, d, H), ("layers", "embed", "heads")),
+        "conv_x": spec((layers, CONV_K, di), ("layers", None, "ff"),
+                       scale=0.5),
+        "conv_bc": spec((layers, CONV_K, 2 * N), ("layers", None, "ff"),
+                        scale=0.5),
+        "A_log": spec((layers, H), ("layers", "heads"), scale=0.0,
+                      dtype=jnp.float32),
+        "dt_bias": spec((layers, H), ("layers", "heads"), scale=0.0,
+                        dtype=jnp.float32),
+        "D": spec((layers, H), ("layers", "heads"), scale=-1.0,
+                  dtype=jnp.float32),
+        "gate_norm": spec((layers, di), ("layers", "ff"), scale=-1.0,
+                          dtype=jnp.float32),
+        "out_proj": spec((layers, di, d), ("layers", "ff", "embed")),
+    }
+
+
+def _project(x, p):
+    """Per-stream input projections; each output is independently sharded.
+
+    The d_model (contraction) dim of each weight is FSDP-sharded over the
+    data axis; left alone, GSPMD computes partial products and all-reduces
+    the *activations* (B·L·di bytes per layer per direction).  Gathering the
+    weight instead (ZeRO-3 semantics: ~35 MB/layer vs ~500 MB of activation
+    all-reduce) is strictly cheaper — the constraints below pin that choice.
+    """
+    from ..distributed.sharding import logical_constraint as lc
+    z = x @ lc(p["in_z"], (None, "ff"))
+    xi = x @ lc(p["in_x"], (None, "ff"))
+    bc = x @ lc(p["in_bc"], (None, "ff"))
+    dt = x @ lc(p["in_dt"], (None, "heads"))
+    return z, xi, bc, dt
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv, kernel CONV_K. u: (B,L,C); w: (K,C)."""
+    pads = [jnp.pad(u, ((0, 0), (CONV_K - 1 - i, 0), (0, 0)))[:, : u.shape[1], :]
+            for i in range(CONV_K)]
+    out = sum(pads[i] * w[CONV_K - 1 - i] for i in range(CONV_K))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype)
+
+
+def _segsum(a):
+    """a: (..., Q). Returns (..., Q, Q) with S[i,j] = sum_{j<m<=i} a[m] on the
+    lower triangle, -inf above."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh, dt, A, Bm, Cm, chunk):
+    """Chunked SSD. xh: (B,L,H,P); dt: (B,L,H) (post-softplus); A: (H,) (<0);
+    Bm/Cm: (B,L,N) single group. Returns y: (B,L,H,P) and final state
+    (B,H,P,N)."""
+    Bsz, L, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0
+    C_ = L // Q
+
+    xc = xh.reshape(Bsz, C_, Q, H, Pd)
+    dtc = dt.reshape(Bsz, C_, Q, H)
+    Bc = Bm.reshape(Bsz, C_, Q, N)
+    Cc = Cm.reshape(Bsz, C_, Q, N)
+
+    a = dtc * A  # (B,C,Q,H) log-decay per step
+    a_hqt = jnp.moveaxis(a, -1, 2)  # (B,C,H,Q)
+
+    # intra-chunk (diagonal blocks): attention-like with decay kernel
+    Lmat = jnp.exp(_segsum(a_hqt))  # (B,C,H,Q,Q)
+    dtx = xc * dtc[..., None]  # (B,C,Q,H,P)
+    y_diag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp", Cc, Bc, Lmat, dtx)
+
+    # chunk states: decay from position q to end of chunk = exp(sum_{m>q} a_m)
+    a_sum = a_hqt.sum(axis=-1)  # (B,C,H)
+    rev = jnp.exp(a_sum[..., None] - a_hqt.cumsum(axis=-1))  # (B,C,H,Q)
+    states = jnp.einsum("bcqn,bchq,bcqhp->bchpn", Bc, rev, dtx)  # (B,C,H,P,N)
+
+    # inter-chunk recurrence
+    def step(s, inp):
+        st_c, a_c = inp
+        s_new = s * jnp.exp(a_c)[:, :, None, None] + st_c
+        return s_new, s
+
+    s0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    states_f = states.astype(jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states_f, 1, 0), jnp.moveaxis(a_sum, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,C,H,P,N) state before chunk
+
+    # off-diagonal: contribution of carried-in state
+    decay_in = jnp.exp(a_hqt.cumsum(axis=-1))  # decay from chunk start to q
+    y_off = jnp.einsum("bcqn,bchq,bchpn->bcqhp", Cc, decay_in,
+                       prev_states.astype(Cc.dtype))
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, Pd)
+    return y, final
+
+
+def mamba2_seq(x, p, cfg, return_state=False):
+    """Full-sequence Mamba2 block. x: (B,L,d) -> (B,L,d)."""
+    B, L, d = x.shape
+    di = cfg.ssm_expand * d
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    Pd = di // H
+
+    z, xi_pre, bc_pre, dt = _project(x, p)
+    xi = _causal_conv(xi_pre, p["conv_x"])
+    bc = _causal_conv(bc_pre, p["conv_bc"])
+    Bm, Cm = bc[..., :N], bc[..., N:]  # shard-aligned midpoint split
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, L, H, Pd)
+
+    # pad ragged L to a chunk multiple; masked dt ⇒ padded steps are identity
+    pad = (-L) % min(cfg.ssm_chunk, L) if L % min(cfg.ssm_chunk, L) else 0
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_scan(xh, dt, A, Bm.astype(jnp.float32),
+                        Cm.astype(jnp.float32), cfg.ssm_chunk)
+    y = (y + xh.astype(jnp.float32) * p["D"][None, None, :, None])[:, :L]
+    y = y.reshape(B, L, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["gate_norm"])
+    from ..distributed.sharding import logical_constraint as lc
+    # row-parallel out_proj: gather the FSDP (output-dim) shard of the
+    # weight; the single Megatron-style AR over "model" remains
+    out = y @ lc(p["out_proj"], ("ff", None))
+    if return_state:
+        # decode continuation needs (ssm state, last CONV_K-1 pre-conv inputs)
+        conv_buf = (xi_pre[:, -(CONV_K - 1):, :], bc_pre[:, -(CONV_K - 1):, :])
+        return out, state, conv_buf
+    return out
+
+
+def _conv_step(window, w, x_dtype):
+    """One causal-conv output given the (B, K, C) rolling window.
+
+    window[:, K-1-m] is the input m steps ago; the seq path weights the
+    m-steps-ago input with w[m]."""
+    out = sum(window[:, CONV_K - 1 - m] * w[m] for m in range(CONV_K))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x_dtype)
+
+
+def mamba2_decode(x, p, cfg, state, conv_buf):
+    """One-token recurrent step.
+
+    x: (B,1,d); state: (B,H,P,N) f32; conv_buf: pair of rolling pre-conv
+    windows ((B,CONV_K-1,di), (B,CONV_K-1,2N)).  Returns
+    (out, new_state, new_conv_buf).
+    """
+    B = x.shape[0]
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    Pd = di // H
+
+    z, xi_new, bc_new, dt = _project(x, p)
+    buf_x, buf_bc = conv_buf
+    win_x = jnp.concatenate([buf_x, xi_new[:, 0][:, None]], axis=1)
+    win_bc = jnp.concatenate([buf_bc, bc_new[:, 0][:, None]], axis=1)
+    xi = _conv_step(win_x, p["conv_x"], x.dtype)
+    bc = _conv_step(win_bc, p["conv_bc"], x.dtype).astype(jnp.float32)
+    Bm, Cm = bc[:, :N], bc[:, N:]
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # (B,H)
+    xh = xi.reshape(B, H, Pd).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, xh)
+    state = state * decay[:, :, None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                p["gate_norm"])
+    return y @ p["out_proj"], state, (win_x[:, 1:], win_bc[:, 1:])

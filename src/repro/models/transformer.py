@@ -1,0 +1,516 @@
+"""Model assembly: parameter specs, scan-over-layers forward passes, caches.
+
+One generic implementation parameterized by ModelConfig.family:
+  dense    — [opt. GQA] attention + MLP                (qwen3, granite, yi,
+                                                        nemotron, internvl2)
+  moe      — GQA attention + top-k MoE                 (qwen3-moe)
+  mla_moe  — DeepSeek MLA + (shared+routed) MoE        (deepseek-v2-lite)
+  ssm      — Mamba2/SSD                                (mamba2-1.3b)
+  hybrid   — Mamba2 backbone + weight-tied shared attention block every
+             `attn_period` layers                      (zamba2-7b)
+  encdec   — encoder (non-causal) + decoder (causal + cross)  (whisper)
+
+All stacks scan over layers (stacked params, leading "layers" axis) so the
+HLO stays compact enough to partition for 512 devices on one CPU host.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as att
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (norm_spec, rmsnorm, spec, sq_relu_mlp, swiglu)
+
+VISION_DIM = 1024  # stub vision-frontend embedding width (internvl2)
+
+
+# ------------------------------------------------------------------- specs
+
+def mlp_specs(cfg, layers):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act == "sq_relu":
+        return {
+            "w_up": spec((layers, d, ff), ("layers", "embed", "ff")),
+            "w_down": spec((layers, ff, d), ("layers", "ff", "embed")),
+        }
+    return {
+        "w_gate": spec((layers, d, ff), ("layers", "embed", "ff")),
+        "w_up": spec((layers, d, ff), ("layers", "embed", "ff")),
+        "w_down": spec((layers, ff, d), ("layers", "ff", "embed")),
+    }
+
+
+def _mlp(x, p, cfg):
+    if cfg.mlp_act == "sq_relu":
+        return sq_relu_mlp(x, p["w_up"], p["w_down"])
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def model_specs(cfg):
+    d, V, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    s = {
+        "embed": spec((V, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": norm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = spec((d, V), ("embed", "vocab"),
+                            scale=1.0 / math.sqrt(d))
+    if cfg.n_patches:
+        s["vision_proj"] = spec((VISION_DIM, d), (None, "embed"))
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        s["blocks"] = {
+            "ln1": norm_spec(d, L), "ln2": norm_spec(d, L),
+            "attn": att.attn_specs(cfg, L),
+            "mlp": (moe_mod.moe_specs(cfg, L) if fam == "moe"
+                    else mlp_specs(cfg, L)),
+        }
+    elif fam == "mla_moe":
+        s["blocks"] = {
+            "ln1": norm_spec(d, L), "ln2": norm_spec(d, L),
+            "attn": att.mla_specs(cfg, L),
+            "mlp": moe_mod.moe_specs(cfg, L),
+        }
+    elif fam == "ssm":
+        s["blocks"] = {"ln": norm_spec(d, L), "ssm": ssm_mod.ssm_specs(cfg, L)}
+    elif fam == "hybrid":
+        s["blocks"] = {"ln": norm_spec(d, L), "ssm": ssm_mod.ssm_specs(cfg, L)}
+        s["shared_attn"] = {
+            "ln1": norm_spec(d, 1), "ln2": norm_spec(d, 1),
+            "attn": att.attn_specs(cfg, 1),
+            "mlp": mlp_specs(cfg, 1),
+        }
+    elif fam == "encdec":
+        Le = cfg.n_enc_layers
+        s["enc_blocks"] = {
+            "ln1": norm_spec(d, Le), "ln2": norm_spec(d, Le),
+            "attn": att.attn_specs(cfg, Le),
+            "mlp": mlp_specs(cfg, Le),
+        }
+        s["blocks"] = {
+            "ln1": norm_spec(d, L), "ln2": norm_spec(d, L), "ln3": norm_spec(d, L),
+            "attn": att.attn_specs(cfg, L),
+            "cross": att.attn_specs(cfg, L),
+            "mlp": mlp_specs(cfg, L),
+        }
+    else:
+        raise ValueError(fam)
+    return s
+
+
+# ------------------------------------------------------- remat policy
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat)
+
+
+# --------------------------------------------------------------- forwards
+
+def _embed(params, tokens, cfg, extras):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_patches and extras is not None and "patches" in extras:
+        vis = extras["patches"] @ params["vision_proj"]
+        x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _unembed(params, x, cfg):
+    from ..distributed.sharding import logical_constraint
+    x = rmsnorm(x, params["final_norm"])
+    # Gather the unembed weight's d_model (FSDP) shard before the matmul:
+    # contracting over a data-sharded d would partial-sum and then all-reduce
+    # the full f32 (B, S, V) logits over the data axis (tens of GB/step);
+    # gathering the weight is d·V/16 bytes instead.  The logits constraint
+    # pins (batch→data, vocab→model) so the backward stays sharded too.
+    # (Both are no-ops outside a mesh context, e.g. single-device tests.)
+    if cfg.tie_embeddings:
+        w = logical_constraint(params["embed"], ("vocab", None))
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        w = logical_constraint(params["lm_head"], (None, "vocab"))
+        logits = x @ w
+    return logical_constraint(logits, ("batch", "seq", "vocab"))
+
+
+def _sp(x):
+    """Sequence-parallel residual stream (see _ssm_block / EXPERIMENTS §Perf):
+    shards the between-block seq dim over "model" so per-layer partial-sum
+    all-reduces lower as reduce-scatters and replicated elementwise work
+    shards 16x."""
+    from ..distributed.sharding import logical_constraint
+    return logical_constraint(x, ("batch", "seq_act", None))
+
+
+def _dense_block(x, lp, cfg):
+    x = _sp(x)
+    x = x + att.gqa_train(rmsnorm(x, lp["ln1"]), lp["attn"], cfg, causal=True)
+    x = x + _block_mlp(rmsnorm(x, lp["ln2"]), lp["mlp"], cfg)
+    return x
+
+
+def _block_mlp(h, p, cfg):
+    if cfg.family in ("moe", "mla_moe"):
+        return moe_mod.moe_ffn(h, p, cfg, cfg.capacity_factor, cfg.moe_groups)
+    return _mlp(h, p, cfg)
+
+
+def _mla_block(x, lp, cfg):
+    x = _sp(x)
+    x = x + att.mla_train(rmsnorm(x, lp["ln1"]), lp["attn"], cfg)
+    x = x + _block_mlp(rmsnorm(x, lp["ln2"]), lp["mlp"], cfg)
+    return x
+
+
+def _ssm_block(x, lp, cfg):
+    # sequence parallelism: the residual stream between blocks shards its
+    # seq dim over "model", so the out_proj partial-sum lowers as a
+    # reduce-scatter (half the bytes of the Megatron all-reduce) and the
+    # block input re-gathers via all-to-all at the projections
+    x = _sp(x)
+    return x + ssm_mod.mamba2_seq(rmsnorm(x, lp["ln"]), lp["ssm"], cfg)
+
+
+def _shared_attn_block(x, sp, cfg):
+    """Zamba2's weight-tied attention(+MLP) block (params have a leading
+    1-sized layers axis)."""
+    sq = jax.tree.map(lambda a: a[0], sp)
+    x = x + att.gqa_train(rmsnorm(x, sq["ln1"]), sq["attn"], cfg, causal=True)
+    x = x + _mlp(rmsnorm(x, sq["ln2"]), sq["mlp"], cfg)
+    return x
+
+
+def _hybrid_split(cfg):
+    """81 layers, shared attn after each group of `attn_period` ⇒ (groups, tail)."""
+    g = cfg.attn_period
+    n_groups = cfg.n_layers // g
+    tail = cfg.n_layers - n_groups * g
+    return n_groups, g, tail
+
+
+def forward(params, tokens, cfg, extras=None):
+    """Training/scoring forward: tokens (B, S) -> logits (B, S[, +patches], V)."""
+    x = _embed(params, tokens, cfg, extras)
+
+    if cfg.family in ("dense", "moe", "mla_moe"):
+        block = {"dense": _dense_block, "moe": _dense_block,
+                 "mla_moe": _mla_block}[cfg.family]
+        step = _maybe_remat(lambda h, lp: (block(h, lp, cfg), None), cfg)
+        x, _ = jax.lax.scan(step, x, params["blocks"])
+
+    elif cfg.family == "ssm":
+        step = _maybe_remat(lambda h, lp: (_ssm_block(h, lp, cfg), None), cfg)
+        x, _ = jax.lax.scan(step, x, params["blocks"])
+
+    elif cfg.family == "hybrid":
+        n_groups, g, tail = _hybrid_split(cfg)
+        head = jax.tree.map(lambda a: a[: n_groups * g].reshape(n_groups, g, *a.shape[1:]),
+                            params["blocks"])
+        inner = _maybe_remat(lambda h, lp: (_ssm_block(h, lp, cfg), None), cfg)
+
+        def group_step(h, gp):
+            h, _ = jax.lax.scan(inner, h, gp)
+            h = _shared_attn_block(h, params["shared_attn"], cfg)
+            return h, None
+
+        x, _ = jax.lax.scan(group_step, x, head)
+        if tail:
+            tail_p = jax.tree.map(lambda a: a[n_groups * g:], params["blocks"])
+            x, _ = jax.lax.scan(inner, x, tail_p)
+
+    elif cfg.family == "encdec":
+        assert extras is not None and "frames" in extras
+        xe = extras["frames"].astype(x.dtype)
+
+        def enc_step(h, lp):
+            h = h + att.gqa_train(rmsnorm(h, lp["ln1"]), lp["attn"], cfg,
+                                  causal=False)
+            h = h + _mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+            return h, None
+
+        xe, _ = jax.lax.scan(_maybe_remat(enc_step, cfg), xe, params["enc_blocks"])
+
+        def dec_step(h, lp):
+            h = h + att.gqa_train(rmsnorm(h, lp["ln1"]), lp["attn"], cfg,
+                                  causal=True)
+            h = h + att.gqa_cross(rmsnorm(h, lp["ln2"]), lp["cross"],
+                                  att.cross_kv(xe, lp["cross"]), cfg)
+            h = h + _mlp(rmsnorm(h, lp["ln3"]), lp["mlp"], cfg)
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(dec_step, cfg), x, params["blocks"])
+    else:
+        raise ValueError(cfg.family)
+
+    return _unembed(params, x, cfg)
+
+
+# ------------------------------------------------------------- decode path
+
+def cache_spec(cfg, batch, max_len, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree + logical axes for the decode cache."""
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    di = cfg.ssm_expand * cfg.d_model
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    kv_axes = ("layers", "batch", "seq_kv", "kv", "head_dim")
+    specs, axes = {}, {}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        specs["k"] = sds((L, batch, max_len, K, hd), dtype)
+        specs["v"] = sds((L, batch, max_len, K, hd), dtype)
+        axes["k"] = axes["v"] = kv_axes
+    elif fam == "mla_moe":
+        specs["c"] = sds((L, batch, max_len, cfg.kv_lora_rank), dtype)
+        specs["r"] = sds((L, batch, max_len, cfg.qk_rope_dim), dtype)
+        axes["c"] = ("layers", "batch", "seq_kv", "lora")
+        axes["r"] = ("layers", "batch", "seq_kv", None)
+    elif fam in ("ssm", "hybrid"):
+        specs["state"] = sds((L, batch, H, P, N), jnp.float32)
+        specs["conv_x"] = sds((L, batch, ssm_mod.CONV_K - 1, di), dtype)
+        specs["conv_bc"] = sds((L, batch, ssm_mod.CONV_K - 1, 2 * N), dtype)
+        axes["state"] = ("layers", "batch", "heads", None, None)
+        axes["conv_x"] = axes["conv_bc"] = ("layers", "batch", None, "ff")
+        if fam == "hybrid":
+            n_groups, _, _ = _hybrid_split(cfg)
+            specs["k"] = sds((n_groups, batch, max_len, K, hd), dtype)
+            specs["v"] = sds((n_groups, batch, max_len, K, hd), dtype)
+            axes["k"] = axes["v"] = kv_axes
+    elif fam == "encdec":
+        specs["k"] = sds((L, batch, max_len, K, hd), dtype)
+        specs["v"] = sds((L, batch, max_len, K, hd), dtype)
+        specs["xk"] = sds((L, batch, cfg.n_frames, K, hd), dtype)
+        specs["xv"] = sds((L, batch, cfg.n_frames, K, hd), dtype)
+        axes["k"] = axes["v"] = axes["xk"] = axes["xv"] = kv_axes
+    specs["cur_len"] = sds((batch,), jnp.int32)
+    axes["cur_len"] = ("batch",)
+    return specs, axes
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    specs, _ = cache_spec(cfg, batch, max_len, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+
+def decode_step(params, cache, token, cfg, extras=None):
+    """One greedy decode step.  token: (B,) int32 (the *current* token);
+    returns (logits (B, V), new_cache)."""
+    B = token.shape[0]
+    cur = cache["cur_len"]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        def step(h, xs):
+            lp, ck, cv = xs
+            a, ck, cv = att.gqa_decode(rmsnorm(h, lp["ln1"]), lp["attn"], cfg,
+                                       ck, cv, cur)
+            h = h + a
+            h = h + _block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+            return h, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(step, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=nk, v=nv)
+
+    elif fam == "mla_moe":
+        def step(h, xs):
+            lp, cc, cr = xs
+            a, cc, cr = att.mla_decode(rmsnorm(h, lp["ln1"]), lp["attn"], cfg,
+                                       cc, cr, cur)
+            h = h + a
+            h = h + _block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+            return h, (cc, cr)
+
+        x, (nc, nr) = jax.lax.scan(step, x, (params["blocks"], cache["c"], cache["r"]))
+        cache = dict(cache, c=nc, r=nr)
+
+    elif fam in ("ssm", "hybrid"):
+        def ssm_step(h, xs):
+            lp, stt, cbx, cbbc = xs
+            y, stt, (cbx, cbbc) = ssm_mod.mamba2_decode(
+                rmsnorm(h, lp["ln"]), lp["ssm"], cfg, stt, (cbx, cbbc))
+            return h + y, (stt, cbx, cbbc)
+
+        if fam == "ssm":
+            x, (ns, ncx, ncbc) = jax.lax.scan(
+                ssm_step, x, (params["blocks"], cache["state"],
+                              cache["conv_x"], cache["conv_bc"]))
+            cache = dict(cache, state=ns, conv_x=ncx, conv_bc=ncbc)
+        else:
+            n_groups, g, tail = _hybrid_split(cfg)
+            resh = lambda a: a[: n_groups * g].reshape(n_groups, g, *a.shape[1:])
+            head_p = jax.tree.map(resh, params["blocks"])
+            head_s = resh(cache["state"])
+            head_cx, head_cbc = resh(cache["conv_x"]), resh(cache["conv_bc"])
+
+            def group_step(h, xs):
+                gp, gs, gcx, gcbc, ck, cv = xs
+                h, (gs, gcx, gcbc) = jax.lax.scan(ssm_step, h,
+                                                  (gp, gs, gcx, gcbc))
+                sq = jax.tree.map(lambda a: a[0], params["shared_attn"])
+                a, ck, cv = att.gqa_decode(rmsnorm(h, sq["ln1"]), sq["attn"],
+                                           cfg, ck, cv, cur)
+                h = h + a
+                h = h + _mlp(rmsnorm(h, sq["ln2"]), sq["mlp"], cfg)
+                return h, (gs, gcx, gcbc, ck, cv)
+
+            x, (gs, gcx, gcbc, nk, nv) = jax.lax.scan(
+                group_step, x, (head_p, head_s, head_cx, head_cbc,
+                                cache["k"], cache["v"]))
+            unresh = lambda a: a.reshape(n_groups * g, *a.shape[2:])
+            new_state, new_cx, new_cbc = unresh(gs), unresh(gcx), unresh(gcbc)
+            if tail:
+                tail_p = jax.tree.map(lambda a: a[n_groups * g:], params["blocks"])
+                x, (ts, tcx, tcbc) = jax.lax.scan(
+                    ssm_step, x,
+                    (tail_p, cache["state"][n_groups * g:],
+                     cache["conv_x"][n_groups * g:],
+                     cache["conv_bc"][n_groups * g:]))
+                new_state = jnp.concatenate([new_state, ts])
+                new_cx = jnp.concatenate([new_cx, tcx])
+                new_cbc = jnp.concatenate([new_cbc, tcbc])
+            cache = dict(cache, state=new_state, conv_x=new_cx,
+                         conv_bc=new_cbc, k=nk, v=nv)
+
+    elif fam == "encdec":
+        def step(h, xs):
+            lp, ck, cv, xk, xv = xs
+            a, ck, cv = att.gqa_decode(rmsnorm(h, lp["ln1"]), lp["attn"], cfg,
+                                       ck, cv, cur)
+            h = h + a
+            c = att.decode_attention(
+                jnp.einsum("bsd,dhe->bshe", rmsnorm(h, lp["ln2"]), lp["cross"]["wq"]),
+                xk, xv, jnp.full((B,), xk.shape[1], jnp.int32))
+            h = h + jnp.einsum("bshe,hed->bsd", c, lp["cross"]["wo"])
+            h = h + _mlp(rmsnorm(h, lp["ln3"]), lp["mlp"], cfg)
+            return h, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(
+            step, x, (params["blocks"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        cache = dict(cache, k=nk, v=nv)
+    else:
+        raise ValueError(fam)
+
+    logits = _unembed(params, x, cfg)[:, 0]
+    cache = dict(cache, cur_len=cur + 1)
+    return logits, cache
+
+
+def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16):
+    """Run the full prompt, return (last-position logits, populated cache).
+
+    Implemented as forward + cache extraction for attention families; SSM
+    families return their recurrent states.  (The serving engine uses the
+    paged pool instead; this dense-cache path is what the dry-run lowers.)
+    """
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len, cache_dtype)
+    x = _embed(params, tokens, cfg, extras)
+    fam = cfg.family
+
+    def pad_kv(k):  # (B,S,K,hd) -> (B,max_len,K,hd)
+        return jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0))).astype(cache_dtype)
+
+    # NB: no _sp() here — seq-sharding the prefill residual stream fights the
+    # cache outputs' seq_kv→model sharding and GSPMD responds with full
+    # rematerialization (~10× flops, measured; EXPERIMENTS.md §Perf iter 6).
+    if fam in ("dense", "moe"):
+        def step(h, lp):
+            a, (k, v) = att.gqa_prefill(rmsnorm(h, lp["ln1"]), lp["attn"], cfg)
+            h = h + a
+            h = h + _block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+            return h, (pad_kv(k), pad_kv(v))
+
+        x, (ks, vs) = jax.lax.scan(step, x, params["blocks"])
+        cache.update(k=ks, v=vs)
+    elif fam == "mla_moe":
+        def step(h, lp):
+            a, (c, r) = att.mla_prefill(rmsnorm(h, lp["ln1"]), lp["attn"], cfg)
+            h = h + a
+            h = h + _block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+            pc = jnp.pad(c, ((0, 0), (0, max_len - S), (0, 0))).astype(cache_dtype)
+            pr = jnp.pad(r, ((0, 0), (0, max_len - S), (0, 0))).astype(cache_dtype)
+            return h, (pc, pr)
+
+        x, (cs, rs) = jax.lax.scan(step, x, params["blocks"])
+        cache.update(c=cs, r=rs)
+    elif fam in ("ssm", "hybrid"):
+        def sstep(h, lp):
+            y, stt, (cx, cbc) = ssm_mod.mamba2_seq(rmsnorm(h, lp["ln"]),
+                                                   lp["ssm"], cfg,
+                                                   return_state=True)
+            return h + y, (stt, cx.astype(cache_dtype),
+                           cbc.astype(cache_dtype))
+
+        if fam == "ssm":
+            x, (sts, cxs, cbcs) = jax.lax.scan(sstep, x, params["blocks"])
+            cache.update(state=sts, conv_x=cxs, conv_bc=cbcs)
+        else:
+            n_groups, g, tail = _hybrid_split(cfg)
+            resh = lambda a: a[: n_groups * g].reshape(n_groups, g, *a.shape[1:])
+            head_p = jax.tree.map(resh, params["blocks"])
+
+            def group_step(h, gp):
+                h, (gs, gcx, gcbc) = jax.lax.scan(sstep, h, gp)
+                sq = jax.tree.map(lambda a: a[0], params["shared_attn"])
+                a, (k, v) = att.gqa_prefill(rmsnorm(h, sq["ln1"]), sq["attn"], cfg)
+                h = h + a
+                h = h + _mlp(rmsnorm(h, sq["ln2"]), sq["mlp"], cfg)
+                return h, (gs, gcx, gcbc, pad_kv(k), pad_kv(v))
+
+            x, (gs, gcx, gcbc, ks, vs) = jax.lax.scan(group_step, x, head_p)
+            unresh = lambda a: a.reshape(n_groups * g, *a.shape[2:])
+            st, cxs, cbcs = unresh(gs), unresh(gcx), unresh(gcbc)
+            if tail:
+                tail_p = jax.tree.map(lambda a: a[n_groups * g:], params["blocks"])
+                x, (ts, tcx, tcbc) = jax.lax.scan(sstep, x, tail_p)
+                st = jnp.concatenate([st, ts])
+                cxs = jnp.concatenate([cxs, tcx])
+                cbcs = jnp.concatenate([cbcs, tcbc])
+            cache.update(state=st, conv_x=cxs, conv_bc=cbcs, k=ks, v=vs)
+    elif fam == "encdec":
+        assert extras is not None and "frames" in extras
+        xe = extras["frames"].astype(x.dtype)
+
+        def enc_step(h, lp):
+            h = h + att.gqa_train(rmsnorm(h, lp["ln1"]), lp["attn"], cfg,
+                                  causal=False)
+            h = h + _mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+            return h, None
+
+        xe, _ = jax.lax.scan(enc_step, xe, params["enc_blocks"])
+
+        def dec_step(h, lp):
+            a, (k, v) = att.gqa_prefill(rmsnorm(h, lp["ln1"]), lp["attn"], cfg)
+            h = h + a
+            xk, xv = att.cross_kv(xe, lp["cross"])
+            h = h + att.gqa_cross(rmsnorm(h, lp["ln2"]), lp["cross"], (xk, xv), cfg)
+            h = h + _mlp(rmsnorm(h, lp["ln3"]), lp["mlp"], cfg)
+            return h, (pad_kv(k), pad_kv(v), xk.astype(cache_dtype),
+                       xv.astype(cache_dtype))
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(dec_step, x, params["blocks"])
+        cache.update(k=ks, v=vs, xk=xks, xv=xvs)
+    else:
+        raise ValueError(fam)
+
+    logits = _unembed(params, x[:, -1:, :], cfg)[:, 0]
+    cache["cur_len"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache

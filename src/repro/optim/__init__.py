@@ -1,0 +1,3 @@
+from .adamw import AdamW, AdamWState, global_norm  # noqa: F401
+from .schedule import constant, cosine_with_warmup  # noqa: F401
+from . import grad  # noqa: F401

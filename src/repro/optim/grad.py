@@ -1,0 +1,81 @@
+"""Gradient compression with error feedback — a distributed-optimization
+option for bandwidth-bound meshes (int8 quantization or top-k sparsification).
+
+Used *around* the cross-replica reduction: compress → all-reduce fewer bytes →
+decompress; the residual is fed back into the next step so the compression
+bias vanishes in expectation (error-feedback SGD).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any  # same tree as grads, f32
+
+
+def init_error_feedback(params) -> EFState:
+    return EFState(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8 quantization; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_int8(grads, ef: EFState):
+    """grads+residual -> (int8 payload tree, new EF state).
+
+    The int8 payload is what crosses the wire (8× fewer bytes than f32);
+    the quantization error stays local in the residual.
+    """
+    payload = jax.tree.map(lambda g, r: quantize_int8(g.astype(jnp.float32) + r),
+                           grads, ef.residual)
+    new_res = jax.tree.map(
+        lambda qs, g, r: g.astype(jnp.float32) + r - dequantize_int8(*qs),
+        payload, grads, ef.residual, is_leaf=_is_payload)
+    return payload, EFState(new_res)
+
+
+def _is_payload(x):
+    return (isinstance(x, tuple) and len(x) == 2 and hasattr(x[0], "dtype")
+            and x[0].dtype == jnp.int8)
+
+
+def decompress_grads_int8(payload):
+    return jax.tree.map(lambda qs: dequantize_int8(*qs), payload,
+                        is_leaf=_is_payload)
+
+
+def topk_sparsify(x, frac: float):
+    """Keep the top-|frac| magnitude entries (flat); returns dense masked x
+    (the wire format would be (values, indices) — the dense mask keeps the
+    XLA graph simple while modelling the same information loss)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compress_grads_topk(grads, ef: EFState, frac: float = 0.1):
+    def one(g, r):
+        v = g.astype(jnp.float32) + r
+        kept = topk_sparsify(v, frac)
+        return kept, v - kept
+
+    kept = jax.tree.map(lambda g, r: topk_sparsify(g.astype(jnp.float32) + r, frac),
+                        grads, ef.residual)
+    new_res = jax.tree.map(lambda g, r, k: g.astype(jnp.float32) + r - k,
+                           grads, ef.residual, kept)
+    return kept, EFState(new_res)

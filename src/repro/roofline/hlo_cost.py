@@ -1,0 +1,299 @@
+"""HLO text cost walker: FLOPs / HBM bytes / collective bytes with
+while-loop trip-count multiplication.
+
+Why not ``compiled.cost_analysis()``: XLA's aggregate visits each while body
+ONCE — a 96-layer scan reports ~1/96 of the real FLOPs, and collectives
+inside the loop are likewise under-counted.  This walker parses the
+post-partitioning HLO text, builds the computation call graph, extracts
+while trip counts from their condition computations, and accumulates:
+
+  flops            — dot/convolution exact (from operand shapes + contraction
+                     dims); elementwise/reduce ≈ 1 flop per output element
+  hbm_bytes        — Σ (operand + output bytes) of top-level ops; fusion
+                     internals are skipped (they live in VMEM/registers),
+                     which makes this a fusion-aware HBM-traffic model.
+                     Slice-like ops (dynamic-slice/gather/fusions) read only
+                     what they produce, so their per-operand read is capped
+                     at 4× output bytes — otherwise a scan that slices one
+                     layer from an L-layer weight stack would be charged the
+                     whole stack per iteration (L× overcount).  dots/convs
+                     keep exact operand bytes (their operands really stream).
+  collective_bytes — per collective kind; all-reduce counted 2× payload
+                     (ring send+recv), others 1× payload
+
+All numbers are PER DEVICE (the HLO module is the per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?)\s*"
+    r"([\w\-]+)\((.*)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w\.\-]+(?:, ?%?[\w\.\-]+)*)\}?")
+
+
+def _shape_bytes_elems(type_str: str) -> tuple[int, int]:
+    """Total (bytes, elements) over all array shapes in a type string
+    (handles tuples by summing)."""
+    bytes_, elems = 0, 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return bytes_, elems
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # everything after the opening paren (operands + attrs)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    params: dict  # param name -> type string
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str | None]:
+    comps: dict[str, Computation] = {}
+    entry_name = None
+    cur = None
+    for line in text.splitlines():
+        # strip /*index=N*/ comments — their '=' breaks op parsing for
+        # long tuple types (while carries with ≥6 elements)
+        ls = re.sub(r"/\*.*?\*/", "", line).strip()
+        if not ls or ls.startswith("//"):
+            continue
+        # computation header: `%name (args) -> type {` or `ENTRY %name ...{`
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$", ls)
+        if m and " = " not in ls:
+            cur = Computation(m.group(2), [], {})
+            for pm in re.finditer(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)", m.group(3)):
+                cur.params[pm.group(1)] = pm.group(2)
+            comps[cur.name] = cur
+            if m.group(1):
+                entry_name = cur.name
+            continue
+        if ls == "}" or cur is None:
+            continue
+        om = _OP_RE.match(ls)
+        if om:
+            name, tstr, opcode, rest = om.groups()
+            cur.ops.append(Op(name, tstr, opcode, rest))
+    return comps, entry_name
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Operand list = %refs before the closing paren of the op call."""
+    depth, i = 1, 0
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    inner = rest[: i - 1] if depth == 0 else rest
+    return re.findall(r"%([\w\.\-]+)", inner)
+
+
+def _trip_count(cond: Computation) -> int:
+    """Extract the while trip count from its condition computation.
+
+    Prefer a constant operand of a direct `compare`; XLA often wraps the
+    compare in a called computation, so fall back to the largest positive
+    scalar integer constant in the condition body (the loop bound)."""
+    consts = {}
+    for op in cond.ops:
+        if op.opcode == "constant" and "s32[]" in op.type_str:
+            m = re.match(r"([\-\d]+)", op.rest)
+            if m:
+                consts[op.name] = int(m.group(1))
+    for op in cond.ops:
+        if op.opcode == "compare":
+            for n in _operand_names(op.rest):
+                if consts.get(n, 0) > 0:
+                    return consts[n]
+    positive = [v for v in consts.values() if v > 0]
+    return max(positive) if positive else 1
+
+
+def _dot_flops(op: Op, types: dict) -> int:
+    """2 · prod(output dims) · prod(contracting dims of lhs)."""
+    out_b, out_e = _shape_bytes_elems(op.type_str)
+    operands = _operand_names(op.rest)
+    if not operands:
+        return 0
+    lhs_t = types.get(operands[0], "")
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    sm = _SHAPE_RE.search(lhs_t)
+    if m and sm:
+        dims = [int(x) for x in sm.group(2).split(",")] if sm.group(2) else []
+        for ci in (int(x) for x in m.group(1).split(",") if x):
+            if ci < len(dims):
+                contract *= dims[ci]
+    return 2 * out_e * contract
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, entry_name = parse_hlo(text)
+        self.flops = 0
+        self.hbm_bytes = 0
+        self.coll_bytes: dict[str, int] = defaultdict(int)
+        self.coll_counts: dict[str, int] = defaultdict(int)
+        entry = self.comps.get(entry_name) if entry_name else None
+        if entry is None:
+            entry = max(self.comps.values(), key=lambda c: len(c.ops))
+        self._visited_fusion_flops: dict[str, int] = {}
+        self._walk(entry, mult=1, top=True)
+
+    # -- helpers -------------------------------------------------------------
+    def _types_of(self, comp: Computation) -> dict:
+        t = dict(comp.params)
+        for op in comp.ops:
+            t[op.name] = op.type_str
+        return t
+
+    def _fusion_flops(self, comp_name: str) -> int:
+        """Dot/conv flops inside a fusion computation (counted once, cached)."""
+        if comp_name in self._visited_fusion_flops:
+            return self._visited_fusion_flops[comp_name]
+        comp = self.comps.get(comp_name)
+        fl = 0
+        if comp:
+            types = self._types_of(comp)
+            for op in comp.ops:
+                if op.opcode in ("dot", "convolution"):
+                    fl += _dot_flops(op, types)
+                elif op.opcode not in ("parameter", "constant", "bitcast",
+                                       "tuple", "get-tuple-element", "copy",
+                                       "reshape", "broadcast", "iota",
+                                       "dynamic-slice", "slice", "transpose"):
+                    # data movement isn't FLOPs; everything else ~1/elem
+                    fl += _shape_bytes_elems(op.type_str)[1]
+                for sub in _CALL_ATTR_RE.finditer(op.rest):
+                    for s in re.split(r",\s*", sub.group(1)):
+                        fl += self._fusion_flops(s.strip().lstrip("%"))
+        self._visited_fusion_flops[comp_name] = fl
+        return fl
+
+    def _in_bytes_capped(self, op: Op, types: dict, out_bytes: int,
+                         cap_mult: int = 4) -> int:
+        """Operand read bytes, per-operand capped at cap_mult×output — the
+        slice-aware HBM model for non-streaming ops (see module docstring)."""
+        total = 0
+        for o in _operand_names(op.rest):
+            b = _shape_bytes_elems(types.get(o, ""))[0]
+            total += min(b, cap_mult * max(out_bytes, 1))
+        return total
+
+    def _walk(self, comp: Computation, mult: int, top: bool = False):
+        types = self._types_of(comp)
+        for op in comp.ops:
+            out_bytes, out_elems = _shape_bytes_elems(op.type_str)
+            opc = op.opcode
+
+            if opc in COLLECTIVES or (opc.endswith("-start")
+                                      and opc[:-6] in COLLECTIVES):
+                kind = opc[:-6] if opc.endswith("-start") else opc
+                payload = out_bytes
+                factor = 2 if kind == "all-reduce" else 1
+                self.coll_bytes[kind] += factor * payload * mult
+                self.coll_counts[kind] += mult
+                self.hbm_bytes += 2 * payload * mult
+                continue
+
+            if opc == "while":
+                calls = dict(re.findall(r"(condition|body)=%?([\w\.\-]+)", op.rest))
+                trips = _trip_count(self.comps[calls["condition"]]) \
+                    if calls.get("condition") in self.comps else 1
+                if calls.get("body") in self.comps:
+                    self._walk(self.comps[calls["body"]], mult * max(trips, 1))
+                continue
+
+            if opc in ("call", "conditional", "async-start"):
+                for sub in _CALL_ATTR_RE.finditer(op.rest):
+                    for s in re.split(r",\s*", sub.group(1)):
+                        s = s.strip().lstrip("%")
+                        if s in self.comps:
+                            self._walk(self.comps[s], mult)
+                continue
+
+            if opc in ("dot", "convolution"):
+                self.flops += _dot_flops(op, types) * mult
+                in_bytes = sum(_shape_bytes_elems(types.get(o, ""))[0]
+                               for o in _operand_names(op.rest))
+                self.hbm_bytes += (out_bytes + in_bytes) * mult
+                continue
+
+            if opc == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                if m:
+                    self.flops += self._fusion_flops(m.group(1)) * mult
+                in_bytes = self._in_bytes_capped(op, types, out_bytes)
+                self.hbm_bytes += (out_bytes + in_bytes) * mult
+                continue
+
+            if opc in ("parameter", "constant", "get-tuple-element", "tuple",
+                       "bitcast", "after-all", "partition-id", "replica-id"):
+                continue
+
+            # generic op: operands+output traffic; ~1 flop/elem unless it is
+            # pure data movement
+            if opc not in ("copy", "reshape", "broadcast", "iota", "slice",
+                           "dynamic-slice", "dynamic-update-slice",
+                           "transpose", "concatenate", "pad", "reverse",
+                           "gather", "scatter", "copy-start", "copy-done"):
+                self.flops += out_elems * mult
+            if opc == "dynamic-update-slice":
+                # in-place slot write: update operand + written slot, not the
+                # whole aliased buffer
+                upd = _operand_names(op.rest)[1:2]
+                in_bytes = sum(_shape_bytes_elems(types.get(o, ""))[0]
+                               for o in upd)
+                self.hbm_bytes += 2 * in_bytes * mult
+                continue
+            if opc.startswith("reduce") or opc == "sort":
+                # reductions stream their full operands (big -> small)
+                in_bytes = sum(_shape_bytes_elems(types.get(o, ""))[0]
+                               for o in _operand_names(op.rest))
+            else:
+                in_bytes = self._in_bytes_capped(op, types, out_bytes)
+            self.hbm_bytes += (out_bytes + in_bytes) * mult
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_device": float(self.flops),
+            "hbm_bytes_per_device": float(self.hbm_bytes),
+            "collective_bytes_per_device": {k: float(v)
+                                            for k, v in self.coll_bytes.items()},
+            "collective_counts": {k: int(v) for k, v in self.coll_counts.items()},
+            "total_collective_bytes": float(sum(self.coll_bytes.values())),
+        }

@@ -1,0 +1,118 @@
+"""Roofline report generator: experiments/dryrun/*.json -> the §Roofline
+table (three terms, dominant bottleneck, MFU ceiling, model-FLOP ratio).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(per chip).  All inputs are per-device (the HLO module is the SPMD program).
+
+    PYTHONPATH=src python -m repro.roofline.report               # markdown
+    PYTHONPATH=src python -m repro.roofline.report --tag mytag   # hillclimb runs
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link / chip
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def term_seconds(rec: dict) -> dict:
+    hc = rec["hlo_cost"]
+    comp = hc["flops_per_device"] / PEAK_FLOPS
+    mem = hc["hbm_bytes_per_device"] / HBM_BW
+    coll = hc["total_collective_bytes"] / ICI_BW
+    dom = max(("compute", comp), ("memory", mem), ("collective", coll),
+              key=lambda t: t[1])[0]
+    step = max(comp, mem, coll)
+    # useful model FLOPs: 6·N_active·tokens (train) / 2·N_active·tokens (fwd)
+    tokens = rec["global_batch"] * (rec["seq_len"] if rec["kind"] != "decode"
+                                    else 1)
+    mf = (6 if rec["kind"] == "train" else 2) * rec["n_active_params"] * tokens
+    n_dev = 1
+    for v in rec.get("mesh_shape", {}).values():
+        n_dev *= v
+    mf_dev = mf / max(n_dev, 1)
+    return {
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dom, "bound_step_s": step,
+        "model_flops_per_dev": mf_dev,
+        "useful_flop_frac": mf_dev / max(hc["flops_per_device"], 1),
+        # fraction of peak the *bound* step could reach if perfectly
+        # overlapped: useful flops / (step_time × peak)
+        "roofline_frac": mf_dev / (step * PEAK_FLOPS) if step else 0.0,
+    }
+
+
+def load_cells(tag: str = "", dir: pathlib.Path | None = None) -> list[dict]:
+    cells = []
+    suffix = f"__{tag}.json" if tag else ".json"
+    for p in sorted((dir or DRYRUN_DIR).glob(f"*{suffix}")):
+        rec = json.loads(p.read_text())
+        if tag and rec.get("tag") != tag:
+            continue
+        if not tag and rec.get("tag"):
+            continue
+        cells.append(rec)
+    return cells
+
+
+def fmt_engineering(x: float) -> str:
+    for div, unit in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(x) >= div:
+            return f"{x/div:.3g}{unit}"
+    return f"{x:.3g}"
+
+
+def markdown_table(cells: list[dict], mesh: str = "single") -> str:
+    rows = []
+    hdr = ("| arch | shape | comp (ms) | mem (ms) | coll (ms) | dominant | "
+           "useful/HLO | roofline frac | peak GiB |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for rec in cells:
+        if rec.get("mesh") != mesh:
+            continue
+        if rec.get("status") == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"skipped | — | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                        f"ERROR | — | — | — |")
+            continue
+        t = term_seconds(rec)
+        peak = rec["memory_analysis"]["peak_memory_in_bytes"] / 2**30
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['compute_s']*1e3:.2f} | "
+            f"{t['memory_s']*1e3:.2f} | {t['collective_s']*1e3:.2f} | "
+            f"{t['dominant']} | {t['useful_flop_frac']:.2f} | "
+            f"{t['roofline_frac']:.3f} | {peak:.2f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--dir", type=pathlib.Path, default=None,
+                    help="e.g. experiments/dryrun_baseline")
+    args = ap.parse_args()
+    cells = load_cells(args.tag, args.dir)
+    print(markdown_table(cells, args.mesh))
+    ok = [c for c in cells if c.get("status") == "ok" and c["mesh"] == args.mesh]
+    if ok:
+        worst = min(ok, key=lambda c: term_seconds(c)["roofline_frac"])
+        most_coll = max(ok, key=lambda c: term_seconds(c)["collective_s"]
+                        / max(term_seconds(c)["bound_step_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']}/{worst['shape']}")
+        print(f"most collective-bound:   {most_coll['arch']}/{most_coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Serving: continuous batching over a log-structured paged KV pool whose
+space is reclaimed by the paper's MDC cleaning policy."""
+
+from .engine import PagedServingEngine, Request
+from .kvcache import CompactionPlan, LogStructuredKVPool, PoolStats
+
+__all__ = ["PagedServingEngine", "Request", "LogStructuredKVPool",
+           "CompactionPlan", "PoolStats"]

@@ -1,0 +1,299 @@
+"""Paged serving engine: continuous batching over the log-structured KV pool.
+
+The engine owns the tensor pool (per-layer K/V page arrays) and executes, on
+device, the two data paths the pool manager plans on host:
+
+  * decode      — one token for every active slot, reading KV through block
+                  tables (kernels.paged_attention on TPU; the vectorized ref
+                  path on CPU), writing the new token's K/V into its page;
+  * compaction  — the paper's cleaning: gather live pages of MDC victims
+                  into fresh slabs (kernels.segment_compact) and remap the
+                  block tables.
+
+Supported families: dense + moe (GQA attention).  MLA pages (deepseek) would
+carry the latent cache instead (smaller pages, same policy — DESIGN.md §5);
+SSM state never checkerboards, so mamba2 serves from dense state and the
+pool is inapplicable (also §5).
+
+Batch slots are fixed (``max_batch``) so the decode step compiles once;
+inactive slots point at a reserved trash page and are masked out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import Model
+from ..models import attention as att
+from ..models import transformer as tfm
+from ..models.layers import rmsnorm
+from .. import kernels
+from .kvcache import LogStructuredKVPool
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    seq_len: int = 0
+    to_generate: int = 0
+    pages: list = dataclasses.field(default_factory=list)
+    out_tokens: list = dataclasses.field(default_factory=list)
+
+    @property
+    def active(self) -> bool:
+        return self.rid >= 0
+
+
+def _paged_attn(q, k_pool, v_pool, bt, lens, use_pallas: bool):
+    if use_pallas:
+        return kernels.paged_attention(q, k_pool, v_pool, bt, lens)
+    return kernels.ref.paged_attention_ref(q, k_pool, v_pool, bt, lens)
+
+
+def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool):
+    """Builds the jitted batched decode step over the paged pool.
+
+    tokens (B,), seq_lens (B,) = current lengths, bt (B, P) physical pages.
+    Writes the new token's K/V at position seq_lens (page seq_lens//T), then
+    attends over seq_lens+1 tokens.  Returns (next_tokens, k_pools, v_pools).
+    """
+    assert cfg.family in ("dense", "moe"), cfg.family
+
+    def step(params, k_pools, v_pools, bt, seq_lens, tokens):
+        B = tokens.shape[0]
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)  # (B,1,d)
+        pos = seq_lens[:, None]
+        page = jnp.take_along_axis(bt, (seq_lens // page_T)[:, None], 1)[:, 0]
+        off = seq_lens % page_T
+
+        def layer(h, xs):
+            lp, kp, vp = xs
+            hn = rmsnorm(h, lp["ln1"])
+            q, k, v = att._project_qkv(hn, lp["attn"], cfg, pos)
+            kp = kp.at[page, off].set(k[:, 0].astype(kp.dtype))
+            vp = vp.at[page, off].set(v[:, 0].astype(vp.dtype))
+            o = _paged_attn(q[:, 0], kp, vp, bt, seq_lens + 1, use_pallas)
+            h = h + jnp.einsum("bhe,hed->bd", o.astype(h.dtype),
+                               lp["attn"]["wo"])[:, None]
+            h = h + tfm._block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+            return h, (kp, vp)
+
+        x, (k_pools, v_pools) = jax.lax.scan(
+            layer, x, (params["blocks"], k_pools, v_pools))
+        logits = tfm._unembed(params, x, cfg)[:, 0]
+        return jnp.argmax(logits, -1).astype(jnp.int32), k_pools, v_pools
+
+    return jax.jit(step, donate_argnums=(1, 2))
+
+
+class PagedServingEngine:
+    """Continuous-batching engine on the log-structured KV pool."""
+
+    def __init__(self, model: Model, *, n_slabs: int = 16,
+                 blocks_per_slab: int = 8, page_T: int = 16,
+                 max_batch: int = 4, max_seq: int = 512,
+                 policy: str = "mdc", use_pallas: bool = False,
+                 params=None, seed: int = 0,
+                 compact_trigger: int = 2, compact_batch: int = 4):
+        cfg = model.cfg
+        self.model, self.cfg = model, cfg
+        self.page_T = page_T
+        self.max_batch = max_batch
+        self.max_pages_per_seq = (max_seq + page_T - 1) // page_T
+        self.use_pallas = use_pallas
+
+        self.pool = LogStructuredKVPool(
+            n_slabs, blocks_per_slab, policy=policy,
+            compact_trigger=compact_trigger, compact_batch=compact_batch)
+        # synchronous plan execution: tensor move + block-table remap happen
+        # before any compaction-freed page id can be re-allocated
+        self.pool.on_compaction = self._execute_plan
+        n_pages = n_slabs * blocks_per_slab
+        self.trash_page = n_pages  # reserved scratch page for inactive slots
+
+        L, Kh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        shape = (L, n_pages + 1, page_T, Kh, hd)
+        self.k_pools = jnp.zeros(shape, jnp.bfloat16)
+        self.v_pools = jnp.zeros(shape, jnp.bfloat16)
+
+        self.params = params if params is not None else model.init(
+            jax.random.PRNGKey(seed))
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.bt = np.full((max_batch, self.max_pages_per_seq), self.trash_page,
+                          dtype=np.int32)
+        self.queue: list[Request] = []
+        self.finished: dict[int, list[int]] = {}
+        self._decode = make_paged_decode_step(cfg, page_T, use_pallas)
+        self._prefill = jax.jit(
+            functools.partial(_prefill_fn, cfg=cfg),
+            static_argnames=("max_len",))
+        self._next_rid = 0
+
+    # ------------------------------------------------------------- requests
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return rid
+
+    def _est_death(self, slot: _Slot) -> float:
+        """Paper §5.3 placement estimator: blocks die when their sequence
+        finishes ⇒ expected death clock = now + blocks that will die then."""
+        return self.pool.u_now + slot.seq_len + slot.to_generate
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            req = self.queue[0]
+            need = (len(req.prompt) + req.max_new_tokens + self.page_T - 1
+                    ) // self.page_T
+            if need > self.max_pages_per_seq:
+                raise ValueError("request exceeds max_seq")
+            if self.pool.free_blocks() < need + self.pool.compact_trigger:
+                break  # admission control: wait for deaths/compaction
+            self.queue.pop(0)
+            self._start(i, req)
+
+    def _start(self, i: int, req: Request) -> None:
+        slot = self.slots[i]
+        slot.rid, slot.seq_len = req.rid, len(req.prompt)
+        slot.to_generate = req.max_new_tokens
+        slot.pages, slot.out_tokens = [], []
+        n_pages = (len(req.prompt) + self.page_T - 1) // self.page_T
+        for _ in range(n_pages):
+            # NB: two statements — alloc_block may fire the compaction
+            # callback, which remaps slot.pages in place
+            page = self.pool.alloc_block(req.rid, self._est_death(slot))
+            slot.pages.append(page)
+        self.bt[i, :] = self.trash_page
+        self.bt[i, :n_pages] = slot.pages
+
+        # dense prefill -> scatter K/V into the allocated pages
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        first_tok, ks, vs = self._prefill(self.params, toks,
+                                          max_len=n_pages * self.page_T)
+        L, _, _, Kh, hd = ks.shape
+        kp = ks[:, 0].reshape(L, n_pages, self.page_T, Kh, hd)
+        vp = vs[:, 0].reshape(L, n_pages, self.page_T, Kh, hd)
+        pages = jnp.asarray(slot.pages, jnp.int32)
+        self.k_pools = self.k_pools.at[:, pages].set(kp.astype(self.k_pools.dtype))
+        self.v_pools = self.v_pools.at[:, pages].set(vp.astype(self.v_pools.dtype))
+        slot.out_tokens.append(int(first_tok[0]))
+        slot.to_generate -= 1
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> list[int]:
+        """Admit + decode one token for every active slot.  Returns finished
+        request ids."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.active]
+        if not active:
+            return []
+
+        # page for the incoming token must exist before the step writes it
+        for i in active:
+            slot = self.slots[i]
+            if slot.seq_len % self.page_T == 0 and \
+                    slot.seq_len // self.page_T >= len(slot.pages):
+                page = self.pool.alloc_block(slot.rid, self._est_death(slot))
+                slot.pages.append(page)
+                self.bt[i, len(slot.pages) - 1] = page
+
+        tokens = np.zeros(self.max_batch, np.int32)
+        lens = np.zeros(self.max_batch, np.int32)
+        for i in active:
+            slot = self.slots[i]
+            tokens[i] = slot.out_tokens[-1]
+            lens[i] = slot.seq_len
+        nxt, self.k_pools, self.v_pools = self._decode(
+            self.params, self.k_pools, self.v_pools,
+            jnp.asarray(self.bt), jnp.asarray(lens), jnp.asarray(tokens))
+        nxt = np.asarray(nxt)
+
+        done = []
+        for i in active:
+            slot = self.slots[i]
+            slot.seq_len += 1
+            slot.out_tokens.append(int(nxt[i]))
+            slot.to_generate -= 1
+            if slot.to_generate <= 0:
+                done.append(slot.rid)
+                self.finished[slot.rid] = list(slot.out_tokens)
+                self.pool.free_pages(np.asarray(slot.pages))
+                self.bt[i, :] = self.trash_page
+                self.slots[i] = _Slot()
+        return done
+
+    def run_to_completion(self, max_steps: int = 100_000) -> dict:
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and not any(s.active for s in self.slots):
+                break
+        return self.finished
+
+    # ----------------------------------------------------------- compaction
+    def _execute_plan(self, plan) -> None:
+        if len(plan) == 0:
+            return
+        src = jnp.asarray(plan.src_pages, jnp.int32)
+        dst = jnp.asarray(plan.dst_pages, jnp.int32)
+        L = self.k_pools.shape[0]
+        n_pages, T, Kh, hd = self.k_pools.shape[1:]
+        if self.use_pallas:
+            kf = self.k_pools.reshape(L * n_pages, T * Kh * hd)
+            vf = self.v_pools.reshape(L * n_pages, T * Kh * hd)
+            # per-layer page ids in the flattened pool
+            off = jnp.arange(L, dtype=jnp.int32)[:, None] * n_pages
+            src_l = (off + src[None, :]).reshape(-1)
+            moved_k = kernels.segment_compact(kf, src_l).reshape(
+                L, len(plan), T, Kh, hd)
+            moved_v = kernels.segment_compact(vf, src_l).reshape(
+                L, len(plan), T, Kh, hd)
+        else:
+            moved_k = self.k_pools[:, src]
+            moved_v = self.v_pools[:, src]
+        self.k_pools = self.k_pools.at[:, dst].set(moved_k)
+        self.v_pools = self.v_pools.at[:, dst].set(moved_v)
+        # remap block tables (host); mutate in place — callers hold the list
+        remap = {int(s): int(d) for s, d in zip(plan.src_pages, plan.dst_pages)}
+        for i, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            slot.pages[:] = [remap.get(p, p) for p in slot.pages]
+            if slot.pages:
+                self.bt[i, :len(slot.pages)] = slot.pages
+
+    # ------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        st = self.pool.stats
+        return {
+            "blocks_written": st.blocks_written,
+            "blocks_moved": st.blocks_moved,
+            "wamp": st.wamp(),
+            "mean_E_compacted": st.mean_E(),
+            "compactions": st.compactions,
+            "free_blocks": self.pool.free_blocks(),
+        }
+
+
+def _prefill_fn(params, toks, *, cfg, max_len):
+    """Dense prefill; returns (first token, K (L,B,max_len,Kh,hd), V)."""
+    logits, cache = tfm.prefill(params, toks, cfg, max_len)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    return first, cache["k"], cache["v"]

@@ -1,0 +1,295 @@
+"""Log-structured paged KV cache with MDC compaction (the paper on a pod).
+
+Mapping (DESIGN.md §2): KV *block* = paper page; HBM *slab* (a group of
+``blocks_per_slab`` contiguous pool pages) = paper segment; a block *dies*
+when its sequence completes or is preempted (the paper's overwrite); the
+clock ``u_now`` ticks once per block death (paper: once per update);
+*compaction* evacuates the live blocks of victim slabs into fresh slabs and
+rewrites the block tables (paper: cleaning).  Victim choice is the paper's
+§5.1.3 MDC key over per-slab {A, C, u_p2} — identical code to the simulator
+(repro.core.policies), with ``age``/``greedy``/``cost_benefit`` selectable
+for ablation.
+
+Why compaction at all (HBM has no erase blocks): continuous batching admits
+a sequence only if *contiguous slab* capacity exists for its prompt growth;
+after a mix of short/long sequences dies, free blocks are checkerboarded
+across slabs exactly like Figure 1 of the paper.  Evacuating nearly-empty
+slabs restores whole-slab free extents at the smallest possible copy cost —
+and every copied byte is HBM read+write bandwidth stolen from decode, so
+``Wamp`` prices lost decode throughput directly.
+
+Placement (the paper's §5.3 sort-buffer): blocks are appended to one of
+``n_open`` open slabs bucketed by *expected remaining lifetime* (the serving
+analogue of u_p2: death-time ≈ now + tokens-left-to-generate).  Blocks that
+will die together land in the same slab, so slabs die nearly-whole — the
+mechanism by which MDC's hot/cold separation materializes in a KV pool.
+
+Accounting lives on host (numpy — this is the block manager, as in any
+serving stack); the data path (segment_compact gather, paged_attention) is
+TPU-side (repro.kernels).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import policies as P
+from ..core.segment import FREE, OPEN, USED
+
+NO_PAGE = -1
+
+
+@dataclasses.dataclass
+class PoolStats:
+    blocks_written: int = 0     # user block allocations (paper: user writes)
+    blocks_died: int = 0
+    blocks_moved: int = 0       # compaction relocations (paper: GC moves)
+    slabs_compacted: int = 0
+    sum_E_compacted: float = 0.0
+    compactions: int = 0
+
+    def wamp(self) -> float:
+        return self.blocks_moved / max(self.blocks_written, 1)
+
+    def mean_E(self) -> float:
+        return self.sum_E_compacted / max(self.slabs_compacted, 1)
+
+
+class LogStructuredKVPool:
+    """Block manager for a paged KV pool laid out as slabs of blocks.
+
+    Physical pool page ids are ``slab * blocks_per_slab + slot``.  The tensor
+    pool itself (k/v arrays indexed by page id) lives with the engine; this
+    class owns allocation, death, victim selection and the compaction *plan*
+    (src page -> dst page), which the engine executes with the
+    ``segment_compact`` kernel before rewriting block tables.
+    """
+
+    def __init__(self, n_slabs: int, blocks_per_slab: int, *,
+                 policy: str = "mdc", n_open: int = 4,
+                 compact_trigger: int = 2, compact_batch: int = 4,
+                 horizon: float = 1e9):
+        self.n_slabs = n_slabs
+        self.S = blocks_per_slab
+        self.policy = policy
+        self.n_open = n_open
+        self.compact_trigger = compact_trigger
+        self.compact_batch = compact_batch
+        self.horizon = horizon
+
+        n_pages = n_slabs * blocks_per_slab
+        self.block_owner = np.full(n_pages, -1, dtype=np.int64)  # seq id
+        self.block_death = np.zeros(n_pages, dtype=np.float64)   # est. death
+
+        self.slab_live = np.zeros(n_slabs, dtype=np.int64)       # C
+        self.slab_fill = np.zeros(n_slabs, dtype=np.int64)       # next slot
+        self.slab_up2 = np.zeros(n_slabs, dtype=np.float64)
+        self.slab_seal = np.zeros(n_slabs, dtype=np.float64)
+        self.slab_state = np.full(n_slabs, FREE, dtype=np.int8)
+        self.free_slabs: list[int] = list(range(n_slabs - 1, -1, -1))
+
+        self.u_now = 0.0   # block-death clock (paper: update counter)
+        self.stats = PoolStats()
+        # open slabs bucketed by expected-lifetime quantile
+        self._open: list[int] = []
+        self._open_bounds: np.ndarray = np.array([])
+        # Plan executor: the engine registers a callback that performs the
+        # tensor move (kernels.segment_compact) + block-table remap.  It MUST
+        # run before any page id freed by the plan can be re-allocated, so
+        # the pool invokes it synchronously at plan creation.
+        self.on_compaction = None  # Callable[[CompactionPlan], None] | None
+        # manual mode (no callback): plans queue here; the caller must drain
+        # them before its next alloc_block
+        self.pending_plans: list[CompactionPlan] = []
+
+    # ------------------------------------------------------------ allocation
+    def free_blocks(self) -> int:
+        return len(self.free_slabs) * self.S + sum(
+            self.S - int(self.slab_fill[s]) for s in self._open)
+
+    def _alloc_slab(self) -> int:
+        if not self.free_slabs:
+            raise RuntimeError("KV pool out of slabs (compaction failed)")
+        s = self.free_slabs.pop()
+        self.slab_state[s] = OPEN
+        self.slab_fill[s] = 0
+        self.slab_live[s] = 0
+        return s
+
+    def _seal(self, s: int) -> None:
+        """Seal an open slab; u_p2 = mean est-death of its blocks (paper:
+        mean page u_p2 — here 'how soon will this slab's content die')."""
+        lo, hi = s * self.S, s * self.S + int(self.slab_fill[s])
+        owned = self.block_owner[lo:hi] >= 0
+        d = self.block_death[lo:hi][owned]
+        self.slab_up2[s] = float(d.mean()) if len(d) else self.u_now
+        self.slab_seal[s] = self.u_now
+        self.slab_state[s] = USED
+
+    def _bucket_of(self, est_death: float) -> int:
+        """Which open slab gets a block that is expected to die at est_death."""
+        if len(self._open_bounds) == 0:
+            return 0
+        return int(np.searchsorted(self._open_bounds, est_death))
+
+    def _ensure_open(self) -> None:
+        while len(self._open) < self.n_open and (self.free_slabs or True):
+            if not self.free_slabs:
+                break
+            self._open.append(self._alloc_slab())
+        # lifetime-quantile boundaries spread over the active horizon
+        k = max(len(self._open) - 1, 0)
+        if k:
+            deaths = self.block_death[self.block_owner >= 0]
+            if len(deaths) >= 4:
+                qs = np.quantile(deaths, np.linspace(0, 1, k + 2)[1:-1])
+                self._open_bounds = np.sort(qs)
+            else:
+                self._open_bounds = np.full(k, self.u_now + self.horizon)
+        else:
+            self._open_bounds = np.array([])
+
+    def alloc_block(self, seq_id: int, est_death: float) -> int:
+        """Allocate one pool page for ``seq_id``; returns the physical page id.
+
+        ``est_death``: estimated clock value at which the block will die
+        (now + expected remaining tokens of its sequence).  Drives the §5.3
+        placement: similar-death blocks share a slab.
+        """
+        while len(self.free_slabs) <= self.compact_trigger:
+            if self.compact() is None:
+                break
+        self._ensure_open()
+        if not self._open:
+            raise RuntimeError("KV pool: no open slab (all slabs sealed+full)")
+        b = min(self._bucket_of(est_death), len(self._open) - 1)
+        s = self._open[b]
+        slot = int(self.slab_fill[s])
+        page = s * self.S + slot
+        self.slab_fill[s] = slot + 1
+        self.slab_live[s] += 1
+        self.block_owner[page] = seq_id
+        self.block_death[page] = est_death
+        self.stats.blocks_written += 1
+        if slot + 1 == self.S:
+            self._seal(s)
+            self._open.pop(b)
+        return page
+
+    # --------------------------------------------------------------- death
+    def free_pages(self, pages: np.ndarray) -> None:
+        """Kill blocks (their sequence finished / was preempted)."""
+        pages = np.asarray(pages, dtype=np.int64)
+        pages = pages[pages >= 0]
+        if len(pages) == 0:
+            return
+        assert (self.block_owner[pages] >= 0).all(), "double free"
+        self.block_owner[pages] = -1
+        slabs = pages // self.S
+        np.add.at(self.slab_live, slabs, -1)
+        self.u_now += len(pages)
+        self.stats.blocks_died += len(pages)
+        # open slabs whose blocks all died stay open (slots are append-only);
+        # sealed slabs that are now fully dead are reclaimed for free
+        for s in np.unique(slabs):
+            if self.slab_state[s] == USED and self.slab_live[s] == 0:
+                self._release(int(s))
+
+    def _release(self, s: int) -> None:
+        self.slab_state[s] = FREE
+        self.slab_fill[s] = 0
+        self.free_slabs.append(s)
+
+    # ----------------------------------------------------------- compaction
+    def select_victims(self, k: int | None = None) -> np.ndarray:
+        eligible = (self.slab_state == USED) & (self.slab_live < self.S)
+        return P.select_victims(
+            self.policy, k or self.compact_batch,
+            live=self.slab_live, S=self.S, up2=self.slab_up2,
+            seal_time=self.slab_seal, u_now=self.u_now,
+            seg_prob=np.zeros(self.n_slabs), eligible=eligible)
+
+    def maybe_compact(self):
+        """Compact if free space is low.  Returns a plan or None.
+
+        The caller (engine) must execute the returned plan on the tensor pool
+        (kernels.segment_compact) and remap its block tables.
+        """
+        if len(self.free_slabs) > self.compact_trigger:
+            return None
+        return self.compact()
+
+    def compact(self):
+        """Evacuate victims; returns CompactionPlan(src_pages, dst_pages)."""
+        victims = self.select_victims()
+        if len(victims) == 0:
+            return None
+        src = []
+        for s in victims:
+            lo, hi = s * self.S, s * self.S + int(self.slab_fill[s])
+            live = np.nonzero(self.block_owner[lo:hi] >= 0)[0] + lo
+            src.append(live)
+            self.stats.sum_E_compacted += 1.0 - len(live) / self.S
+            self.stats.slabs_compacted += 1
+        src = np.concatenate(src) if src else np.empty(0, np.int64)
+        # §5.3: sort survivors by expected death so they re-cluster
+        src = src[np.argsort(self.block_death[src], kind="stable")]
+
+        owners = self.block_owner[src].copy()
+        deaths = self.block_death[src].copy()
+        # free the victims wholesale
+        for s in victims:
+            lo = s * self.S
+            self.block_owner[lo:lo + self.S] = -1
+            self.slab_live[s] = 0
+            self._release(int(s))
+        # re-place survivors into fresh slabs (append-only, sorted order)
+        dst = np.empty(len(src), dtype=np.int64)
+        for i, (o, d) in enumerate(zip(owners, deaths)):
+            self._ensure_open()
+            b = min(self._bucket_of(d), len(self._open) - 1)
+            s = self._open[b]
+            slot = int(self.slab_fill[s])
+            page = s * self.S + slot
+            self.slab_fill[s] = slot + 1
+            self.slab_live[s] += 1
+            self.block_owner[page] = o
+            self.block_death[page] = d
+            dst[i] = page
+            if slot + 1 == self.S:
+                self._seal(s)
+                self._open.pop(b)
+        self.stats.blocks_moved += len(src)
+        self.stats.compactions += 1
+        plan = CompactionPlan(src_pages=src, dst_pages=dst, owners=owners)
+        if self.on_compaction is not None:
+            self.on_compaction(plan)
+        else:
+            self.pending_plans.append(plan)
+        return plan
+
+    # ------------------------------------------------------------ invariants
+    def check_invariants(self) -> None:
+        for s in range(self.n_slabs):
+            lo, hi = s * self.S, (s + 1) * self.S
+            owned = int((self.block_owner[lo:hi] >= 0).sum())
+            assert owned == self.slab_live[s], (s, owned, self.slab_live[s])
+            if self.slab_state[s] == FREE:
+                assert owned == 0
+            owned_slots = np.nonzero(self.block_owner[lo:hi] >= 0)[0]
+            if len(owned_slots):
+                assert owned_slots.max() < self.slab_fill[s], "write past fill"
+        assert len(self.free_slabs) == int((self.slab_state == FREE).sum())
+
+
+@dataclasses.dataclass
+class CompactionPlan:
+    """src/dst physical page ids (parallel arrays) + owners for remapping."""
+    src_pages: np.ndarray
+    dst_pages: np.ndarray
+    owners: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.src_pages)

@@ -1,0 +1,75 @@
+"""Paper Tables 1 & 2: closed-form analysis vs the printed numbers."""
+
+import math
+
+import pytest
+
+from repro.core import analysis as A
+
+
+@pytest.mark.parametrize("F,E_paper", zip(A.PAPER_TABLE1_F, A.PAPER_TABLE1_E))
+def test_table1_fixpoint_matches_paper(F, E_paper):
+    # The paper prints E to 2 significant digits (its own simulated MDC-opt
+    # column, e.g. 0.606 at F=0.65, matches the fixpoint more closely).
+    E = A.fixpoint_E(F)
+    assert E == pytest.approx(E_paper, abs=9e-3), (F, E, E_paper)
+
+
+def test_table1_cost_and_wamp_relations():
+    for F in A.PAPER_TABLE1_F:
+        E = A.fixpoint_E(F)
+        assert A.cost_seg(E) == pytest.approx(2 / E)
+        assert A.wamp(E) == pytest.approx((1 - E) / E)
+        # E must exceed the naive slack bound (paper §2.1: E > 1-F)
+        assert E > (1 - F)
+
+
+def test_fixpoint_finite_P_converges_to_limit():
+    # Paper: once P > ~30 the fixpoint is essentially the P→∞ limit.
+    for F in (0.9, 0.8, 0.5):
+        e_inf = A.fixpoint_E(F)
+        e_fin = A.fixpoint_E(F, P=10_000)
+        assert e_fin == pytest.approx(e_inf, rel=1e-3)
+
+
+@pytest.mark.parametrize("F,coldhot,min_paper", A.PAPER_TABLE2)
+def test_table2_min_cost_matches_paper(F, coldhot, min_paper):
+    update_hot, dist_hot = coldhot  # m% of updates to (1-m)% of data
+    g = A.optimal_slack_split(F, update_hot, dist_hot)
+    cost = A.hotcold_cost(F, update_hot, dist_hot, g)
+    assert cost == pytest.approx(min_paper, rel=0.02), (coldhot, cost, min_paper)
+
+
+def test_table2_equal_split_near_optimal():
+    # Paper §3.2: for m:(1-m) distributions the optimal split is ≈ 50/50.
+    for update_hot in (0.9, 0.8, 0.7, 0.6, 0.5):
+        g = A.optimal_slack_split(0.8, update_hot, 1 - update_hot)
+        assert abs(g - 0.5) < 0.05
+        # and the 60/40 splits cost only slightly more (paper Table 2)
+        c_opt = A.hotcold_cost(0.8, update_hot, 1 - update_hot, g)
+        for g_off in (0.6, 0.4):
+            c_off = A.hotcold_cost(0.8, update_hot, 1 - update_hot, g_off)
+            assert c_opt <= c_off <= c_opt * 1.06
+
+
+def test_separation_beats_single_pool():
+    # §3: managing hot/cold separately beats one pool under skew ...
+    single = A.cost_seg(A.fixpoint_E(0.8))
+    sep = A.hotcold_cost(0.8, 0.9, 0.1, A.optimal_slack_split(0.8, 0.9, 0.1))
+    assert sep < single
+    # ... and for uniform (50:50) separation offers no benefit.
+    sep_u = A.hotcold_cost(0.8, 0.5, 0.5, 0.5)
+    assert sep_u == pytest.approx(single, rel=0.02)
+
+
+def test_split_ratio_closed_form_near_optimal_cost():
+    """The paper's closed form (§3.2) assumes R_i constant, so its g differs
+    slightly from the exact search optimum — but its *cost* must be within a
+    fraction of a percent of optimal (the paper's own justification)."""
+    for update_hot, dist_hot in ((0.9, 0.1), (0.8, 0.2), (0.7, 0.3)):
+        g_search = A.optimal_slack_split(0.8, update_hot, dist_hot)
+        ratio = A.optimal_split_ratio(0.8, update_hot, dist_hot)
+        g_closed = ratio / (1 + ratio)
+        c_search = A.hotcold_cost(0.8, update_hot, dist_hot, g_search)
+        c_closed = A.hotcold_cost(0.8, update_hot, dist_hot, g_closed)
+        assert c_search <= c_closed <= c_search * 1.005

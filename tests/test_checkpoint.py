@@ -1,0 +1,171 @@
+"""Checkpoint log-store: round-trip, incrementality, GC correctness, and the
+full train->fail->restart->resume loop (bit-exact replay)."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, LogStructuredCheckpointStore
+from repro.checkpoint.manager import flatten_tree, unflatten_like
+
+
+def tree_of(step: int, n: int = 4, size: int = 3000):
+    rng = np.random.default_rng(step)
+    return {f"leaf{i}": rng.standard_normal(size).astype(np.float32)
+            for i in range(n)}
+
+
+def make_store(tmp_path, **kw):
+    kw.setdefault("seg_bytes", 16 << 10)
+    kw.setdefault("chunk_bytes", 4 << 10)
+    return LogStructuredCheckpointStore(tmp_path / "ckpt", **kw)
+
+
+def test_roundtrip_and_incremental(tmp_path):
+    store = make_store(tmp_path)
+    t1 = tree_of(1)
+    store.save(1, t1)
+    w1 = store.stats.bytes_written
+    assert w1 > 0
+    # identical content ⇒ no new bytes
+    store.save(2, t1)
+    assert store.stats.bytes_written == w1
+    # change one leaf ⇒ only its chunks are written
+    t2 = dict(t1, leaf0=t1["leaf0"] + 1.0)
+    store.save(3, t2)
+    delta = store.stats.bytes_written - w1
+    assert 0 < delta <= t1["leaf0"].nbytes + store.chunk_bytes
+    got = store.restore(3)
+    for k in t2:
+        np.testing.assert_array_equal(got[k], t2[k])
+    # old step still restorable (pinned chunks survived)
+    got1 = store.restore(1)
+    np.testing.assert_array_equal(got1["leaf0"], t1["leaf0"])
+    store.check_invariants()
+
+
+def test_drop_step_kills_and_gc_reclaims(tmp_path):
+    store = make_store(tmp_path, gc_dead_frac=0.3)
+    for s in range(1, 9):
+        store.save(s, tree_of(s))  # every save rewrites everything
+        store.check_invariants()
+    before = sum(seg.written for seg in store.segments.values())
+    for s in range(1, 8):
+        store.drop_step(s)
+    store.maybe_gc()
+    store.check_invariants()
+    after = sum(seg.written for seg in store.segments.values())
+    assert after < before  # space actually reclaimed
+    got = store.restore(8)
+    np.testing.assert_array_equal(got["leaf0"], tree_of(8)["leaf0"])
+
+
+def test_gc_preserves_every_retained_step(tmp_path):
+    """GC relocates chunks shared across manifests; every retained step must
+    restore bit-exactly afterwards."""
+    store = make_store(tmp_path, gc_dead_frac=0.2)
+    trees = {}
+    base = tree_of(0)
+    for s in range(1, 7):
+        # mutate a sliding window of leaves: mixed hot/cold chunks
+        t = dict(base)
+        t[f"leaf{s % 4}"] = base[f"leaf{s % 4}"] + s
+        trees[s] = t
+        store.save(s, t, keep_last=4)
+    store.gc(k=3)
+    store.check_invariants()
+    for s in sorted(store.steps):
+        got = store.restore(s)
+        for k in trees[s]:
+            np.testing.assert_array_equal(got[k], trees[s][k])
+
+
+def test_wamp_accounting(tmp_path):
+    store = make_store(tmp_path)
+    for s in range(1, 6):
+        store.save(s, tree_of(s), keep_last=2)
+    store.gc(k=2)
+    st = store.stats
+    assert st.bytes_moved >= 0 and st.bytes_written > 0
+    assert st.wamp() == st.bytes_moved / st.bytes_written
+
+
+def test_persistence_across_reopen(tmp_path):
+    store = make_store(tmp_path)
+    t = tree_of(42)
+    store.save(7, t)
+    del store
+    store2 = make_store(tmp_path)
+    got = store2.restore(7)
+    np.testing.assert_array_equal(got["leaf2"], t["leaf2"])
+    store2.check_invariants()
+
+
+def test_manager_async_and_treepaths(tmp_path):
+    import jax.numpy as jnp
+    mgr = CheckpointManager(tmp_path / "m", keep_last=2,
+                            seg_bytes=16 << 10, chunk_bytes=4 << 10)
+    tree = {"a": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+            "b": [jnp.ones(5, jnp.bfloat16), jnp.zeros((), jnp.int32)]}
+    mgr.save(3, tree)
+    mgr.wait()
+    got = mgr.restore(tree, 3)
+    np.testing.assert_array_equal(np.asarray(got["a"]["w"], np.float32),
+                                  np.asarray(tree["a"]["w"], np.float32))
+    assert got["b"][0].dtype == jnp.bfloat16
+
+
+def test_flatten_unflatten_roundtrip():
+    import jax.numpy as jnp
+    tree = {"x": [jnp.ones((2, 3)), {"y": jnp.zeros(4, jnp.int32)}]}
+    flat = flatten_tree(tree)
+    back = unflatten_like(tree, flat)
+    np.testing.assert_array_equal(np.asarray(back["x"][0]),
+                                  np.asarray(tree["x"][0]))
+
+
+# ------------------------------------------------------- end-to-end training
+
+def test_train_fail_restart_is_bit_exact(tmp_path):
+    """A run that dies at step 17 and restarts from the step-10 checkpoint
+    must end with exactly the losses of an uninterrupted run (determinism of
+    data cursor + restore)."""
+    from repro.launch.train import train
+    kw = dict(arch="qwen3-1.7b", smoke=True, steps=24, global_batch=2,
+              seq_len=64, save_every=8, verbose=False, seed=3)
+    clean = train(ckpt_dir=None, **kw)
+    faulty = train(ckpt_dir=str(tmp_path / "ck"), fail_at=(17,), **kw)
+    assert faulty["restarts"] == 1
+    assert faulty["resumed_from"] == [16]
+    # losses after the resume point must match the clean run's
+    np.testing.assert_allclose(faulty["loss"][-4:], clean["loss"][-4:],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_straggler_detector_flags_outlier():
+    from repro.distributed.fault import StragglerDetector
+    det = StragglerDetector(threshold=3.0, warmup=2)
+    for i, dt in enumerate([1.0, 1.0, 1.1, 0.9, 5.0, 1.0]):
+        det.observe(i, dt)
+    assert [s for s, _, _ in det.stragglers] == [4]
+
+
+def test_data_stream_deterministic_and_seekable():
+    from repro.data import SyntheticLMStream
+    a = SyntheticLMStream(vocab_size=97, seq_len=16, global_batch=4, seed=1)
+    b = SyntheticLMStream(vocab_size=97, seq_len=16, global_batch=4, seed=1)
+    xs = [next(a)["tokens"] for _ in range(5)]
+    ys = [next(b)["tokens"] for _ in range(5)]
+    for x, y in zip(xs, ys):
+        np.testing.assert_array_equal(x, y)
+    b.seek(2)
+    np.testing.assert_array_equal(next(b)["tokens"], xs[2])
+    # host sharding partitions the global batch deterministically
+    h0 = SyntheticLMStream(vocab_size=97, seq_len=16, global_batch=4,
+                           n_hosts=2, host_id=0, seed=1)
+    h1 = SyntheticLMStream(vocab_size=97, seq_len=16, global_batch=4,
+                           n_hosts=2, host_id=1, seed=1)
+    b0, b1 = next(h0)["tokens"], next(h1)["tokens"]
+    assert b0.shape == (2, 16) and b1.shape == (2, 16)
+    assert not np.array_equal(b0, b1)
+    for s in (a, b, h0, h1):
+        s.close()

@@ -1,0 +1,185 @@
+"""Per-kernel sweeps: Pallas (interpret mode) vs pure-jnp ref oracles.
+
+Shapes sweep ragged/aligned lengths, GQA group sizes and dtypes; tolerances
+are dtype-dependent (bf16 inputs accumulate in f32 in both kernel and ref).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policies
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ------------------------------------------------------------ flash attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,Skv,H,Kh,D", [
+    (1, 128, 128, 4, 4, 64),     # MHA, aligned
+    (2, 256, 256, 8, 2, 64),     # GQA 4:1
+    (1, 200, 200, 4, 1, 32),     # MQA, ragged seq (pad+mask path)
+    (1, 64, 192, 2, 2, 128),     # cross-shape kv (prefill continuation)
+    (2, 96, 96, 6, 3, 16),       # odd groups, tiny head dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(B, Sq, Skv, H, Kh, D, causal, dtype):
+    if causal and Sq != Skv:
+        pytest.skip("causal requires square q/kv here")
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = rand(ks[0], (B, Sq, H, D), dtype)
+    k = rand(ks[1], (B, Skv, Kh, D), dtype)
+    v = rand(ks[2], (B, Skv, Kh, D), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, q_block=64, kv_block=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_block_size_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (1, 160, 4, 64), jnp.float32)
+    k = rand(ks[1], (1, 160, 2, 64), jnp.float32)
+    v = rand(ks[2], (1, 160, 2, 64), jnp.float32)
+    outs = [ops.flash_attention(q, k, v, causal=True, q_block=qb, kv_block=kb)
+            for qb, kb in [(32, 32), (64, 128), (128, 64), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_model_chunked_path():
+    """The kernel must agree with the XLA chunked path the models lower."""
+    from repro.models.attention import chunked_attention
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = rand(ks[0], (2, 128, 8, 32), jnp.float32)
+    k = rand(ks[1], (2, 128, 4, 32), jnp.float32)
+    v = rand(ks[2], (2, 128, 4, 32), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = chunked_attention(q, k, v, causal=True, q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------ paged attention
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Kh,D,T,P", [
+    (2, 4, 4, 64, 16, 4),
+    (3, 8, 2, 32, 8, 6),      # GQA 4:1
+    (1, 4, 1, 128, 32, 3),    # MQA
+])
+def test_paged_attention_matches_ref(B, H, Kh, D, T, P, dtype):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    n_pages = B * P + 5
+    q = rand(ks[0], (B, H, D), dtype)
+    k_pool = rand(ks[1], (n_pages, T, Kh, D), dtype)
+    v_pool = rand(ks[2], (n_pages, T, Kh, D), dtype)
+    # each sequence gets disjoint random pages (as the slab allocator would)
+    perm = jax.random.permutation(ks[3], n_pages)[: B * P]
+    block_tables = perm.reshape(B, P).astype(jnp.int32)
+    # ragged lengths incl. exactly-one-page and full
+    lens = np.linspace(1, P * T, B).astype(np.int32)
+    seq_lens = jnp.asarray(lens)
+    got = ops.paged_attention(q, k_pool, v_pool, block_tables, seq_lens)
+    want = ref.paged_attention_ref(q, k_pool, v_pool, block_tables, seq_lens)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_paged_attention_equals_dense_decode():
+    """Paged read through a shuffled pool == dense contiguous attention."""
+    B, H, Kh, D, T, P = 2, 4, 2, 32, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    q = rand(ks[0], (B, H, D), jnp.float32)
+    kv_len = 26  # inside page 3
+    k_seq = rand(ks[1], (B, P * T, Kh, D), jnp.float32)
+    v_seq = rand(ks[2], (B, P * T, Kh, D), jnp.float32)
+    # scatter the dense cache into a pool at random page slots
+    n_pages = B * P
+    perm = np.asarray(jax.random.permutation(ks[3], n_pages))
+    k_pool = np.zeros((n_pages, T, Kh, D), np.float32)
+    v_pool = np.zeros((n_pages, T, Kh, D), np.float32)
+    bt = np.zeros((B, P), np.int32)
+    for b in range(B):
+        for p in range(P):
+            phys = perm[b * P + p]
+            bt[b, p] = phys
+            k_pool[phys] = np.asarray(k_seq[b, p * T:(p + 1) * T])
+            v_pool[phys] = np.asarray(v_seq[b, p * T:(p + 1) * T])
+    seq_lens = jnp.full((B,), kv_len, jnp.int32)
+    got = ops.paged_attention(q, jnp.asarray(k_pool), jnp.asarray(v_pool),
+                              jnp.asarray(bt), seq_lens)
+    from repro.models.attention import decode_attention
+    want = decode_attention(q[:, None], k_seq, v_seq, seq_lens)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------- segment compact
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("N,E,M", [(32, 256, 16), (7, 100, 7), (64, 8192, 64),
+                                   (16, 130, 5)])
+def test_segment_compact_matches_ref(N, E, M, dtype):
+    key = jax.random.PRNGKey(5)
+    if dtype == jnp.int32:
+        pool = jax.random.randint(key, (N, E), 0, 1000, jnp.int32)
+    else:
+        pool = rand(key, (N, E), dtype)
+    src = jax.random.randint(jax.random.PRNGKey(6), (M,), 0, N, jnp.int32)
+    got = ops.segment_compact(pool, src, tile=1024)
+    want = ref.segment_compact_ref(pool, src)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -------------------------------------------------------------- mdc priority
+
+@pytest.mark.parametrize("N,S", [(100, 512), (1024, 512), (4097, 64), (3, 32)])
+def test_mdc_priority_matches_numpy_policy(N, S):
+    rng = np.random.default_rng(N)
+    live = rng.integers(0, S + 1, N)
+    up2 = rng.uniform(0, 1e6, N)
+    u_now = 1.5e6
+    got = np.asarray(ops.mdc_priority(jnp.asarray(live), jnp.asarray(up2),
+                                      u_now, S=S))
+    want = policies.key_mdc(live=live, S=S, up2=up2, u_now=u_now)
+    finite = np.isfinite(want)
+    np.testing.assert_allclose(got[finite], want[finite].astype(np.float32),
+                               rtol=1e-5)
+    assert (np.isinf(got) == ~finite).all()
+
+
+def test_mdc_priority_matches_jnp_ref():
+    rng = np.random.default_rng(0)
+    live = jnp.asarray(rng.integers(0, 129, 777))
+    up2 = jnp.asarray(rng.uniform(0, 100.0, 777))
+    got = ops.mdc_priority(live, up2, 200.0, S=128)
+    want = ref.mdc_priority_ref(live, up2, 200.0, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_mdc_select_victims_orders_like_simulator():
+    """On-device victim selection == the numpy simulator's selection."""
+    rng = np.random.default_rng(1)
+    N, S, k = 256, 128, 8
+    live = rng.integers(1, S, N)   # no empty/full edge cases: strict order
+    up2 = rng.uniform(0, 1e5, N)
+    u_now = 2e5
+    ids, valid = ops.mdc_select_victims(jnp.asarray(live), jnp.asarray(up2),
+                                        u_now, S=S, k=k)
+    want = policies.select_victims(
+        "mdc", k, live=live, S=S, up2=up2,
+        seal_time=np.zeros(N), u_now=u_now, seg_prob=np.zeros(N),
+        eligible=np.ones(N, bool))
+    assert np.asarray(valid).all()
+    np.testing.assert_array_equal(np.sort(np.asarray(ids)), np.sort(want))

@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests (reduced configs, CPU, one fwd/train step),
+plus prefill/decode-vs-forward consistency — the cache paths the serving
+engine and dry-run rely on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import Model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def smoke_batch(cfg, B=2, S=32):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.n_patches:
+        batch["patches"] = jax.random.normal(KEY, (B, cfg.n_patches, 1024),
+                                             jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).smoke()
+    m = Model(cfg)
+    params = m.init(KEY)
+    batch = smoke_batch(cfg)
+    extras = {k: v for k, v in batch.items() if k != "tokens"}
+    logits = m.forward(params, batch["tokens"], extras or None)
+    S_out = batch["tokens"].shape[1] + (cfg.n_patches or 0)
+    assert logits.shape == (2, S_out, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_no_nans(arch):
+    from repro.optim import AdamW
+    cfg = get_config(arch).smoke()
+    m = Model(cfg)
+    params = m.init(KEY)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    batch = smoke_batch(cfg)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(m.loss)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    p1, s1, l1 = step(params, opt_state, batch)
+    p2, s2, l2 = step(p1, s1, batch)
+    assert np.isfinite(float(l1)) and np.isfinite(float(l2))
+    assert float(l2) < float(l1) + 0.5  # moves, and doesn't explode
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert bool(jnp.isfinite(a.astype(jnp.float32)).all())
+        assert bool(jnp.isfinite(b.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).smoke()
+    if cfg.n_patches:
+        cfg = cfg.with_(n_patches=0)
+    m = Model(cfg)
+    params = m.init(KEY)
+    B, S, P = 2, 24, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    extras = None
+    if cfg.family == "encdec":
+        extras = {"frames": jax.random.normal(KEY, (B, cfg.n_frames, cfg.d_model),
+                                              jnp.bfloat16)}
+    full = m.forward(params, toks, extras)
+    logits_p, cache = m.prefill(params, toks[:, :P], max_len=S + 4, extras=extras)
+    np.testing.assert_allclose(np.asarray(logits_p, np.float32),
+                               np.asarray(full[:, P - 1], np.float32),
+                               atol=0.08, rtol=0.05)
+    # MLA decodes in absorbed form ((q·W_uk)·c vs q·(W_uk·c)): associativity
+    # differs in bf16, so its pointwise tolerance is wider; rank agreement is
+    # asserted instead.  Hybrid compounds bf16 KV + bf16 conv-window rounding
+    # across both block kinds.
+    atol = {"mla_moe": 1.2, "hybrid": 0.7}.get(cfg.family, 0.35)
+    dstep = jax.jit(m.decode_step)
+    agree = []
+    for t in range(P, S):
+        logits_d, cache = dstep(params, cache, toks[:, t])
+        np.testing.assert_allclose(np.asarray(logits_d, np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   atol=atol, rtol=0.1)  # bf16 cache rounding
+        agree.append(np.mean(np.argmax(np.asarray(logits_d), -1)
+                             == np.argmax(np.asarray(full[:, t]), -1)))
+    assert np.mean(agree) >= 0.85
+    assert int(cache["cur_len"][0]) == S
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-1.3b", "zamba2-7b",
+                                  "deepseek-v2-lite-16b"])
+def test_greedy_generation_runs(arch):
+    cfg = get_config(arch).smoke()
+    m = Model(cfg)
+    params = m.init(KEY)
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    logits, cache = m.prefill(params, toks, max_len=24)
+    tok = jnp.argmax(logits, -1)
+    outs = []
+    dstep = jax.jit(m.decode_step)
+    for _ in range(8):
+        logits, cache = dstep(params, cache, tok)
+        tok = jnp.argmax(logits, -1)
+        outs.append(tok)
+    out = jnp.stack(outs, 1)
+    assert out.shape == (2, 8)
+    assert bool((out >= 0).all()) and bool((out < cfg.vocab_size).all())
+
+
+def test_param_counts_full_configs():
+    """Full (non-smoke) configs should be in the advertised ballpark."""
+    expect = {  # ±25% of nameplate
+        "internvl2-76b": 70e9, "yi-34b": 34e9, "nemotron-4-340b": 340e9,
+        "qwen3-1.7b": 1.7e9, "granite-3-2b": 2.5e9, "qwen3-moe-30b-a3b": 30e9,
+        "deepseek-v2-lite-16b": 16e9, "mamba2-1.3b": 1.3e9, "zamba2-7b": 7e9,
+        "whisper-medium": 0.76e9,
+    }
+    for arch, n in expect.items():
+        m = Model(get_config(arch))
+        got = m.n_params()
+        assert 0.6 * n < got < 1.45 * n, (arch, got / 1e9)
+
+
+def test_moe_active_params():
+    m = Model(get_config("qwen3-moe-30b-a3b"))
+    active = m.n_active_params()
+    assert 2e9 < active < 5e9  # "A3B"
+    assert active < m.n_params() / 5

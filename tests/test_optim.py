@@ -1,0 +1,88 @@
+"""Optimizer, LR schedule and gradient-compression tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import AdamW
+from repro.optim.grad import (EFState, compress_grads_int8,
+                              decompress_grads_int8, init_error_feedback,
+                              topk_sparsify)
+from repro.optim.schedule import cosine_with_warmup
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0, 5.0])}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        loss, g = jax.value_and_grad(lambda p: jnp.sum(p["w"] ** 2))(p)
+        p, s = opt.update(p, g, s)
+        return p, s, loss
+
+    for _ in range(200):
+        params, state, loss = step(params, state)
+    assert float(loss) < 1e-3
+
+
+def test_adamw_clip_norm_bounds_update():
+    opt = AdamW(lr=1.0, clip_norm=1e-3)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    grads = {"w": jnp.full(4, 1e6)}
+    p1, _ = opt.update(params, grads, state)
+    # clipped grad -> bounded first-step moment/update
+    assert float(jnp.abs(p1["w"]).max()) < 10.0
+
+
+def test_cosine_warmup_schedule_shape():
+    lr = cosine_with_warmup(1.0, warmup_steps=10, total_steps=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == 1.0
+    assert 0.0 < float(lr(55)) < 1.0
+    assert abs(float(lr(100)) - 0.1) < 1e-6  # final_frac
+
+
+def test_int8_compression_roundtrip_accuracy():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)}
+    ef = init_error_feedback(g)
+    payload, ef = compress_grads_int8(g, ef)
+    back = decompress_grads_int8(payload)
+    err = np.abs(np.asarray(back["a"]) - np.asarray(g["a"]))
+    assert err.max() < np.abs(np.asarray(g["a"])).max() / 100  # 1% of amax
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Σ decompressed == Σ true grads up to the final residual (EF property)."""
+    rng = np.random.default_rng(1)
+    g0 = jnp.zeros((32,))
+    ef = init_error_feedback({"w": g0})
+    total_true = np.zeros(32)
+    total_sent = np.zeros(32)
+    for i in range(20):
+        g = {"w": jnp.asarray(rng.standard_normal(32) * 10, jnp.float32)}
+        payload, ef = compress_grads_int8(g, ef)
+        sent = decompress_grads_int8(payload)
+        total_true += np.asarray(g["w"])
+        total_sent += np.asarray(sent["w"])
+    residual = np.asarray(ef.residual["w"])
+    np.testing.assert_allclose(total_sent + residual, total_true,
+                               rtol=1e-4, atol=1e-3)
+
+
+@given(st.integers(1, 9))
+@settings(max_examples=8, deadline=None)
+def test_topk_keeps_requested_fraction(tenths):
+    frac = tenths / 10
+    x = jnp.asarray(np.random.default_rng(tenths).standard_normal((10, 10)))
+    kept = topk_sparsify(x, frac)
+    nz = int((np.asarray(kept) != 0).sum())
+    assert abs(nz - frac * 100) <= 10  # ties at the threshold
+    # kept entries are the largest-|.|
+    thresh = np.sort(np.abs(np.asarray(x)).ravel())[-nz]
+    assert (np.abs(np.asarray(kept))[np.asarray(kept) != 0] >= thresh - 1e-6).all()

@@ -1,0 +1,108 @@
+"""Unit + property tests for cleaning priorities (incl. the Maximality Lemma)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import policies as P
+
+floats = st.floats(min_value=1e-3, max_value=1e3, allow_nan=False)
+
+
+@given(st.lists(st.tuples(floats, floats), min_size=2, max_size=20), st.randoms())
+@settings(max_examples=200, deadline=None)
+def test_maximality_lemma(pairs, rnd):
+    """Paper appendix: Σ x_i·y_i is maximized by same-ordering X and Y."""
+    x = np.array([p[0] for p in pairs])
+    y = np.array([p[1] for p in pairs])
+    best = float(np.sort(x) @ np.sort(y))
+    perm = list(range(len(y)))
+    rnd.shuffle(perm)
+    assert float(np.sort(x) @ y[perm]) <= best + 1e-9 * abs(best)
+
+
+@given(st.integers(2, 200), st.integers(1, 511), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_mdc_equals_greedy_under_uniform(n, _seed, rnd):
+    """Paper §4.5: with uniform update frequency, MDC order == greedy order."""
+    rng = np.random.default_rng(abs(hash(rnd.random())) % 2**32)
+    S = 512
+    live = rng.integers(1, S, size=n)  # exclude 0 and S (ties / inf keys)
+    up2 = np.full(n, 100.0)  # uniform ⇒ same u_p2 estimate everywhere
+    u_now = 1000.0
+    k_mdc = P.key_mdc(live=live, S=S, up2=up2, u_now=u_now)
+    k_greedy = P.key_greedy(live=live, S=S)
+    assert (np.argsort(k_mdc, kind="stable") == np.argsort(k_greedy, kind="stable")).all()
+
+
+def test_mdc_prefers_cold_fuller_over_hot_emptier():
+    """The point of MDC: a hot segment that will keep emptying should wait,
+    even if it is currently emptier than a cold segment."""
+    S = 512
+    live = np.array([200, 300])       # seg0 emptier than seg1
+    up2 = np.array([990.0, 100.0])    # seg0 hot (recent u_p2), seg1 cold
+    u_now = 1000.0
+    key = P.key_mdc(live=live, S=S, up2=up2, u_now=u_now)
+    assert key[1] < key[0], "cold segment must be cleaned first"
+    # greedy would pick the emptier hot segment instead
+    kg = P.key_greedy(live=live, S=S)
+    assert kg[0] < kg[1]
+
+
+def test_empty_and_full_segments_extremes():
+    S = 64
+    live = np.array([0, S, 10])
+    key = P.key_mdc(live=live, S=S, up2=np.zeros(3), u_now=10.0)
+    assert key[0] < key[2] < key[1]  # fully-empty first, full never
+    assert np.isinf(key[1])
+
+
+def test_select_victims_ordering_and_eligibility():
+    S = 128
+    live = np.array([100, 50, 80, 128, 0])
+    eligible = np.array([True, True, False, True, True])
+    v = P.select_victims("greedy", 3, live=live, S=S, up2=np.zeros(5),
+                         seal_time=np.zeros(5), u_now=10.0,
+                         seg_prob=np.zeros(5), eligible=eligible)
+    # seg4 (empty) then seg1 (50) then seg0 (100); seg2 ineligible; seg3 full.
+    assert v.tolist() == [4, 1, 0]
+
+
+def test_cost_benefit_prefers_old_cold():
+    S = 512
+    live = np.array([300, 300])
+    seal = np.array([0.0, 900.0])
+    key = P.key_cost_benefit(live=live, S=S, seal_time=seal, u_now=1000.0)
+    assert key[0] < key[1]
+
+
+@given(st.integers(1, 100))
+@settings(max_examples=50, deadline=None)
+def test_np_jnp_mdc_keys_agree(n):
+    jax = pytest.importorskip("jax")
+    rng = np.random.default_rng(n)
+    S = 256
+    live = rng.integers(0, S + 1, size=n)
+    up2 = rng.uniform(0, 900, size=n)
+    k_np = P.key_mdc(live=live, S=S, up2=up2, u_now=1000.0)
+    k_j = np.asarray(P.jnp_key_mdc(live, S, up2, 1000.0))
+    finite = np.isfinite(k_np)
+    assert (np.isfinite(k_j) == finite).all()
+    np.testing.assert_allclose(k_j[finite], k_np[finite], rtol=1e-5)
+
+
+def test_jnp_select_victims_matches_np():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    n, S = 64, 128
+    live = rng.integers(0, S, size=n)
+    up2 = rng.uniform(0, 900, size=n)
+    elig = rng.random(n) > 0.2
+    v_np = P.select_victims("mdc", 8, live=live, S=S, up2=up2,
+                            seal_time=np.zeros(n), u_now=1000.0,
+                            seg_prob=np.zeros(n), eligible=elig)
+    key = P.jnp_key_mdc(jnp.asarray(live), S, jnp.asarray(up2), 1000.0)
+    ids, valid = P.jnp_select_victims(key, jnp.asarray(elig), 8)
+    assert np.asarray(ids)[np.asarray(valid)].tolist()[: len(v_np)] == v_np.tolist()

@@ -1,0 +1,128 @@
+"""Simulator behaviour: conservation invariants (hypothesis) + paper agreement.
+
+Big-store agreement numbers live in benchmarks/; here we use small stores and
+assert the *structural* claims: invariants hold for every policy, analytic E
+is approached on uniform, and the policy ordering under skew matches Fig 3.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.simulator import SimConfig, Simulator
+
+ALL_POLICIES = ["age", "greedy", "cost_benefit", "mdc", "mdc_opt",
+                "multilog", "multilog_opt"]
+
+
+def make_sim(policy, *, nseg=64, S=32, F=0.75, workload="uniform", seed=0, **wkw):
+    cfg = SimConfig(nseg=nseg, pages_per_seg=S, fill_factor=F, policy=policy,
+                    clean_trigger=4, clean_batch=4, buf_segs=4, seed=seed)
+    return Simulator(cfg, workload_name=workload, **wkw)
+
+
+def assert_conservation(sim):
+    """Every user page has exactly one live copy (disk ∪ buffers ∪ in-flight)."""
+    sim.store.check_invariants()
+    st = sim.store
+    written = st.page_seg != -1
+    on_disk = st.page_seg >= 0
+    staged = (st.page_seg == -2) | (st.page_seg == -3)
+    assert (written == (on_disk | staged)).all()
+    # disk live count == pages recorded as on disk
+    assert st.live_pages() == int(on_disk.sum())
+    # staged pages are exactly the buffers' contents
+    buffered = sim.user_buf.valid + sim.gc_buf.valid
+    assert int(staged.sum()) == buffered
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_invariants_hold_after_run(policy):
+    sim = make_sim(policy)
+    sim.run(20_000, chunk=997)  # odd chunk to exercise edges
+    assert_conservation(sim)
+    assert sim.store.stats.user_writes == 20_000
+    assert sim.store.stats.cleaned_segments > 0
+
+
+@pytest.mark.parametrize("policy", ["mdc", "greedy", "multilog"])
+@pytest.mark.parametrize("workload,wkw", [
+    ("hot_cold", dict(update_frac=0.9, data_frac=0.1)),
+    ("zipfian", dict(theta=0.99)),
+    ("tpcc", {}),
+])
+def test_invariants_on_skewed_workloads(policy, workload, wkw):
+    sim = make_sim(policy, workload=workload, **wkw)
+    sim.run(15_000, chunk=1003)
+    assert_conservation(sim)
+
+
+@given(st.sampled_from(ALL_POLICIES), st.integers(0, 10_000))
+@settings(max_examples=12, deadline=None)
+def test_invariants_property(policy, seed):
+    sim = make_sim(policy, nseg=32, S=16, F=0.7, seed=seed,
+                   workload="zipfian", theta=0.9)
+    sim.run(4_000, chunk=501)
+    assert_conservation(sim)
+
+
+def test_wamp_approaches_analytic_uniform():
+    """Age-based cleaning is exactly the §2.2 analysis (FIFO circular buffer);
+    at S=256 the emptiness fluctuation a policy could exploit is ~2% of S."""
+    from repro.core import analysis
+    sim = make_sim("age", nseg=512, S=256, F=0.8, workload="uniform")
+    stats = sim.run_measured(int(10 * 512 * 256), warmup_frac=0.3)
+    E_analytic = analysis.fixpoint_E(0.8)
+    assert stats.mean_E() == pytest.approx(E_analytic, rel=0.08)
+
+
+def test_policy_ordering_under_skew():
+    """Fig 3's qualitative result: MDC(-opt) < greedy < age on hot-cold."""
+    res = {}
+    for pol in ("age", "greedy", "mdc", "mdc_opt"):
+        sim = make_sim(pol, nseg=256, S=64, F=0.8,
+                       workload="hot_cold", update_frac=0.8, data_frac=0.2)
+        res[pol] = sim.run_measured(int(10 * 256 * 64), warmup_frac=0.3).wamp()
+    assert res["mdc_opt"] < res["greedy"] < res["age"]
+    assert res["mdc"] < res["greedy"]
+
+
+def test_mdc_opt_matches_table2_bound():
+    """§8.1: simulated MDC-opt ≈ the analytic minimum for hot/cold splits.
+
+    At sub-paper segment size the policy can slightly *beat* the bound by
+    exploiting per-segment emptiness fluctuations (σ_E/S ≈ sqrt(p(1-p)/S)),
+    so we assert a bracket here; benchmarks/table2 runs S=512 and tightens
+    the agreement to ~2 significant digits.
+    """
+    from repro.core import analysis
+    sim = make_sim("mdc_opt", nseg=320, S=256, F=0.8,
+                   workload="hot_cold", update_frac=0.8, data_frac=0.2)
+    stats = sim.run_measured(int(12 * 320 * 256), warmup_frac=0.4)
+    bound = analysis.min_wamp_hotcold(0.8, 0.8, 0.2)
+    assert 0.75 * bound < stats.wamp() < 1.15 * bound
+
+
+def test_first_writes_and_growth_tpcc():
+    sim = make_sim("mdc", nseg=128, S=32, F=0.6, workload="tpcc")
+    f0 = sim.store.fill_factor()
+    sim.run(40_000, chunk=800)
+    assert_conservation(sim)
+    assert sim.store.fill_factor() > f0  # inserts grew the store
+
+
+def test_deterministic_given_seed():
+    a = make_sim("mdc", seed=7, workload="zipfian", theta=0.99)
+    b = make_sim("mdc", seed=7, workload="zipfian", theta=0.99)
+    sa = a.run(10_000)
+    sb = b.run(10_000)
+    assert sa.gc_moves == sb.gc_moves and sa.sum_E_cleaned == sb.sum_E_cleaned
+
+
+def test_clean_batch_one_works():
+    cfg = SimConfig(nseg=64, pages_per_seg=32, fill_factor=0.75, policy="mdc",
+                    clean_trigger=2, clean_batch=1, buf_segs=2)
+    sim = Simulator(cfg, workload_name="uniform")
+    sim.run(10_000)
+    assert_conservation(sim)
