@@ -18,8 +18,14 @@ survivors sorted by u_p2 before re-packing (§5.3) so slow-changing chunks
 (frozen layers, embedding tables) cluster away from hot ones (optimizer
 moments).
 
-Wamp here is *bytes moved / bytes written* — checkpoint-bandwidth overhead,
-the exact quantity that competes with training-step I/O on a real cluster.
+All segment accounting ({B, B−A, C, u_p2}, seal, victim selection, the
+death clock, Wamp counters) lives in the shared byte-accounted core
+(:class:`repro.core.logstructure.ByteLog`); this module owns only what is
+physically checkpoint-shaped: segment *files*, chunk versions and their
+step pins, manifests, and restore.  Wamp here is *bytes moved / bytes
+written* — checkpoint-bandwidth overhead, the exact quantity that competes
+with training-step I/O on a real cluster (and the same ``StoreStats.wamp()``
+every other frontend reports).
 """
 
 from __future__ import annotations
@@ -31,9 +37,25 @@ import pathlib
 
 import numpy as np
 
-from ..core.policies import key_mdc_bytes
+from ..core.logstructure import USED, ByteLog, StoreStats
+
+__all__ = ["LogStructuredCheckpointStore", "ChunkVersion", "StoreStats"]
 
 _FIRST_WRITE_COLD = 0.0
+
+# store_state.json written before the unified core used the checkpoint-local
+# stats vocabulary; map those keys onto the canonical StoreStats fields so
+# pre-existing stores stay openable.
+_LEGACY_STATS_KEYS = {
+    "bytes_written": "user_bytes",
+    "bytes_moved": "gc_bytes",
+    "chunks_moved": "gc_moves",
+    "segments_cleaned": "cleaned_segments",
+}
+
+
+def _migrate_stats(d: dict) -> dict:
+    return {_LEGACY_STATS_KEYS.get(k, k): v for k, v in d.items()}
 
 
 @dataclasses.dataclass
@@ -47,28 +69,39 @@ class ChunkVersion:
     pins: set = dataclasses.field(default_factory=set)  # steps referencing
 
 
-@dataclasses.dataclass
-class Segment:
-    sid: int
-    path: pathlib.Path
-    written: int = 0          # bytes appended (B once sealed)
-    live_bytes: int = 0       # B - A
-    live_chunks: int = 0      # C
-    up2_sum: float = 0.0      # Σ up2 of appended chunks (mean at seal)
-    up2: float = 0.0          # sealed segment mean (paper §5.2.2)
-    sealed: bool = False
+class _SegView:
+    """Read-through view of one segment: core accounting + its file path."""
 
+    __slots__ = ("_core", "sid", "path")
 
-@dataclasses.dataclass
-class StoreStats:
-    bytes_written: int = 0    # user (checkpoint) bytes appended
-    bytes_moved: int = 0      # GC-relocated bytes
-    chunks_moved: int = 0
-    segments_cleaned: int = 0
-    deaths: int = 0
+    def __init__(self, core: ByteLog, sid: int, path: pathlib.Path):
+        self._core = core
+        self.sid = sid
+        self.path = path
 
-    def wamp(self) -> float:
-        return self.bytes_moved / max(self.bytes_written, 1)
+    @property
+    def written(self) -> int:          # B
+        return int(self._core.seg_written[self.sid])
+
+    @property
+    def live_bytes(self) -> int:       # B - A
+        return int(self._core.seg_live_bytes[self.sid])
+
+    @property
+    def live_chunks(self) -> int:      # C
+        return int(self._core.seg_live[self.sid])
+
+    @property
+    def up2(self) -> float:
+        return float(self._core.seg_up2[self.sid])
+
+    @property
+    def up2_sum(self) -> float:
+        return float(self._core.seg_up2sum[self.sid])
+
+    @property
+    def sealed(self) -> bool:
+        return bool(self._core.seg_state[self.sid] == USED)
 
 
 class LogStructuredCheckpointStore:
@@ -87,14 +120,20 @@ class LogStructuredCheckpointStore:
         self.gc_dead_frac = gc_dead_frac
         self.gc_batch = gc_batch
 
-        self.segments: dict[int, Segment] = {}
+        self.core = ByteLog()
+        self.segments: dict[int, _SegView] = {}
         self.versions: dict[str, list[ChunkVersion]] = {}  # key -> versions
         self.steps: dict[int, dict] = {}  # step -> manifest dict
-        self.u_now = 0.0
-        self.stats = StoreStats()
         self._open_sid: int | None = None
-        self._next_sid = 0
         self._load_state()
+
+    @property
+    def stats(self) -> StoreStats:
+        return self.core.stats
+
+    @property
+    def u_now(self) -> float:
+        return self.core.u_now
 
     # ----------------------------------------------------------- persistence
     def _state_path(self) -> pathlib.Path:
@@ -102,8 +141,8 @@ class LogStructuredCheckpointStore:
 
     def _save_state(self) -> None:
         state = {
-            "u_now": self.u_now,
-            "next_sid": self._next_sid,
+            "u_now": self.core.u_now,
+            "next_sid": self.core.next_sid,
             "open_sid": self._open_sid,
             "segments": {
                 str(s.sid): dict(written=s.written, live_bytes=s.live_bytes,
@@ -115,7 +154,7 @@ class LogStructuredCheckpointStore:
                            up2=v.up2, pins=sorted(v.pins)) for v in vs]
                 for key, vs in self.versions.items()},
             "steps": {str(k): v for k, v in self.steps.items()},
-            "stats": dataclasses.asdict(self.stats),
+            "stats": dataclasses.asdict(self.core.stats),
         }
         tmp = self._state_path().with_suffix(".tmp")
         tmp.write_text(json.dumps(state))
@@ -126,55 +165,52 @@ class LogStructuredCheckpointStore:
         if not p.exists():
             return
         state = json.loads(p.read_text())
-        self.u_now = state["u_now"]
-        self._next_sid = state["next_sid"]
+        self.core.u_now = state["u_now"]
         self._open_sid = state["open_sid"]
         for sid_s, d in state["segments"].items():
             sid = int(sid_s)
-            self.segments[sid] = Segment(sid, self._seg_path(sid), **d)
+            self.core.restore_segment(sid, **d)
+            self.segments[sid] = _SegView(self.core, sid, self._seg_path(sid))
+        self.core.next_sid = max(self.core.next_sid, state["next_sid"])
         for key, vs in state["versions"].items():
             self.versions[key] = [
                 ChunkVersion(key, v["seg"], v["offset"], v["size"], v["sha"],
                              v["up2"], set(v["pins"])) for v in vs]
         self.steps = {int(k): v for k, v in state["steps"].items()}
-        self.stats = StoreStats(**state["stats"])
+        self.core.stats = StoreStats(**_migrate_stats(state["stats"]))
 
     def _seg_path(self, sid: int) -> pathlib.Path:
         return self.root / "segments" / f"seg_{sid:06d}.bin"
 
     # -------------------------------------------------------------- segments
-    def _open_segment(self) -> Segment:
+    def _open_segment(self) -> _SegView:
         if self._open_sid is not None:
             return self.segments[self._open_sid]
-        sid = self._next_sid
-        self._next_sid += 1
-        seg = Segment(sid, self._seg_path(sid))
+        sid = self.core.alloc()
+        seg = _SegView(self.core, sid, self._seg_path(sid))
         seg.path.write_bytes(b"")
         self.segments[sid] = seg
         self._open_sid = sid
         return seg
 
-    def _seal(self, seg: Segment) -> None:
-        seg.up2 = seg.up2_sum / max(seg.live_chunks, 1)
-        seg.sealed = True
-        if self._open_sid == seg.sid:
+    def _seal(self, sid: int) -> None:
+        self.core.seal(sid)
+        if self._open_sid == sid:
             self._open_sid = None
 
-    def _append(self, data: bytes, up2: float) -> tuple[int, int]:
+    def _append(self, data: bytes, up2: float,
+                kind: str = "user") -> tuple[int, int]:
         """Append one chunk payload; returns (segment id, offset)."""
         seg = self._open_segment()
         if seg.written + len(data) > self.seg_bytes and seg.written > 0:
-            self._seal(seg)
+            self._seal(seg.sid)
             seg = self._open_segment()
         with seg.path.open("ab") as f:
             off = f.tell()
             f.write(data)
-        seg.written = off + len(data)
-        seg.live_bytes += len(data)
-        seg.live_chunks += 1
-        seg.up2_sum += up2
+        self.core.append_bytes(seg.sid, len(data), up2, kind=kind)
         if seg.written >= self.seg_bytes:
-            self._seal(seg)
+            self._seal(seg.sid)
         return seg.sid, off
 
     # ------------------------------------------------------------------ save
@@ -214,7 +250,6 @@ class LogStructuredCheckpointStore:
                 vs.append(v)
                 if up2 is None:
                     first_writes.append(v)
-                self.stats.bytes_written += len(data)
                 chunks.append(key)
             manifest["leaves"][path] = {
                 "dtype": str(arr.dtype), "shape": list(arr.shape),
@@ -226,10 +261,7 @@ class LogStructuredCheckpointStore:
         cold = min(known) if known else _FIRST_WRITE_COLD
         for v in first_writes:
             v.up2 = cold
-            seg = self.segments[v.seg]
-            seg.up2_sum += cold
-            if seg.sealed:
-                seg.up2 = seg.up2_sum / max(seg.live_chunks, 1)
+            self.core.retag_up2(v.seg, cold)
 
         self.steps[step] = manifest
         json_path = self.root / "manifests" / f"step_{step:09d}.json"
@@ -264,30 +296,27 @@ class LogStructuredCheckpointStore:
 
     def _kill(self, v: ChunkVersion) -> None:
         """A chunk version died: tick the clock, checkerboard its segment."""
-        seg = self.segments.get(v.seg)
-        if seg is None:
+        if v.seg not in self.segments:
             return
-        seg.live_bytes -= v.size
-        seg.live_chunks -= 1
-        seg.up2_sum -= v.up2
-        self.u_now += 1.0
-        self.stats.deaths += 1
+        self.core.kill_bytes(v.seg, v.size, v.up2)
         self.versions[v.key].remove(v)
         if not self.versions[v.key]:
             del self.versions[v.key]
-        if seg.sealed and seg.live_chunks == 0:
-            self._delete_segment(seg)
+        sid = v.seg
+        if self.core.seg_state[sid] == USED and self.core.seg_live[sid] == 0:
+            self._delete_segment(sid)
 
-    def _delete_segment(self, seg: Segment) -> None:
-        seg.path.unlink(missing_ok=True)
-        del self.segments[seg.sid]
-        if self._open_sid == seg.sid:
+    def _delete_segment(self, sid: int) -> None:
+        self.segments[sid].path.unlink(missing_ok=True)
+        self.core.release(np.array([sid]))
+        del self.segments[sid]
+        if self._open_sid == sid:
             self._open_sid = None
 
     # -------------------------------------------------------------------- gc
     def dead_frac(self) -> float:
-        total = sum(s.written for s in self.segments.values())
-        live = sum(s.live_bytes for s in self.segments.values())
+        total = int(self.core.seg_written.sum())
+        live = int(self.core.seg_live_bytes.sum())
         return (total - live) / max(total, 1)
 
     def maybe_gc(self) -> int:
@@ -300,22 +329,7 @@ class LogStructuredCheckpointStore:
         return cleaned
 
     def select_victims(self, k: int) -> list[int]:
-        cands = [s for s in self.segments.values()
-                 if s.sealed and s.live_bytes < s.written]
-        if not cands:
-            return []
-        live_b = np.array([s.live_bytes for s in cands], np.float64)
-        free_b = np.array([s.written - s.live_bytes for s in cands], np.float64)
-        chunks = np.array([s.live_chunks for s in cands], np.float64)
-        up2 = np.array([s.up2 for s in cands], np.float64)
-        if self.policy == "mdc":
-            key = key_mdc_bytes(live_b, free_b, chunks, up2, self.u_now)
-        elif self.policy == "greedy":
-            key = live_b / np.maximum(live_b + free_b, 1.0)
-        else:  # age
-            key = np.array([s.sid for s in cands], np.float64)
-        order = np.argsort(key)[:k]
-        return [cands[i].sid for i in order]
+        return [int(s) for s in self.core.select_victims(self.policy, k)]
 
     def gc(self, k: int | None = None) -> int:
         """Evacuate up to k victim segments; returns segments cleaned."""
@@ -326,24 +340,23 @@ class LogStructuredCheckpointStore:
         for sid in victims:
             seg = self.segments[sid]
             data = seg.path.read_bytes()
+            up2 = seg.up2
             for vs in self.versions.values():
                 for v in vs:
                     if v.seg == sid:
                         # §5.2.2 GC write: u_p2 from the containing segment
                         movers.append((v, data[v.offset:v.offset + v.size],
-                                       seg.up2))
+                                       up2))
         # §5.3: sort survivors by u_p2 (hottest together)
         movers.sort(key=lambda t: -t[2])
+        # one clean cycle: core accounts E / moved bytes and frees the victims
+        self.core.evacuate_accounting(np.asarray(victims))
         for sid in victims:
-            seg = self.segments[sid]
-            self.stats.segments_cleaned += 1
-            self._delete_segment(seg)
+            self._delete_segment(sid)  # release is idempotent on FREE segs
         for v, data, up2 in movers:
             v.up2 = up2
-            sid, off = self._append(data, up2)
+            sid, off = self._append(data, up2, kind="gc")
             v.seg, v.offset = sid, off
-            self.stats.bytes_moved += len(data)
-            self.stats.chunks_moved += 1
         return len(victims)
 
     # --------------------------------------------------------------- restore

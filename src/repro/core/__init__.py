@@ -1,13 +1,18 @@
 """The paper's contribution: MDC cleaning for log-structured stores.
 
 Public API:
-  analysis   — Table-1/Table-2 closed-form models
-  policies   — cleaning priorities (NumPy + jnp twins)
-  segment    — SegmentStore bookkeeping substrate
-  simulator  — trace-driven cleaning simulator (paper §6)
-  workloads  — uniform / hot-cold / Zipfian / TPC-C-proxy traces
+  analysis     — Table-1/Table-2 closed-form models
+  policies     — cleaning priorities (NumPy + jnp twins)
+  logstructure — the one segment-lifecycle substrate (FrameLog / ByteLog)
+                 behind the simulator, the serving KV pool, and the
+                 checkpoint store
+  segment      — SegmentStore: the simulator's thin fixed-size adapter
+  simulator    — trace-driven cleaning simulator (paper §6)
+  workloads    — uniform / hot-cold / Zipfian / TPC-C-proxy traces
 """
 
-from . import analysis, policies, segment, simulator, workloads  # noqa: F401
+from . import (analysis, logstructure, policies, segment,  # noqa: F401
+               simulator, workloads)
+from .logstructure import ByteLog, Clock, FrameLog  # noqa: F401
 from .segment import SegmentStore, StoreStats  # noqa: F401
 from .simulator import SimConfig, Simulator, run_policy  # noqa: F401

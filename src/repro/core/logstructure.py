@@ -1,0 +1,534 @@
+"""The one log-structure substrate behind every frontend.
+
+This module is the single implementation of the paper's mechanism set —
+segment lifecycle (FREE → OPEN → USED → FREE), per-segment {A, C, u_p2}
+accounting (§5.1.1), the §5.2.2 u_p2 carry-forward rules, and
+declining-cost victim selection — shared by
+
+  * the trace-driven simulator        (repro.core.simulator, via SegmentStore)
+  * the serving KV pool               (repro.serving.kvcache)
+  * the checkpoint store              (repro.checkpoint.logstore)
+
+Two accounting modes cover the paper's two page models:
+
+  FrameLog  — fixed-size pages ("frames"): a segment is ``S`` slots; A is
+              derived as (S - C)·frame_bytes.  Struct-of-arrays, fully
+              vectorized NumPy; optionally maintains item→(seg, slot)
+              back-pointers for frontends whose pages have stable logical
+              ids (the simulator).
+  ByteLog   — variable-size pages (§4.4): segments are byte extents that
+              grow monotonically; A = written − live bytes.  Segment ids
+              are never reused (they name files on disk).
+
+Both share one :class:`StoreStats` that counts frames *and* bytes, so
+``wamp()`` means the same thing everywhere: bytes relocated by cleaning per
+user byte written (≡ the frame ratio when frames are uniform).  The clock is
+pluggable (:class:`Clock`); the paper ticks it once per update/death, and
+each frontend decides what an "update" is.
+
+Victim selection is delegated to :mod:`repro.core.policies` so the np/jnp
+policy twins stay the single source of priority keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import policies as P
+
+FREE = 0  # on the free list
+OPEN = 1  # currently being filled (multi-log open segments)
+USED = 2  # sealed, eligible for cleaning
+
+IN_FLIGHT = -2  # item_seg marker: evacuated, not yet re-written
+
+
+class Clock:
+    """The paper's update clock: ticks once per user update (simulator) or
+    once per death (pool / checkpoint store) — the owner decides."""
+
+    __slots__ = ("now",)
+
+    def __init__(self, now: float = 0.0):
+        self.now = now
+
+    def tick(self, n: float = 1.0) -> float:
+        self.now += n
+        return self.now
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Cumulative counters in frames *and* bytes (paper eq. 2).
+
+    Canonical fields below; the per-frontend vocabularies (blocks/slabs for
+    the KV pool, chunks/bytes for the checkpoint store) are read-only alias
+    properties so every frontend reports the same quantities.
+    """
+
+    user_writes: int = 0       # user items (frames/blocks/chunks) written
+    user_bytes: int = 0
+    gc_moves: int = 0          # items relocated by cleaning
+    gc_bytes: int = 0
+    deaths: int = 0            # items superseded / freed
+    cleaned_segments: int = 0
+    cleanings: int = 0         # clean cycles (pool: compactions)
+    sum_E_cleaned: float = 0.0  # Σ empty-fraction of cleaned segments
+
+    def wamp(self) -> float:
+        """Write amplification: moved / written, in bytes when byte counts
+        exist (they always do unless the frontend counts its own writes)."""
+        if self.user_bytes:
+            return self.gc_bytes / self.user_bytes
+        return self.gc_moves / max(self.user_writes, 1)
+
+    def mean_E(self) -> float:
+        return self.sum_E_cleaned / max(self.cleaned_segments, 1)
+
+    def snapshot(self) -> "StoreStats":
+        return dataclasses.replace(self)
+
+    def since(self, other: "StoreStats") -> "StoreStats":
+        return StoreStats(**{
+            f.name: getattr(self, f.name) - getattr(other, f.name)
+            for f in dataclasses.fields(self)})
+
+    # -- serving-pool vocabulary ---------------------------------------------
+    @property
+    def blocks_written(self) -> int:
+        return self.user_writes
+
+    @property
+    def blocks_moved(self) -> int:
+        return self.gc_moves
+
+    @property
+    def blocks_died(self) -> int:
+        return self.deaths
+
+    @property
+    def slabs_compacted(self) -> int:
+        return self.cleaned_segments
+
+    @property
+    def sum_E_compacted(self) -> float:
+        return self.sum_E_cleaned
+
+    @property
+    def compactions(self) -> int:
+        return self.cleanings
+
+    # -- checkpoint-store vocabulary -----------------------------------------
+    @property
+    def bytes_written(self) -> int:
+        return self.user_bytes
+
+    @property
+    def bytes_moved(self) -> int:
+        return self.gc_bytes
+
+    @property
+    def chunks_moved(self) -> int:
+        return self.gc_moves
+
+    @property
+    def segments_cleaned(self) -> int:
+        return self.cleaned_segments
+
+
+@dataclasses.dataclass
+class EvacResult:
+    """Live content of an evacuated victim batch, in victim order.
+
+    ``up2_inherit`` is the §5.2.2 GC-write rule (each item takes its
+    containing segment's u_p2 mean); ``up2_slot`` is the per-frame value the
+    item was appended with (the KV pool's per-block death estimate)."""
+
+    items: np.ndarray        # slot payloads (page ids / owners) of live slots
+    up2_inherit: np.ndarray  # containing-segment u_p2 per item
+    up2_slot: np.ndarray     # per-slot appended u_p2 per item
+    segs: np.ndarray         # source segment per item
+    slots: np.ndarray        # source slot per item
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
+class LogStructureBase:
+    """Segment-lifecycle state machine + §5.1.1 accounting, SoA over nseg."""
+
+    _oom_msg = "store out of free segments (cleaning failed to keep up)"
+
+    def __init__(self, nseg: int, *, clock: Clock | None = None,
+                 use_free_list: bool = True):
+        self.nseg = int(nseg)
+        self.seg_state = np.full(nseg, FREE, dtype=np.int8)
+        self.seg_live = np.zeros(nseg, dtype=np.int64)       # C (live items)
+        self.seg_up2 = np.zeros(nseg, dtype=np.float64)      # sealed u_p2 mean
+        self.seg_up2sum = np.zeros(nseg, dtype=np.float64)   # Σ u_p2, live items
+        self.seg_seal_time = np.zeros(nseg, dtype=np.float64)
+        self.seg_prob = np.zeros(nseg, dtype=np.float64)     # oracle Σ p(item)
+        self._use_free_list = use_free_list
+        self.free_list: list[int] = (
+            list(range(nseg - 1, -1, -1)) if use_free_list else [])
+        self.clock = clock if clock is not None else Clock()
+        self.stats = StoreStats()
+
+    # the paper's update clock, read/written by frontends
+    @property
+    def u_now(self) -> float:
+        return self.clock.now
+
+    @u_now.setter
+    def u_now(self, v: float) -> None:
+        self.clock.now = v
+
+    def tick(self, n: float = 1.0) -> float:
+        return self.clock.tick(n)
+
+    def free_count(self) -> int:
+        return len(self.free_list)
+
+    # -- lifecycle ------------------------------------------------------------
+    def alloc(self) -> int:
+        """FREE → OPEN: take a segment for appending."""
+        if not self.free_list:
+            raise RuntimeError(self._oom_msg)
+        s = self.free_list.pop()
+        self.seg_state[s] = OPEN
+        return s
+
+    def seal(self, s: int, seal_time: float | None = None) -> None:
+        """OPEN → USED.  Paper §5.2.2: segment u_p2 = mean of its live
+        items' u_p2 (frozen until the segment is cleaned)."""
+        assert self.seg_state[s] == OPEN
+        live = int(self.seg_live[s])
+        self.seg_up2[s] = self.seg_up2sum[s] / live if live else self.u_now
+        self.seg_seal_time[s] = self.u_now if seal_time is None else seal_time
+        self.seg_state[s] = USED
+
+    def release(self, victims: np.ndarray) -> None:
+        """→ FREE wholesale (cleaning frees victims after evacuation)."""
+        victims = np.asarray(victims, dtype=np.int64)
+        self.seg_state[victims] = FREE
+        self.seg_live[victims] = 0
+        self.seg_up2sum[victims] = 0.0
+        self.seg_prob[victims] = 0.0
+        if self._use_free_list:
+            self.free_list.extend(int(s) for s in victims)
+
+    def _count_write(self, kind: str | None, n_items: int, n_bytes: int) -> None:
+        if kind == "user":
+            self.stats.user_writes += n_items
+            self.stats.user_bytes += n_bytes
+        # kind "gc" moves are counted once, at evacuation; kind None means the
+        # frontend does its own write accounting (the simulator counts logical
+        # updates, which include writes that die in its sort buffer).
+
+
+class FrameLog(LogStructureBase):
+    """Fixed-size-page mode: segments of ``S`` frame slots.
+
+    Slot occupancy (``slot_item``: payload id or -1) and the per-slot u_p2
+    (``slot_up2``) live here, so evacuation, death accounting and seal means
+    are computed in one place.  With ``max_items`` set, item→(seg, slot)
+    back-pointers are maintained too (the simulator's logical pages); without
+    it, items are opaque payloads (the KV pool stores sequence owners).
+    """
+
+    def __init__(self, nseg: int, frames_per_seg: int, *,
+                 frame_bytes: int = 1, max_items: int | None = None,
+                 auto_release_empty: bool = False, clock: Clock | None = None):
+        super().__init__(nseg, clock=clock)
+        self.S = int(frames_per_seg)
+        self.frame_bytes = int(frame_bytes)
+        self.auto_release_empty = auto_release_empty
+        self.seg_fill = np.zeros(nseg, dtype=np.int64)  # next free slot
+        self.slot_item = np.full((nseg, self.S), -1, dtype=np.int64)
+        self.slot_up2 = np.zeros((nseg, self.S), dtype=np.float64)
+        self.max_items = max_items
+        if max_items is not None:
+            self.item_seg = np.full(max_items, -1, dtype=np.int64)
+            self.item_slot = np.full(max_items, -1, dtype=np.int64)
+            self.item_up2 = np.zeros(max_items, dtype=np.float64)
+
+    # -- capacity -------------------------------------------------------------
+    def live_items(self) -> int:
+        return int(self.seg_live.sum())
+
+    def fill_factor(self) -> float:
+        return self.live_items() / (self.nseg * self.S)
+
+    def free_frames(self) -> int:
+        """Slots still appendable: whole free segments + open-segment room."""
+        open_room = int((self.S - self.seg_fill[self.seg_state == OPEN]).sum())
+        return self.free_count() * self.S + open_room
+
+    def room(self, s: int) -> int:
+        return self.S - int(self.seg_fill[s])
+
+    # -- writes ---------------------------------------------------------------
+    def alloc(self) -> int:
+        s = super().alloc()
+        self.seg_fill[s] = 0
+        return s
+
+    def append(self, s: int, items: np.ndarray, up2: np.ndarray,
+               probs: np.ndarray | None = None,
+               kind: str | None = None) -> np.ndarray:
+        """Append items to an OPEN segment; returns their slot indices."""
+        n = len(items)
+        start = int(self.seg_fill[s])
+        assert self.seg_state[s] == OPEN and start + n <= self.S
+        sl = slice(start, start + n)
+        self.slot_item[s, sl] = items
+        self.slot_up2[s, sl] = up2
+        self.seg_fill[s] = start + n
+        self.seg_live[s] += n
+        self.seg_up2sum[s] += float(np.sum(up2))
+        if probs is not None:
+            self.seg_prob[s] += float(np.sum(probs))
+        if self.max_items is not None:
+            slots = np.arange(start, start + n)
+            self.item_seg[items] = s
+            self.item_slot[items] = slots
+            self.item_up2[items] = up2
+        self._count_write(kind, n, n * self.frame_bytes)
+        return np.arange(start, start + n)
+
+    # -- deaths ---------------------------------------------------------------
+    def kill_slots(self, segs: np.ndarray, slots: np.ndarray,
+                   probs: np.ndarray | None = None,
+                   tick: bool = False) -> np.ndarray:
+        """Mark frames dead (their content was superseded / its owner died).
+
+        Returns the segments auto-released (sealed segments that became fully
+        empty), when ``auto_release_empty`` is on."""
+        if len(segs) == 0:
+            return np.empty(0, dtype=np.int64)
+        up2v = self.slot_up2[segs, slots]
+        self.slot_item[segs, slots] = -1
+        np.add.at(self.seg_live, segs, -1)
+        np.subtract.at(self.seg_up2sum, segs, up2v)
+        if probs is not None:
+            np.subtract.at(self.seg_prob, segs, probs)
+        self.stats.deaths += len(segs)
+        if tick:
+            self.tick(len(segs))
+        if not self.auto_release_empty:
+            return np.empty(0, dtype=np.int64)
+        cand = np.unique(segs)
+        dead = cand[self.seg_live[cand] == 0]
+        rel = dead[self.seg_state[dead] == USED]
+        if len(rel):
+            self.release(rel)
+        # a fully-dead OPEN segment keeps its state but rewinds its fill:
+        # no live item references its slots, so they are appendable again
+        rewind = dead[self.seg_state[dead] == OPEN]
+        if len(rewind):
+            self.seg_fill[rewind] = 0
+            self.slot_up2[rewind] = 0.0
+            self.seg_up2sum[rewind] = 0.0
+        return rel
+
+    def kill_items(self, items: np.ndarray,
+                   probs: np.ndarray | None = None,
+                   tick: bool = False) -> np.ndarray:
+        """Kill by logical item id (requires back-pointers).  Only call for
+        items whose current version is on disk (item_seg >= 0)."""
+        if len(items) == 0:
+            return np.empty(0, dtype=np.int64)
+        segs = self.item_seg[items]
+        assert (segs >= 0).all(), "kill_items on items not on disk"
+        return self.kill_slots(segs, self.item_slot[items], probs, tick)
+
+    # -- cleaning -------------------------------------------------------------
+    def select_victims(self, policy: str, k: int,
+                       eligible: np.ndarray | None = None) -> np.ndarray:
+        if eligible is None:
+            eligible = self.seg_state == USED
+        return P.select_victims(
+            policy, k, live=self.seg_live, S=self.S, up2=self.seg_up2,
+            seal_time=self.seg_seal_time, u_now=self.u_now,
+            seg_prob=self.seg_prob, eligible=eligible)
+
+    def evacuate(self, victims: np.ndarray) -> EvacResult:
+        """Gather victims' live frames, free the victims, account the cycle.
+
+        GC moves are counted here (once); re-appending the survivors should
+        use ``kind="gc"`` (uncounted).  With back-pointers, survivors are
+        marked IN_FLIGHT until re-written."""
+        victims = np.asarray(victims, dtype=np.int64)
+        assert (self.seg_state[victims] == USED).all()
+        rows = self.slot_item[victims]                    # (k, S)
+        mask = rows >= 0
+        r, c = np.nonzero(mask)                           # victim order, then slot
+        segs = victims[r]
+        items = rows[r, c]
+        res = EvacResult(
+            items=items,
+            up2_inherit=self.seg_up2[segs],
+            up2_slot=self.slot_up2[victims][r, c],
+            segs=segs,
+            slots=c.astype(np.int64),
+        )
+        counts = mask.sum(axis=1)
+        self.stats.sum_E_cleaned += float((1.0 - counts / self.S).sum())
+        self.stats.cleaned_segments += len(victims)
+        self.stats.gc_moves += len(items)
+        self.stats.gc_bytes += len(items) * self.frame_bytes
+        self.stats.cleanings += 1
+        self.release(victims)
+        if self.max_items is not None:
+            self.item_seg[items] = IN_FLIGHT
+            self.item_slot[items] = -1
+        return res
+
+    def release(self, victims: np.ndarray) -> None:
+        victims = np.asarray(victims, dtype=np.int64)
+        super().release(victims)
+        self.slot_item[victims] = -1
+        self.slot_up2[victims] = 0.0
+        self.seg_fill[victims] = 0
+
+    # -- invariant checks (used by property tests) ----------------------------
+    def check_invariants(self) -> None:
+        live_mask = self.slot_item >= 0
+        assert (live_mask.sum(axis=1) == self.seg_live).all(), "C != live slots"
+        assert (self.seg_live[self.seg_state == FREE] == 0).all()
+        assert self.free_count() == int((self.seg_state == FREE).sum())
+        # nothing live past the fill pointer
+        past_fill = np.arange(self.S)[None, :] >= self.seg_fill[:, None]
+        assert not (live_mask & past_fill).any(), "live frame past fill"
+        if self.max_items is None:
+            return
+        rows, cols = np.nonzero(live_mask)
+        items = self.slot_item[rows, cols]
+        assert len(np.unique(items)) == len(items), "item live in two frames"
+        assert (self.item_seg[items] == rows).all(), "item_seg back-pointer broken"
+        assert (self.item_slot[items] == cols).all(), "item_slot back-pointer broken"
+
+
+class ByteLog(LogStructureBase):
+    """Variable-size-page mode (§4.4): byte-extent segments, ids never reused.
+
+    The frontend owns payload placement (file offsets); this class owns every
+    counter the lifecycle and the victim keys read: B (written), B−A (live
+    bytes), C (live chunks), u_p2 sums and the state machine."""
+
+    def __init__(self, *, clock: Clock | None = None):
+        super().__init__(0, clock=clock, use_free_list=False)
+        self.seg_written = np.zeros(0, dtype=np.int64)     # B
+        self.seg_live_bytes = np.zeros(0, dtype=np.int64)  # B - A
+        self.next_sid = 0
+
+    def _grow_to(self, n: int) -> None:
+        if n <= self.nseg:
+            return
+        cap = max(16, 2 * self.nseg, n)
+        grow = cap - self.nseg
+
+        def pad(a, fill=0):
+            return np.concatenate([a, np.full(grow, fill, dtype=a.dtype)])
+
+        self.seg_state = pad(self.seg_state, FREE)
+        self.seg_live = pad(self.seg_live)
+        self.seg_up2 = pad(self.seg_up2)
+        self.seg_up2sum = pad(self.seg_up2sum)
+        self.seg_seal_time = pad(self.seg_seal_time)
+        self.seg_prob = pad(self.seg_prob)
+        self.seg_written = pad(self.seg_written)
+        self.seg_live_bytes = pad(self.seg_live_bytes)
+        self.nseg = cap
+
+    # -- lifecycle ------------------------------------------------------------
+    def alloc(self) -> int:
+        s = self.next_sid
+        self.next_sid += 1
+        self._grow_to(self.next_sid)
+        self.seg_state[s] = OPEN
+        return s
+
+    def seal(self, s: int, seal_time: float | None = None) -> None:
+        # age policy orders by segment id: ids are monotone in seal order
+        # (one open segment at a time), and survive state reloads.
+        super().seal(s, float(s) if seal_time is None else seal_time)
+
+    # -- writes / deaths ------------------------------------------------------
+    def append_bytes(self, s: int, nbytes: int, up2: float,
+                     kind: str | None = "user") -> None:
+        assert self.seg_state[s] == OPEN
+        self.seg_written[s] += nbytes
+        self.seg_live_bytes[s] += nbytes
+        self.seg_live[s] += 1
+        self.seg_up2sum[s] += up2
+        self._count_write(kind, 1, nbytes)
+
+    def kill_bytes(self, s: int, nbytes: int, up2: float,
+                   tick: bool = True) -> None:
+        """One chunk died (§5.2.2: the clock ticks once per death)."""
+        self.seg_live_bytes[s] -= nbytes
+        self.seg_live[s] -= 1
+        self.seg_up2sum[s] -= up2
+        self.stats.deaths += 1
+        if tick:
+            self.tick()
+
+    def retag_up2(self, s: int, delta: float) -> None:
+        """§5.2.2 first-write rule: chunks appended with a placeholder u_p2
+        are re-tagged once the batch's coldest value is known."""
+        self.seg_up2sum[s] += delta
+        if self.seg_state[s] == USED:
+            self.seg_up2[s] = self.seg_up2sum[s] / max(int(self.seg_live[s]), 1)
+
+    # -- cleaning -------------------------------------------------------------
+    def select_victims(self, policy: str, k: int,
+                       eligible: np.ndarray | None = None) -> np.ndarray:
+        n = self.next_sid
+        if eligible is None:
+            eligible = (self.seg_state[:n] == USED) & \
+                       (self.seg_live_bytes[:n] < self.seg_written[:n])
+        return P.select_victims_bytes(
+            policy, k, live_bytes=self.seg_live_bytes[:n],
+            written=self.seg_written[:n], n_chunks=self.seg_live[:n],
+            up2=self.seg_up2[:n], seal_time=self.seg_seal_time[:n],
+            u_now=self.u_now, eligible=eligible)
+
+    def evacuate_accounting(self, victims: np.ndarray) -> None:
+        """Account one clean cycle and free the victims.  The frontend reads
+        the victims' payload bytes *before* calling this, and re-appends the
+        survivors with ``kind="gc"`` (moves are counted here, once)."""
+        victims = np.asarray(victims, dtype=np.int64)
+        assert (self.seg_state[victims] == USED).all()
+        written = self.seg_written[victims].astype(np.float64)
+        live_b = self.seg_live_bytes[victims]
+        self.stats.sum_E_cleaned += float(
+            ((written - live_b) / np.maximum(written, 1.0)).sum())
+        self.stats.cleaned_segments += len(victims)
+        self.stats.gc_moves += int(self.seg_live[victims].sum())
+        self.stats.gc_bytes += int(live_b.sum())
+        self.stats.cleanings += 1
+        self.release(victims)
+
+    def release(self, victims: np.ndarray) -> None:
+        victims = np.asarray(victims, dtype=np.int64)
+        super().release(victims)
+        self.seg_written[victims] = 0
+        self.seg_live_bytes[victims] = 0
+
+    # -- persistence ----------------------------------------------------------
+    def restore_segment(self, sid: int, *, written: int, live_bytes: int,
+                        live_chunks: int, up2: float, up2_sum: float,
+                        sealed: bool) -> None:
+        """Rebuild one segment's accounting from persisted frontend state."""
+        self._grow_to(sid + 1)
+        self.next_sid = max(self.next_sid, sid + 1)
+        self.seg_state[sid] = USED if sealed else OPEN
+        self.seg_written[sid] = written
+        self.seg_live_bytes[sid] = live_bytes
+        self.seg_live[sid] = live_chunks
+        self.seg_up2[sid] = up2
+        self.seg_up2sum[sid] = up2_sum
+        self.seg_seal_time[sid] = float(sid)

@@ -110,6 +110,16 @@ _KEYS = {
 }
 
 
+def _take_smallest(key: np.ndarray, k: int) -> np.ndarray:
+    """ids of the k smallest finite keys, ascending."""
+    n_ok = int((key < _INF).sum())
+    k = min(k, n_ok)
+    if k == 0:
+        return np.empty(0, dtype=np.int64)
+    idx = np.argpartition(key, k - 1)[:k]
+    return idx[np.argsort(key[idx])]
+
+
 def select_victims(policy: str, k: int, *, live: np.ndarray, S: int,
                    up2: np.ndarray, seal_time: np.ndarray, u_now: float,
                    seg_prob: np.ndarray, eligible: np.ndarray) -> np.ndarray:
@@ -120,12 +130,28 @@ def select_victims(policy: str, k: int, *, live: np.ndarray, S: int,
     # Never pick segments with zero reclaimable space (E == 0): cleaning them
     # frees nothing (and MDC's decline is infinite there anyway).
     key = np.where(live >= S, _INF, key)
-    n_ok = int((key < _INF).sum())
-    k = min(k, n_ok)
-    if k == 0:
-        return np.empty(0, dtype=np.int64)
-    idx = np.argpartition(key, k - 1)[:k]
-    return idx[np.argsort(key[idx])]
+    return _take_smallest(key, k)
+
+
+def select_victims_bytes(policy: str, k: int, *, live_bytes: np.ndarray,
+                         written: np.ndarray, n_chunks: np.ndarray,
+                         up2: np.ndarray, seal_time: np.ndarray,
+                         u_now: float, eligible: np.ndarray) -> np.ndarray:
+    """Variable-size-page victim selection (§4.4) — the byte-accounted twin
+    of :func:`select_victims`, used by the checkpoint store's ByteLog."""
+    if policy == "mdc":
+        key = key_mdc_bytes(live_bytes, written - live_bytes, n_chunks, up2,
+                            u_now)
+    elif policy == "greedy":
+        key = live_bytes / np.maximum(written, 1.0)
+    elif policy == "age":
+        key = seal_time.astype(np.float64)
+    else:
+        raise ValueError(f"unsupported byte-mode policy: {policy!r}")
+    key = np.where(eligible, key, _INF)
+    # E == 0 segments reclaim nothing — same exclusion as the fixed-size path.
+    key = np.where(live_bytes >= written, _INF, key)
+    return _take_smallest(key, k)
 
 
 # ---------------------------------------------------------------------------
@@ -153,9 +179,14 @@ if jnp is not None:
         age = jnp.maximum(u_now - seal_time, 1.0)
         return -(E * age / (2.0 - E))
 
-    def jnp_select_victims(key, eligible, k: int):
-        """top-k smallest keys among eligible; returns (ids, valid_mask)."""
+    def jnp_select_victims(key, eligible, k: int, *, live, S):
+        """top-k smallest keys among eligible; returns (ids, valid_mask).
+
+        Mirrors :func:`select_victims` exactly, including the exclusion of
+        full segments (live >= S, nothing reclaimable) — property-tested
+        against the numpy twin."""
         key = jnp.where(eligible, key, jnp.inf)
+        key = jnp.where(live >= S, jnp.inf, key)
         neg = -key
         vals, ids = jax_top_k(neg, k)
         return ids, jnp.isfinite(vals)

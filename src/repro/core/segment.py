@@ -1,157 +1,56 @@
-"""Segment store: struct-of-arrays bookkeeping for a log-structured store.
+"""SegmentStore: the simulator's fixed-size-page view of the unified core.
 
-This is the substrate both the paper-faithful simulator (repro.core.simulator)
-and the on-device serving pool (repro.serving.kvcache) are built on.  A store
-is a set of ``nseg`` segments of ``S`` page frames each.  Pages are written
-append-only into segments; an update makes the prior frame *empty* (dead) in
-place.  Cleaning evacuates the still-live pages of victim segments and frees
-them wholesale (paper §2).
+All segment-lifecycle mechanics (open → seal → clean, §5.1.1 {A, C, u_p2}
+accounting, §5.2.2 carry-forward, victim eviction) live in
+:mod:`repro.core.logstructure`; this module is a thin adapter that exposes
+them under the paper's *page* vocabulary and maintains nothing of its own
+beyond name aliases.  A store is ``nseg`` segments of ``S`` page frames;
+pages are logical ids with back-pointers (``page_seg``/``page_slot``), so an
+update can kill its prior on-disk frame in place (paper §2).
 
-Per-segment state tracked here is exactly the paper's §5.1.1 list:
-  A  — available (free) bytes  == (S - live) * page_size for fixed-size pages
-  C  — count of live pages     (``seg_live``)
-  u_p2 — penultimate-update clock of the segment's content (``seg_up2``)
-plus the seal time (for age / cost-benefit baselines).
-
-All arrays are NumPy; the jnp twins used on-device live in
-:mod:`repro.core.policies`.
+``page_seg`` conventions (owned by the simulator): >=0 on disk in that
+segment; -1 never written; -2 staged in the user sort buffer; -3 staged as a
+GC survivor.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
 
-FREE = 0  # on the free list
-OPEN = 1  # currently being filled (multi-log open segments)
-USED = 2  # sealed, eligible for cleaning
+from .logstructure import (FREE, IN_FLIGHT, OPEN, USED,  # noqa: F401
+                           Clock, FrameLog, StoreStats)
+
+__all__ = ["FREE", "OPEN", "USED", "IN_FLIGHT", "Clock", "SegmentStore",
+           "StoreStats"]
 
 
-@dataclasses.dataclass
-class StoreStats:
-    """Cumulative counters; Wamp = gc_moves / user_writes (paper eq. 2)."""
-
-    user_writes: int = 0  # user page writes that reached the store
-    gc_moves: int = 0  # live pages relocated by cleaning
-    cleaned_segments: int = 0
-    sum_E_cleaned: float = 0.0  # Σ empty-fraction of cleaned segments
-
-    def wamp(self) -> float:
-        return self.gc_moves / max(self.user_writes, 1)
-
-    def mean_E(self) -> float:
-        return self.sum_E_cleaned / max(self.cleaned_segments, 1)
-
-    def snapshot(self) -> "StoreStats":
-        return dataclasses.replace(self)
-
-    def since(self, other: "StoreStats") -> "StoreStats":
-        return StoreStats(
-            user_writes=self.user_writes - other.user_writes,
-            gc_moves=self.gc_moves - other.gc_moves,
-            cleaned_segments=self.cleaned_segments - other.cleaned_segments,
-            sum_E_cleaned=self.sum_E_cleaned - other.sum_E_cleaned,
-        )
-
-
-class SegmentStore:
+class SegmentStore(FrameLog):
     """Fixed-size-page log-structured store with paper §5 accounting."""
 
     def __init__(self, nseg: int, pages_per_seg: int, max_pages: int):
-        self.nseg = int(nseg)
-        self.S = int(pages_per_seg)
+        super().__init__(nseg, pages_per_seg, max_items=max_pages)
         self.max_pages = int(max_pages)
+        # paper vocabulary — same arrays, no separate bookkeeping
+        self.page_seg = self.item_seg
+        self.page_slot = self.item_slot
+        self.page_up2 = self.item_up2
+        self.slot_page = self.slot_item
 
-        # Per-page state. page_seg: >=0 segment id; -1 never written; -2 in a
-        # write buffer (owned by the simulator, not by a segment yet).
-        self.page_seg = np.full(max_pages, -1, dtype=np.int64)
-        self.page_slot = np.full(max_pages, -1, dtype=np.int64)
-        # Paper §5.2.2: the u_p2 estimate carried by the *latest version* of a
-        # page.  When the version lives in a sealed segment the authoritative
-        # value is the segment mean (seg_up2); this per-page copy is what the
-        # sort-buffer clusters on and what buffer-resident versions carry.
-        self.page_up2 = np.zeros(max_pages, dtype=np.float64)
-
-        # Per-segment state (paper §5.1.1).
-        self.slot_page = np.full((nseg, self.S), -1, dtype=np.int64)
-        self.seg_live = np.zeros(nseg, dtype=np.int64)  # C
-        self.seg_up2 = np.zeros(nseg, dtype=np.float64)  # u_p2
-        self.seg_seal_time = np.zeros(nseg, dtype=np.float64)
-        self.seg_state = np.full(nseg, FREE, dtype=np.int8)
-        # Σ true update-probability of live pages (for the *-opt oracles).
-        self.seg_prob = np.zeros(nseg, dtype=np.float64)
-
-        self.free_list: list[int] = list(range(nseg - 1, -1, -1))
-        self.u_now = 0  # paper: the clock ticks once per user update
-        self.stats = StoreStats()
-
-    # -- allocation ----------------------------------------------------------
-    def free_count(self) -> int:
-        return len(self.free_list)
-
+    # -- paper-vocabulary aliases --------------------------------------------
     def live_pages(self) -> int:
-        return int(self.seg_live.sum())
+        return self.live_items()
 
-    def fill_factor(self) -> float:
-        return self.live_pages() / (self.nseg * self.S)
-
-    def alloc(self) -> int:
-        if not self.free_list:
-            raise RuntimeError("store out of free segments (cleaning failed to keep up)")
-        s = self.free_list.pop()
-        self.seg_state[s] = OPEN
-        return s
-
-    # -- writes --------------------------------------------------------------
-    def kill_pages(self, pages: np.ndarray, probs: np.ndarray | None = None) -> None:
+    def kill_pages(self, pages: np.ndarray,
+                   probs: np.ndarray | None = None) -> None:
         """Mark the on-disk frames of ``pages`` empty (they were superseded).
 
         Only call for pages whose current version is on disk (page_seg >= 0).
         """
-        if len(pages) == 0:
-            return
-        segs = self.page_seg[pages]
-        slots = self.page_slot[pages]
-        assert (segs >= 0).all(), "kill_pages on pages not on disk"
-        self.slot_page[segs, slots] = -1
-        np.add.at(self.seg_live, segs, -1)
-        if probs is not None:
-            np.subtract.at(self.seg_prob, segs, probs)
+        self.kill_items(pages, probs)
 
     def begin_segment(self) -> int:
         """Allocate an OPEN segment for incremental filling (multi-log path)."""
-        s = self.alloc()
-        self._fill_n = getattr(self, "_fill_n", np.zeros(self.nseg, dtype=np.int64))
-        self._fill_up2sum = getattr(self, "_fill_up2sum", np.zeros(self.nseg, dtype=np.float64))
-        self._fill_n[s] = 0
-        self._fill_up2sum[s] = 0.0
-        return s
-
-    def append(self, s: int, pages: np.ndarray, up2: np.ndarray,
-               probs: np.ndarray | None = None) -> int:
-        """Append pages to an OPEN segment; returns remaining capacity."""
-        n = len(pages)
-        start = int(self._fill_n[s])
-        assert self.seg_state[s] == OPEN and start + n <= self.S
-        self.slot_page[s, start:start + n] = pages
-        self.page_seg[pages] = s
-        self.page_slot[pages] = np.arange(start, start + n)
-        self.page_up2[pages] = up2
-        self.seg_live[s] += n
-        self._fill_n[s] = start + n
-        self._fill_up2sum[s] += float(up2.sum())
-        if probs is not None:
-            self.seg_prob[s] += float(probs.sum())
-        return self.S - (start + n)
-
-    def seal(self, s: int, seal_time: float | None = None) -> None:
-        """Seal an OPEN segment. Paper §5.2.2: seg u_p2 = mean of page u_p2."""
-        n = int(self._fill_n[s])
-        assert self.seg_state[s] == OPEN and n > 0
-        self.seg_up2[s] = self._fill_up2sum[s] / n
-        self.seg_seal_time[s] = self.u_now if seal_time is None else seal_time
-        self.seg_state[s] = USED
+        return self.alloc()
 
     def write_segment(
         self,
@@ -162,12 +61,11 @@ class SegmentStore:
     ) -> int:
         """Write one full (or partial) segment of pages and seal it."""
         assert 0 < len(pages) <= self.S
-        s = self.begin_segment()
+        s = self.alloc()
         self.append(s, pages, up2, probs)
         self.seal(s, seal_time)
         return s
 
-    # -- cleaning ------------------------------------------------------------
     def evacuate(self, victims: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """Read victims, return (live page ids, their u_p2), free the victims.
 
@@ -175,38 +73,5 @@ class SegmentStore:
         via :meth:`write_segment`.  Paper §5.2.2 (GC writes): each page's u_p2
         is taken from its containing segment.
         """
-        live_pages = []
-        live_up2 = []
-        for s in victims:
-            s = int(s)
-            assert self.seg_state[s] == USED
-            row = self.slot_page[s]
-            live = row[row >= 0]
-            live_pages.append(live)
-            live_up2.append(np.full(len(live), self.seg_up2[s]))
-            self.stats.sum_E_cleaned += 1.0 - len(live) / self.S
-            self.stats.cleaned_segments += 1
-            # Free the victim.
-            self.slot_page[s] = -1
-            self.seg_live[s] = 0
-            self.seg_prob[s] = 0.0
-            self.seg_state[s] = FREE
-            self.free_list.append(s)
-        pages = np.concatenate(live_pages) if live_pages else np.empty(0, np.int64)
-        up2 = np.concatenate(live_up2) if live_up2 else np.empty(0, np.float64)
-        self.page_seg[pages] = -2
-        self.page_slot[pages] = -1
-        self.stats.gc_moves += len(pages)
-        return pages, up2
-
-    # -- invariant checks (used by property tests) ----------------------------
-    def check_invariants(self) -> None:
-        live_mask = self.slot_page >= 0
-        assert (live_mask.sum(axis=1) == self.seg_live).all(), "C != live slots"
-        rows, cols = np.nonzero(live_mask)
-        pages = self.slot_page[rows, cols]
-        assert len(np.unique(pages)) == len(pages), "page live in two frames"
-        assert (self.page_seg[pages] == rows).all(), "page_seg back-pointer broken"
-        assert (self.page_slot[pages] == cols).all(), "page_slot back-pointer broken"
-        assert (self.seg_live[self.seg_state == FREE] == 0).all()
-        assert self.free_count() == int((self.seg_state == FREE).sum())
+        res = super().evacuate(victims)
+        return res.items, res.up2_inherit

@@ -395,7 +395,7 @@ class Simulator:
                 if band not in self.band_open:
                     self.band_open[band] = st.begin_segment()
             s = self.band_open[band]
-            room = self.S - int(st._fill_n[s])
+            room = st.room(s)
             take = min(room, len(pages) - i)
             chunk = pages[i:i + take]
             probs = self.w.probs[chunk]

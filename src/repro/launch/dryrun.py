@@ -38,6 +38,22 @@ def cell_id(arch, shape, mesh_kind, tag):
     return f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
 
 
+def memory_stats(compiled) -> dict:
+    """CompiledMemoryStats as a dict.  Newer jaxlibs dropped
+    ``peak_memory_in_bytes``; fall back to args+outputs+temps (an upper
+    bound on live bytes, which is what the roofline report needs)."""
+    ma = compiled.memory_analysis()
+    out = {k: int(getattr(ma, k, 0)) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "peak_memory_in_bytes",
+            "alias_size_in_bytes")}
+    if not out["peak_memory_in_bytes"]:
+        out["peak_memory_in_bytes"] = (out["argument_size_in_bytes"]
+                                       + out["output_size_in_bytes"]
+                                       + out["temp_size_in_bytes"])
+    return out
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
              overrides: dict, tag: str = "", force: bool = False) -> dict:
     mesh_kind = "multi" if multi_pod else "single"
@@ -72,12 +88,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
         compiled = lowered.compile()
         rec["t_compile_s"] = round(time.time() - t0, 2)
 
-        ma = compiled.memory_analysis()
-        rec["memory_analysis"] = {
-            k: int(getattr(ma, k)) for k in
-            ("argument_size_in_bytes", "output_size_in_bytes",
-             "temp_size_in_bytes", "peak_memory_in_bytes", "alias_size_in_bytes")
-        }
+        rec["memory_analysis"] = memory_stats(compiled)
         ca = compiled.cost_analysis() or {}
         rec["xla_cost_analysis"] = {k: float(v) for k, v in ca.items()
                                     if k in ("flops", "bytes accessed")}

@@ -20,7 +20,7 @@ from ..serving import PagedServingEngine
 def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               policy: str = "mdc", seed: int = 0, n_slabs: int = 9,
               blocks_per_slab: int = 4, page_T: int = 8, max_batch: int = 4,
-              params=None, model: Model | None = None,
+              n_open: int = 4, params=None, model: Model | None = None,
               verbose: bool = True) -> dict:
     if model is None:
         model = Model(get_config(arch).smoke())
@@ -29,7 +29,7 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              blocks_per_slab=blocks_per_slab, page_T=page_T,
                              max_batch=max_batch, max_seq=256, policy=policy,
                              params=params, compact_trigger=2,
-                             compact_batch=3)
+                             compact_batch=3, n_open=n_open)
     # mixed short/long request stream (the checkerboarding driver)
     for _ in range(requests):
         plen = int(rng.integers(4, 40))
@@ -60,6 +60,8 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--policies", nargs="*",
                     default=["mdc", "greedy", "age", "cost_benefit"])
+    ap.add_argument("--n-open", type=int, default=4,
+                    help="open slabs (lifetime buckets) for §5.3 placement")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,7 +69,8 @@ def main() -> None:
     import jax
     params = model.init(jax.random.PRNGKey(0))
     results = [serve_run(arch=args.arch, requests=args.requests, policy=p,
-                         seed=args.seed, params=params, model=model)
+                         seed=args.seed, n_open=args.n_open, params=params,
+                         model=model)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

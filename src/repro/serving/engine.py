@@ -108,7 +108,8 @@ class PagedServingEngine:
                  max_batch: int = 4, max_seq: int = 512,
                  policy: str = "mdc", use_pallas: bool = False,
                  params=None, seed: int = 0,
-                 compact_trigger: int = 2, compact_batch: int = 4):
+                 compact_trigger: int = 2, compact_batch: int = 4,
+                 n_open: int = 4):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
@@ -117,7 +118,7 @@ class PagedServingEngine:
         self.use_pallas = use_pallas
 
         self.pool = LogStructuredKVPool(
-            n_slabs, blocks_per_slab, policy=policy,
+            n_slabs, blocks_per_slab, policy=policy, n_open=n_open,
             compact_trigger=compact_trigger, compact_batch=compact_batch)
         # synchronous plan execution: tensor move + block-table remap happen
         # before any compaction-freed page id can be re-allocated
@@ -176,11 +177,12 @@ class PagedServingEngine:
         slot.to_generate = req.max_new_tokens
         slot.pages, slot.out_tokens = [], []
         n_pages = (len(req.prompt) + self.page_T - 1) // self.page_T
-        for _ in range(n_pages):
-            # NB: two statements — alloc_block may fire the compaction
-            # callback, which remaps slot.pages in place
-            page = self.pool.alloc_block(req.rid, self._est_death(slot))
-            slot.pages.append(page)
+        # batched alloc: any compaction fires (and remaps the *other* slots'
+        # pages via the callback) before these page ids are handed out
+        pages = self.pool.alloc_blocks(
+            np.full(n_pages, req.rid, dtype=np.int64),
+            np.full(n_pages, self._est_death(slot)))
+        slot.pages.extend(int(p) for p in pages)
         self.bt[i, :] = self.trash_page
         self.bt[i, :n_pages] = slot.pages
 
@@ -206,13 +208,20 @@ class PagedServingEngine:
         if not active:
             return []
 
-        # page for the incoming token must exist before the step writes it
-        for i in active:
-            slot = self.slots[i]
-            if slot.seq_len % self.page_T == 0 and \
-                    slot.seq_len // self.page_T >= len(slot.pages):
-                page = self.pool.alloc_block(slot.rid, self._est_death(slot))
-                slot.pages.append(page)
+        # pages for the incoming tokens must exist before the step writes
+        # them; one batched alloc covers every slot that crossed a page
+        # boundary (compaction, if it fires, remaps held pages first)
+        growing = [i for i in active
+                   if self.slots[i].seq_len % self.page_T == 0
+                   and self.slots[i].seq_len // self.page_T
+                   >= len(self.slots[i].pages)]
+        if growing:
+            pages = self.pool.alloc_blocks(
+                np.array([self.slots[i].rid for i in growing]),
+                np.array([self._est_death(self.slots[i]) for i in growing]))
+            for i, page in zip(growing, pages):
+                slot = self.slots[i]
+                slot.pages.append(int(page))
                 self.bt[i, len(slot.pages) - 1] = page
 
         tokens = np.zeros(self.max_batch, np.int32)

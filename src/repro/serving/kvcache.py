@@ -24,9 +24,12 @@ analogue of u_p2: death-time ≈ now + tokens-left-to-generate).  Blocks that
 will die together land in the same slab, so slabs die nearly-whole — the
 mechanism by which MDC's hot/cold separation materializes in a KV pool.
 
-Accounting lives on host (numpy — this is the block manager, as in any
-serving stack); the data path (segment_compact gather, paged_attention) is
-TPU-side (repro.kernels).
+All slab bookkeeping (free list, fill, seal, {A, C, u_p2}, eviction) lives
+in the shared :class:`repro.core.logstructure.FrameLog` substrate — this
+class owns only the serving *policy*: lifetime bucketing, the batched alloc
+surface, and the compaction plan (src page -> dst page) the engine executes
+with the ``segment_compact`` kernel.  The alloc and compaction paths are
+batched and vectorized: cost is O(slabs touched), not O(blocks).
 """
 
 from __future__ import annotations
@@ -35,26 +38,26 @@ import dataclasses
 
 import numpy as np
 
-from ..core import policies as P
-from ..core.segment import FREE, OPEN, USED
+from ..core.logstructure import FREE, OPEN, USED, FrameLog, StoreStats
 
 NO_PAGE = -1
 
+# the paper's oracle policies need per-page true update probabilities, which
+# a serving pool cannot know (a block's owner gives no death distribution)
+_SUPPORTED_POLICIES = ("mdc", "greedy", "age", "cost_benefit")
+
+PoolStats = StoreStats  # unified counters; serving names are alias properties
+
 
 @dataclasses.dataclass
-class PoolStats:
-    blocks_written: int = 0     # user block allocations (paper: user writes)
-    blocks_died: int = 0
-    blocks_moved: int = 0       # compaction relocations (paper: GC moves)
-    slabs_compacted: int = 0
-    sum_E_compacted: float = 0.0
-    compactions: int = 0
+class CompactionPlan:
+    """src/dst physical page ids (parallel arrays) + owners for remapping."""
+    src_pages: np.ndarray
+    dst_pages: np.ndarray
+    owners: np.ndarray
 
-    def wamp(self) -> float:
-        return self.blocks_moved / max(self.blocks_written, 1)
-
-    def mean_E(self) -> float:
-        return self.sum_E_compacted / max(self.slabs_compacted, 1)
+    def __len__(self) -> int:
+        return len(self.src_pages)
 
 
 class LogStructuredKVPool:
@@ -71,6 +74,11 @@ class LogStructuredKVPool:
                  policy: str = "mdc", n_open: int = 4,
                  compact_trigger: int = 2, compact_batch: int = 4,
                  horizon: float = 1e9):
+        if policy not in _SUPPORTED_POLICIES:
+            raise ValueError(
+                f"KV pool cannot run policy {policy!r}: oracle policies "
+                f"(mdc_opt) need true per-page update probabilities, which a "
+                f"serving pool does not have; supported: {_SUPPORTED_POLICIES}")
         self.n_slabs = n_slabs
         self.S = blocks_per_slab
         self.policy = policy
@@ -79,104 +87,129 @@ class LogStructuredKVPool:
         self.compact_batch = compact_batch
         self.horizon = horizon
 
-        n_pages = n_slabs * blocks_per_slab
-        self.block_owner = np.full(n_pages, -1, dtype=np.int64)  # seq id
-        self.block_death = np.zeros(n_pages, dtype=np.float64)   # est. death
+        self.core = FrameLog(n_slabs, blocks_per_slab,
+                             auto_release_empty=True)
+        self.core._oom_msg = "KV pool out of slabs (compaction failed)"
+        # Flat per-page views of the core's slot arrays (page = slab*S + slot):
+        # the owner sequence id (-1 dead/empty) and the estimated death clock.
+        self.block_owner = self.core.slot_item.reshape(-1)
+        self.block_death = self.core.slot_up2.reshape(-1)
 
-        self.slab_live = np.zeros(n_slabs, dtype=np.int64)       # C
-        self.slab_fill = np.zeros(n_slabs, dtype=np.int64)       # next slot
-        self.slab_up2 = np.zeros(n_slabs, dtype=np.float64)
-        self.slab_seal = np.zeros(n_slabs, dtype=np.float64)
-        self.slab_state = np.full(n_slabs, FREE, dtype=np.int8)
-        self.free_slabs: list[int] = list(range(n_slabs - 1, -1, -1))
-
-        self.u_now = 0.0   # block-death clock (paper: update counter)
-        self.stats = PoolStats()
-        # open slabs bucketed by expected-lifetime quantile
-        self._open: list[int] = []
-        self._open_bounds: np.ndarray = np.array([])
+        # open slabs bucketed by expected-lifetime quantile (-1: none yet)
+        self._open = np.full(n_open, -1, dtype=np.int64)
+        self._open_bounds = np.empty(0, dtype=np.float64)
         # Plan executor: the engine registers a callback that performs the
         # tensor move (kernels.segment_compact) + block-table remap.  It MUST
         # run before any page id freed by the plan can be re-allocated, so
         # the pool invokes it synchronously at plan creation.
         self.on_compaction = None  # Callable[[CompactionPlan], None] | None
         # manual mode (no callback): plans queue here; the caller must drain
-        # them before its next alloc_block
+        # them before its next alloc
         self.pending_plans: list[CompactionPlan] = []
+
+    # unified accounting lives in the core
+    @property
+    def stats(self) -> StoreStats:
+        return self.core.stats
+
+    @property
+    def u_now(self) -> float:
+        return self.core.u_now
+
+    @property
+    def free_slabs(self) -> list[int]:
+        return self.core.free_list
 
     # ------------------------------------------------------------ allocation
     def free_blocks(self) -> int:
-        return len(self.free_slabs) * self.S + sum(
-            self.S - int(self.slab_fill[s]) for s in self._open)
+        return self.core.free_frames()
 
-    def _alloc_slab(self) -> int:
-        if not self.free_slabs:
-            raise RuntimeError("KV pool out of slabs (compaction failed)")
-        s = self.free_slabs.pop()
-        self.slab_state[s] = OPEN
-        self.slab_fill[s] = 0
-        self.slab_live[s] = 0
-        return s
-
-    def _seal(self, s: int) -> None:
-        """Seal an open slab; u_p2 = mean est-death of its blocks (paper:
-        mean page u_p2 — here 'how soon will this slab's content die')."""
-        lo, hi = s * self.S, s * self.S + int(self.slab_fill[s])
-        owned = self.block_owner[lo:hi] >= 0
-        d = self.block_death[lo:hi][owned]
-        self.slab_up2[s] = float(d.mean()) if len(d) else self.u_now
-        self.slab_seal[s] = self.u_now
-        self.slab_state[s] = USED
-
-    def _bucket_of(self, est_death: float) -> int:
-        """Which open slab gets a block that is expected to die at est_death."""
-        if len(self._open_bounds) == 0:
-            return 0
-        return int(np.searchsorted(self._open_bounds, est_death))
-
-    def _ensure_open(self) -> None:
-        while len(self._open) < self.n_open and (self.free_slabs or True):
-            if not self.free_slabs:
-                break
-            self._open.append(self._alloc_slab())
-        # lifetime-quantile boundaries spread over the active horizon
-        k = max(len(self._open) - 1, 0)
-        if k:
-            deaths = self.block_death[self.block_owner >= 0]
-            if len(deaths) >= 4:
-                qs = np.quantile(deaths, np.linspace(0, 1, k + 2)[1:-1])
-                self._open_bounds = np.sort(qs)
-            else:
-                self._open_bounds = np.full(k, self.u_now + self.horizon)
+    def _refresh_open_bounds(self) -> None:
+        """Lifetime-quantile boundaries spread over the active horizon."""
+        k = self.n_open - 1
+        if k <= 0:
+            self._open_bounds = np.empty(0, dtype=np.float64)
+            return
+        deaths = self.block_death[self.block_owner >= 0]
+        if len(deaths) >= 4:
+            qs = np.quantile(deaths, np.linspace(0, 1, k + 2)[1:-1])
+            self._open_bounds = np.sort(qs)
         else:
-            self._open_bounds = np.array([])
+            self._open_bounds = np.full(k, self.u_now + self.horizon)
+
+    def _open_slab(self, bucket: int) -> int:
+        """Open slab for ``bucket``, allocating or borrowing as needed."""
+        s = int(self._open[bucket])
+        if s >= 0:
+            return s
+        if self.core.free_count():
+            s = self.core.alloc()
+            self._open[bucket] = s
+            return s
+        # no free slab for this lifetime class: borrow any open slab with room
+        for b in np.argsort(np.abs(np.arange(self.n_open) - bucket)):
+            s = int(self._open[b])
+            if s >= 0 and self.core.room(s):
+                return s
+        raise RuntimeError("KV pool: no open slab (all slabs sealed+full)")
+
+    def _place(self, owners: np.ndarray, deaths: np.ndarray,
+               kind: str) -> np.ndarray:
+        """Append blocks into lifetime-bucketed open slabs; returns page ids.
+
+        Vectorized: one core.append per (bucket, slab) run — O(slabs touched),
+        not O(blocks).  Capacity must exist (the callers guarantee it), so no
+        compaction can fire mid-placement.
+        """
+        n = len(owners)
+        out = np.empty(n, dtype=np.int64)
+        self._refresh_open_bounds()
+        buckets = (np.searchsorted(self._open_bounds, deaths)
+                   if len(self._open_bounds) else np.zeros(n, dtype=np.int64))
+        for b in np.unique(buckets):
+            idx = np.flatnonzero(buckets == b)
+            pos = 0
+            while pos < len(idx):
+                s = self._open_slab(int(b))
+                take = min(self.core.room(s), len(idx) - pos)
+                sel = idx[pos:pos + take]
+                slots = self.core.append(s, owners[sel], deaths[sel],
+                                         kind=kind)
+                out[sel] = s * self.S + slots
+                pos += take
+                if self.core.room(s) == 0:
+                    self.core.seal(s)
+                    self._open[self._open == s] = -1
+        return out
+
+    def alloc_blocks(self, seq_ids: np.ndarray,
+                     est_deaths: np.ndarray) -> np.ndarray:
+        """Allocate one pool page per entry; returns physical page ids.
+
+        ``est_deaths``: estimated clock values at which each block will die
+        (now + expected remaining tokens of its sequence).  Drives the §5.3
+        placement: similar-death blocks share a slab.  Compaction fires
+        *before* placement when free slabs run low, so page ids handed out by
+        one call are never moved by that same call.
+        """
+        seq_ids = np.asarray(seq_ids, dtype=np.int64)
+        est_deaths = np.asarray(est_deaths, dtype=np.float64)
+        n = len(seq_ids)
+        if n == 0:
+            return np.empty(0, dtype=np.int64)
+        while (self.core.free_count() <= self.compact_trigger
+               or self.core.free_frames() < n):
+            before = self.core.free_frames()
+            if self.compact() is None or self.core.free_frames() <= before:
+                break
+        if self.core.free_frames() < n:
+            raise RuntimeError("KV pool out of slabs (compaction failed)")
+        return self._place(seq_ids, est_deaths, kind="user")
 
     def alloc_block(self, seq_id: int, est_death: float) -> int:
-        """Allocate one pool page for ``seq_id``; returns the physical page id.
-
-        ``est_death``: estimated clock value at which the block will die
-        (now + expected remaining tokens of its sequence).  Drives the §5.3
-        placement: similar-death blocks share a slab.
-        """
-        while len(self.free_slabs) <= self.compact_trigger:
-            if self.compact() is None:
-                break
-        self._ensure_open()
-        if not self._open:
-            raise RuntimeError("KV pool: no open slab (all slabs sealed+full)")
-        b = min(self._bucket_of(est_death), len(self._open) - 1)
-        s = self._open[b]
-        slot = int(self.slab_fill[s])
-        page = s * self.S + slot
-        self.slab_fill[s] = slot + 1
-        self.slab_live[s] += 1
-        self.block_owner[page] = seq_id
-        self.block_death[page] = est_death
-        self.stats.blocks_written += 1
-        if slot + 1 == self.S:
-            self._seal(s)
-            self._open.pop(b)
-        return page
+        """Single-block convenience wrapper over :meth:`alloc_blocks`."""
+        return int(self.alloc_blocks(np.array([seq_id]),
+                                     np.array([est_death]))[0])
 
     # --------------------------------------------------------------- death
     def free_pages(self, pages: np.ndarray) -> None:
@@ -186,30 +219,15 @@ class LogStructuredKVPool:
         if len(pages) == 0:
             return
         assert (self.block_owner[pages] >= 0).all(), "double free"
-        self.block_owner[pages] = -1
-        slabs = pages // self.S
-        np.add.at(self.slab_live, slabs, -1)
-        self.u_now += len(pages)
-        self.stats.blocks_died += len(pages)
-        # open slabs whose blocks all died stay open (slots are append-only);
-        # sealed slabs that are now fully dead are reclaimed for free
-        for s in np.unique(slabs):
-            if self.slab_state[s] == USED and self.slab_live[s] == 0:
-                self._release(int(s))
-
-    def _release(self, s: int) -> None:
-        self.slab_state[s] = FREE
-        self.slab_fill[s] = 0
-        self.free_slabs.append(s)
+        # sealed slabs that become fully dead are reclaimed for free by the
+        # core (auto_release_empty); open slabs stay open (append-only slots)
+        self.core.kill_slots(pages // self.S, pages % self.S, tick=True)
 
     # ----------------------------------------------------------- compaction
     def select_victims(self, k: int | None = None) -> np.ndarray:
-        eligible = (self.slab_state == USED) & (self.slab_live < self.S)
-        return P.select_victims(
-            self.policy, k or self.compact_batch,
-            live=self.slab_live, S=self.S, up2=self.slab_up2,
-            seal_time=self.slab_seal, u_now=self.u_now,
-            seg_prob=np.zeros(self.n_slabs), eligible=eligible)
+        eligible = (self.core.seg_state == USED) & (self.core.seg_live < self.S)
+        return self.core.select_victims(self.policy, k or self.compact_batch,
+                                        eligible=eligible)
 
     def maybe_compact(self):
         """Compact if free space is low.  Returns a plan or None.
@@ -217,7 +235,7 @@ class LogStructuredKVPool:
         The caller (engine) must execute the returned plan on the tensor pool
         (kernels.segment_compact) and remap its block tables.
         """
-        if len(self.free_slabs) > self.compact_trigger:
+        if self.core.free_count() > self.compact_trigger:
             return None
         return self.compact()
 
@@ -226,44 +244,15 @@ class LogStructuredKVPool:
         victims = self.select_victims()
         if len(victims) == 0:
             return None
-        src = []
-        for s in victims:
-            lo, hi = s * self.S, s * self.S + int(self.slab_fill[s])
-            live = np.nonzero(self.block_owner[lo:hi] >= 0)[0] + lo
-            src.append(live)
-            self.stats.sum_E_compacted += 1.0 - len(live) / self.S
-            self.stats.slabs_compacted += 1
-        src = np.concatenate(src) if src else np.empty(0, np.int64)
-        # §5.3: sort survivors by expected death so they re-cluster
-        src = src[np.argsort(self.block_death[src], kind="stable")]
-
-        owners = self.block_owner[src].copy()
-        deaths = self.block_death[src].copy()
-        # free the victims wholesale
-        for s in victims:
-            lo = s * self.S
-            self.block_owner[lo:lo + self.S] = -1
-            self.slab_live[s] = 0
-            self._release(int(s))
-        # re-place survivors into fresh slabs (append-only, sorted order)
+        res = self.core.evacuate(victims)
+        src = res.segs * self.S + res.slots
+        # §5.3: sort survivors by expected death so they re-cluster; the
+        # victims were freed above, so capacity for the survivors exists.
+        order = np.argsort(res.up2_slot, kind="stable")
         dst = np.empty(len(src), dtype=np.int64)
-        for i, (o, d) in enumerate(zip(owners, deaths)):
-            self._ensure_open()
-            b = min(self._bucket_of(d), len(self._open) - 1)
-            s = self._open[b]
-            slot = int(self.slab_fill[s])
-            page = s * self.S + slot
-            self.slab_fill[s] = slot + 1
-            self.slab_live[s] += 1
-            self.block_owner[page] = o
-            self.block_death[page] = d
-            dst[i] = page
-            if slot + 1 == self.S:
-                self._seal(s)
-                self._open.pop(b)
-        self.stats.blocks_moved += len(src)
-        self.stats.compactions += 1
-        plan = CompactionPlan(src_pages=src, dst_pages=dst, owners=owners)
+        dst[order] = self._place(res.items[order], res.up2_slot[order],
+                                 kind="gc")
+        plan = CompactionPlan(src_pages=src, dst_pages=dst, owners=res.items)
         if self.on_compaction is not None:
             self.on_compaction(plan)
         else:
@@ -272,24 +261,6 @@ class LogStructuredKVPool:
 
     # ------------------------------------------------------------ invariants
     def check_invariants(self) -> None:
-        for s in range(self.n_slabs):
-            lo, hi = s * self.S, (s + 1) * self.S
-            owned = int((self.block_owner[lo:hi] >= 0).sum())
-            assert owned == self.slab_live[s], (s, owned, self.slab_live[s])
-            if self.slab_state[s] == FREE:
-                assert owned == 0
-            owned_slots = np.nonzero(self.block_owner[lo:hi] >= 0)[0]
-            if len(owned_slots):
-                assert owned_slots.max() < self.slab_fill[s], "write past fill"
-        assert len(self.free_slabs) == int((self.slab_state == FREE).sum())
-
-
-@dataclasses.dataclass
-class CompactionPlan:
-    """src/dst physical page ids (parallel arrays) + owners for remapping."""
-    src_pages: np.ndarray
-    dst_pages: np.ndarray
-    owners: np.ndarray
-
-    def __len__(self) -> int:
-        return len(self.src_pages)
+        self.core.check_invariants()
+        open_ids = self._open[self._open >= 0]
+        assert (self.core.seg_state[open_ids] == OPEN).all()

@@ -89,6 +89,28 @@ def test_wamp_accounting(tmp_path):
     assert st.wamp() == st.bytes_moved / st.bytes_written
 
 
+def test_legacy_state_stats_still_load(tmp_path):
+    """store_state.json written before the unified core used the
+    checkpoint-local stats vocabulary; those stores must stay openable."""
+    import json
+    store = make_store(tmp_path)
+    t = tree_of(5)
+    store.save(5, t)
+    p = store._state_path()
+    state = json.loads(p.read_text())
+    s = state["stats"]
+    state["stats"] = {"bytes_written": s["user_bytes"],
+                      "bytes_moved": s["gc_bytes"],
+                      "chunks_moved": s["gc_moves"],
+                      "segments_cleaned": s["cleaned_segments"],
+                      "deaths": s["deaths"]}
+    p.write_text(json.dumps(state))
+    store2 = make_store(tmp_path)
+    np.testing.assert_array_equal(store2.restore(5)["leaf1"], t["leaf1"])
+    assert store2.stats.bytes_written == s["user_bytes"]
+    store2.check_invariants()
+
+
 def test_persistence_across_reopen(tmp_path):
     store = make_store(tmp_path)
     t = tree_of(42)

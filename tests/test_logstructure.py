@@ -1,0 +1,192 @@
+"""Unit tests for the unified log-structure core (repro.core.logstructure).
+
+Every frontend (simulator SegmentStore, serving KV pool, checkpoint ByteLog)
+rides on this substrate, so its lifecycle + accounting semantics are pinned
+here directly: seal means, §5.2.2 u_p2 maintenance under deaths, evacuation
+accounting, auto-release, and the frames/bytes StoreStats unification.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.logstructure import (FREE, IN_FLIGHT, OPEN, USED, ByteLog,
+                                     Clock, FrameLog, StoreStats)
+
+
+# ----------------------------------------------------------------- StoreStats
+
+def test_stats_aliases_are_one_set_of_counters():
+    st = StoreStats(user_writes=10, user_bytes=40, gc_moves=3, gc_bytes=12,
+                    deaths=5, cleaned_segments=2, cleanings=1,
+                    sum_E_cleaned=1.5)
+    # serving vocabulary
+    assert st.blocks_written == 10 and st.blocks_moved == 3
+    assert st.blocks_died == 5 and st.slabs_compacted == 2
+    assert st.compactions == 1 and st.sum_E_compacted == 1.5
+    # checkpoint vocabulary
+    assert st.bytes_written == 40 and st.bytes_moved == 12
+    assert st.chunks_moved == 3 and st.segments_cleaned == 2
+    # wamp is the byte ratio when bytes are counted, the frame ratio otherwise
+    assert st.wamp() == 12 / 40
+    assert StoreStats(user_writes=10, gc_moves=3).wamp() == 3 / 10
+    assert st.mean_E() == 1.5 / 2
+    d = st.since(StoreStats(user_writes=4, user_bytes=16))
+    assert d.user_writes == 6 and d.user_bytes == 24 and d.gc_moves == 3
+
+
+# ------------------------------------------------------------------- FrameLog
+
+def test_framelog_lifecycle_and_seal_mean():
+    log = FrameLog(4, 4)
+    s = log.alloc()
+    assert log.seg_state[s] == OPEN
+    slots = log.append(s, np.array([7, 8, 9, 10]),
+                       np.array([1.0, 2.0, 3.0, 6.0]), kind="user")
+    assert slots.tolist() == [0, 1, 2, 3]
+    assert log.room(s) == 0
+    log.seal(s)
+    assert log.seg_state[s] == USED
+    assert log.seg_up2[s] == pytest.approx(3.0)  # mean of live u_p2
+    assert log.stats.user_writes == 4 and log.stats.user_bytes == 4
+
+
+def test_framelog_kill_slots_updates_up2_sum():
+    """§5.2.2: the seal mean is over *live* content — deaths in an open
+    segment drop out of the mean."""
+    log = FrameLog(4, 4)
+    s = log.alloc()
+    log.append(s, np.array([1, 2, 3]), np.array([10.0, 20.0, 90.0]))
+    log.kill_slots(np.array([s]), np.array([2]))  # kill the 90.0 outlier
+    log.seal(s)
+    assert log.seg_up2[s] == pytest.approx(15.0)
+    assert log.seg_live[s] == 2
+    assert log.stats.deaths == 1
+
+
+def test_framelog_evacuate_accounting_and_order():
+    log = FrameLog(4, 3)
+    a, b = log.alloc(), log.alloc()
+    log.append(a, np.array([1, 2, 3]), np.array([1.0, 2.0, 3.0]))
+    log.append(b, np.array([4, 5]), np.array([4.0, 5.0]))
+    log.seal(a)
+    log.seal(b)
+    log.kill_slots(np.array([a, b]), np.array([1, 0]))  # kill items 2 and 4
+    res = log.evacuate(np.array([a, b]))
+    assert res.items.tolist() == [1, 3, 5]           # victim order, slot order
+    assert res.segs.tolist() == [a, a, b]
+    assert res.up2_slot.tolist() == [1.0, 3.0, 5.0]
+    # GC write rule: items inherit their containing segment's u_p2 mean
+    # (frozen at seal: a sealed (1+2+3)/3, b sealed (4+5)/2)
+    assert res.up2_inherit.tolist() == pytest.approx([2.0, 2.0, 4.5])
+    assert log.stats.gc_moves == 3 and log.stats.cleaned_segments == 2
+    assert log.stats.cleanings == 1
+    assert log.stats.sum_E_cleaned == pytest.approx((1 / 3) + (2 / 3))
+    assert (log.seg_state[[a, b]] == FREE).all()
+    assert log.free_count() == 4
+    log.check_invariants()
+
+
+def test_framelog_item_backpointers_and_inflight():
+    log = FrameLog(2, 2, max_items=8)
+    s = log.alloc()
+    log.append(s, np.array([5, 6]), np.array([1.0, 2.0]))
+    log.seal(s)
+    assert log.item_seg[5] == s and log.item_slot[6] == 1
+    res = log.evacuate(np.array([s]))
+    assert (log.item_seg[res.items] == IN_FLIGHT).all()
+    log.check_invariants()
+
+
+def test_framelog_auto_release_and_open_rewind():
+    log = FrameLog(3, 2, auto_release_empty=True)
+    sealed = log.alloc()
+    log.append(sealed, np.array([1, 2]), np.zeros(2))
+    log.seal(sealed)
+    opened = log.alloc()
+    log.append(opened, np.array([3]), np.zeros(1))
+    free0 = log.free_count()
+    # sealed segment fully dies -> released for free (no cleaning cost)
+    rel = log.kill_slots(np.array([sealed, sealed]), np.array([0, 1]))
+    assert rel.tolist() == [sealed]
+    assert log.free_count() == free0 + 1
+    assert log.stats.cleaned_segments == 0  # not a cleaning
+    # open segment fully dies -> stays OPEN but its fill rewinds
+    log.kill_slots(np.array([opened]), np.array([0]))
+    assert log.seg_state[opened] == OPEN and log.room(opened) == log.S
+    log.check_invariants()
+
+
+def test_framelog_free_frames_counts_open_room():
+    log = FrameLog(3, 4)
+    assert log.free_frames() == 12
+    s = log.alloc()
+    log.append(s, np.array([1]), np.zeros(1))
+    assert log.free_frames() == 2 * 4 + 3
+
+
+# -------------------------------------------------------------------- ByteLog
+
+def test_bytelog_accounting_roundtrip():
+    log = ByteLog()
+    s = log.alloc()
+    log.append_bytes(s, 100, 1.0)
+    log.append_bytes(s, 50, 3.0)
+    assert log.seg_written[s] == 150 and log.seg_live_bytes[s] == 150
+    assert log.seg_live[s] == 2
+    log.kill_bytes(s, 100, 1.0)
+    assert log.seg_live_bytes[s] == 50 and log.seg_live[s] == 1
+    assert log.u_now == 1.0  # clock ticks once per death
+    log.seal(s)
+    assert log.seg_up2[s] == pytest.approx(3.0)
+    assert log.stats.user_bytes == 150 and log.stats.deaths == 1
+    assert log.stats.wamp() == 0.0
+
+
+def test_bytelog_ids_grow_and_never_recycle():
+    log = ByteLog()
+    ids = [log.alloc() for _ in range(40)]  # forces several array growths
+    assert ids == list(range(40))
+    for s in ids:
+        log.append_bytes(s, 10, 0.0)
+        log.seal(s)
+    log.evacuate_accounting(np.array(ids[:5]))
+    assert log.alloc() == 40
+    assert (log.seg_state[ids[:5]] == FREE).all()
+    assert log.stats.cleaned_segments == 5
+
+
+def test_bytelog_select_victims_policies():
+    log = ByteLog()
+    # seg0: very dead, cold; seg1: barely dead; seg2: full (ineligible)
+    for nbytes_live, nbytes_dead in ((10, 90), (80, 20), (100, 0)):
+        s = log.alloc()
+        log.append_bytes(s, nbytes_live + nbytes_dead, 0.0)
+        log.seal(s)
+        if nbytes_dead:
+            log.kill_bytes(s, nbytes_dead, 0.0)
+    for policy in ("mdc", "greedy", "age"):
+        v = log.select_victims(policy, 3)
+        assert 2 not in v, "full segment must never be selected"
+    assert log.select_victims("greedy", 1).tolist() == [0]
+    with pytest.raises(ValueError):
+        log.select_victims("mdc_opt", 1)
+
+
+def test_bytelog_restore_segment_roundtrip():
+    log = ByteLog()
+    log.restore_segment(7, written=100, live_bytes=60, live_chunks=3,
+                        up2=2.5, up2_sum=7.5, sealed=True)
+    assert log.next_sid == 8
+    assert log.seg_state[7] == USED
+    assert log.seg_written[7] == 100 and log.seg_live[7] == 3
+    assert log.alloc() == 8
+
+
+def test_clock_is_pluggable():
+    clk = Clock(100.0)
+    log = FrameLog(2, 2, clock=clk)
+    assert log.u_now == 100.0
+    log.tick(5)
+    assert clk.now == 105.0
+    log.u_now = 42.0
+    assert clk.now == 42.0

@@ -3,8 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # degrades to skips without hypothesis
 
 from repro.optim import AdamW
 from repro.optim.grad import (EFState, compress_grads_int8,

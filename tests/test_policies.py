@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core import policies as P
 
@@ -104,5 +103,46 @@ def test_jnp_select_victims_matches_np():
                             seal_time=np.zeros(n), u_now=1000.0,
                             seg_prob=np.zeros(n), eligible=elig)
     key = P.jnp_key_mdc(jnp.asarray(live), S, jnp.asarray(up2), 1000.0)
-    ids, valid = P.jnp_select_victims(key, jnp.asarray(elig), 8)
+    ids, valid = P.jnp_select_victims(key, jnp.asarray(elig), 8,
+                                      live=jnp.asarray(live), S=S)
     assert np.asarray(ids)[np.asarray(valid)].tolist()[: len(v_np)] == v_np.tolist()
+
+
+@given(st.integers(0, 10_000), st.sampled_from(["mdc", "greedy",
+                                                "cost_benefit"]))
+@settings(max_examples=60, deadline=None)
+def test_jnp_select_victims_parity_with_full_segments(seed, policy):
+    """The np/jnp twins must agree on every policy *including* the exclusion
+    of full segments (live == S: zero reclaimable space).  Ties (greedy keys
+    are small ints) can be broken differently, so we compare the selected
+    key multiset, not ids."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    n, S, k = 40, 64, 6
+    live = rng.integers(0, S + 1, size=n)   # inclusive: full segments occur
+    up2 = rng.uniform(0, 900, size=n)
+    seal = rng.uniform(0, 900, size=n)
+    elig = rng.random(n) > 0.3
+    u_now = 1000.0
+    v_np = P.select_victims(policy, k, live=live, S=S, up2=up2,
+                            seal_time=seal, u_now=u_now,
+                            seg_prob=np.zeros(n), eligible=elig)
+    if policy == "mdc":
+        key = P.jnp_key_mdc(jnp.asarray(live), S, jnp.asarray(up2), u_now)
+        key_np = P.key_mdc(live=live, S=S, up2=up2, u_now=u_now)
+    elif policy == "greedy":
+        key = P.jnp_key_greedy(jnp.asarray(live), S)
+        key_np = P.key_greedy(live=live, S=S)
+    else:
+        key = P.jnp_key_cost_benefit(jnp.asarray(live), S,
+                                     jnp.asarray(seal), u_now)
+        key_np = P.key_cost_benefit(live=live, S=S, seal_time=seal,
+                                    u_now=u_now)
+    ids, valid = P.jnp_select_victims(key, jnp.asarray(elig), k,
+                                      live=jnp.asarray(live), S=S)
+    v_j = np.asarray(ids)[np.asarray(valid)]
+    assert len(v_j) == len(v_np)
+    assert (elig[v_j]).all() and (live[v_j] < S).all()
+    np.testing.assert_allclose(np.sort(key_np[v_j]), np.sort(key_np[v_np]),
+                               rtol=1e-5)

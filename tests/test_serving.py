@@ -8,8 +8,7 @@ how often slabs are evacuated and block tables rewritten.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # degrades to skips without hypothesis
 
 from repro.configs import get_config
 from repro.models import Model
@@ -49,6 +48,32 @@ def test_pool_compaction_reclaims_checkerboard():
     assert (pool.block_owner[plan.dst_pages] >= 200).all()
     # victims' frames were actually the short-lived checkerboard
     assert pool.stats.blocks_moved == len(plan)
+
+
+def test_pool_batched_alloc_matches_singles():
+    """alloc_blocks is the hot-path API: one call must behave like the loop
+    of alloc_block calls (same count, unique pages, correct owners/deaths)."""
+    pool = LogStructuredKVPool(8, 4, policy="mdc", compact_trigger=1,
+                               compact_batch=2, n_open=2)
+    seq_ids = np.array([7, 7, 7, 9, 9, 11])
+    deaths = np.array([50.0, 50.0, 50.0, 9.0, 9.0, 1e6])
+    pages = pool.alloc_blocks(seq_ids, deaths)
+    assert len(np.unique(pages)) == 6
+    assert (pool.block_owner[pages] == seq_ids).all()
+    assert (pool.block_death[pages] == deaths).all()
+    assert pool.stats.blocks_written == 6
+    pool.check_invariants()
+    pool.free_pages(pages)
+    pool.check_invariants()
+    assert pool.stats.blocks_died == 6
+    assert (pool.block_owner[pages] == -1).all()
+
+
+def test_pool_rejects_oracle_policy():
+    """The pool has no true update probabilities: mdc_opt must fail loudly
+    instead of silently degenerating on seg_prob == 0."""
+    with pytest.raises(ValueError, match="mdc_opt"):
+        LogStructuredKVPool(8, 4, policy="mdc_opt")
 
 
 @given(st.integers(0, 1000), st.sampled_from(["mdc", "greedy", "age",
@@ -141,6 +166,51 @@ def test_engine_continuous_batching_many_requests(smoke_model):
     m = eng.metrics()
     assert m["blocks_written"] > 0
     assert m["free_blocks"] == eng.pool.n_slabs * eng.pool.S  # all freed
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_engine_compaction_plan_execution_consistent(smoke_model, use_pallas):
+    """Run a tiny pool until compaction fires and assert, after every step,
+    that block tables, pool ownership and the core invariants stay mutually
+    consistent — on both the ref path and the pallas (interpret) path.  The
+    decoded tokens must match the dense reference, which is the oracle that
+    the *tensor* moves (kernels.segment_compact) followed the plan."""
+    prompt = (np.arange(3, 30) * 5) % smoke_model.cfg.vocab_size
+    n_new = 10
+    params, want = _dense_reference_decode(smoke_model, prompt, n_new)
+    eng = PagedServingEngine(smoke_model, n_slabs=7, blocks_per_slab=2,
+                             page_T=8, max_batch=3, max_seq=96,
+                             policy="mdc", params=params, n_open=1,
+                             compact_trigger=2, compact_batch=3,
+                             use_pallas=use_pallas)
+    rid = eng.submit(prompt, n_new)
+    rng = np.random.default_rng(1)
+    side = [eng.submit(rng.integers(1, 100, size=l), n)
+            for l, n in [(5, 8), (11, 6), (3, 12)]]
+    for step in range(10_000):
+        eng.step()
+        if step % 3 == 2:
+            # compaction is legal at any time; force extra cycles so the
+            # plan-execution path runs many times, not just under pressure
+            eng.pool.compact()
+        eng.pool.check_invariants()
+        for i, slot in enumerate(eng.slots):
+            if not slot.active:
+                continue
+            pages = np.asarray(slot.pages)
+            # block table rows mirror the slot's page list exactly
+            assert (eng.bt[i, :len(pages)] == pages).all()
+            assert (eng.bt[i, len(pages):] == eng.trash_page).all()
+            # every held page is owned by this sequence in the pool
+            assert (eng.pool.block_owner[pages] == slot.rid).all()
+        if not eng.queue and not any(s.active for s in eng.slots):
+            break
+    assert eng.metrics()["compactions"] >= 2, "config must force compactions"
+    assert eng.finished[rid] == want
+    for r, n in zip(side, [8, 6, 12]):
+        assert len(eng.finished[r]) == n
+    assert eng.metrics()["free_blocks"] == eng.pool.n_slabs * eng.pool.S
 
 
 @pytest.mark.parametrize("policy", ["mdc", "greedy", "age"])

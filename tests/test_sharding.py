@@ -10,8 +10,7 @@ import textwrap
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # degrades to skips without hypothesis
 
 import jax
 from jax.sharding import Mesh
@@ -71,6 +70,13 @@ DRYRUN_SNIPPET = textwrap.dedent("""
     from repro.launch.steps import build_cell
     from repro.roofline.hlo_cost import HloCost
 
+    def peak_bytes(ma):
+        # newer jaxlibs dropped peak_memory_in_bytes (see dryrun.memory_stats)
+        peak = int(getattr(ma, "peak_memory_in_bytes", 0))
+        return peak or (int(ma.argument_size_in_bytes)
+                        + int(ma.output_size_in_bytes)
+                        + int(ma.temp_size_in_bytes))
+
     mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2),
                 ("pod", "data", "model"))
     out = {}
@@ -85,7 +91,7 @@ DRYRUN_SNIPPET = textwrap.dedent("""
             ma = compiled.memory_analysis()
             hc = HloCost(compiled.as_text()).summary()
             out[f"{arch}__{shape_name}"] = {
-                "peak": int(ma.peak_memory_in_bytes),
+                "peak": peak_bytes(ma),
                 "flops": hc["flops_per_device"],
                 "coll": hc["total_collective_bytes"],
             }

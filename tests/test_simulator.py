@@ -7,8 +7,7 @@ is approached on uniform, and the policy ordering under skew matches Fig 3.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core.simulator import SimConfig, Simulator
 
