@@ -10,6 +10,8 @@ stay well ahead of the old per-block bookkeeping).
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -19,7 +21,11 @@ from repro.configs import get_config
 from repro.models import Model
 from repro.serving import LogStructuredKVPool
 
-from ._util import print_table, save_json
+from ._util import OUT_DIR, print_table, save_json
+
+# e2e tok/s before the device-resident multi-step decode loop (PR 2), kept
+# in the row so the perf trajectory stays visible in the committed json
+TOK_PER_S_PRE_MULTISTEP = 12.0
 
 
 def pool_traffic(policy: str, *, n_slabs=64, bps=8, n_seqs=600, seed=0,
@@ -87,18 +93,65 @@ def run(quick: bool = True) -> list[dict]:
                  "wamp": round(e2e["wamp"], 3),
                  "mean_E": round(e2e["mean_E_compacted"], 3),
                  "compactions": e2e["compactions"],
-                 "tok_per_s": round(e2e["tok_per_s"], 1)})
+                 "tok_per_s": round(e2e["tok_per_s"], 1),
+                 "tok_per_s_pre_multistep": TOK_PER_S_PRE_MULTISTEP})
     return rows
 
 
-def main(quick: bool = True) -> None:
+def _baseline_row(rows: list[dict], policy: str) -> dict | None:
+    return next((r for r in rows if r.get("policy") == policy), None)
+
+
+def _committed_baseline() -> list[dict]:
+    """Rows of the committed baseline json ([] if absent)."""
+    path = OUT_DIR / "bench_serving.json"
+    if not path.exists():
+        return []
+    return json.loads(path.read_text()).get("rows", [])
+
+
+def main(quick: bool = True, check: bool = False) -> None:
+    baseline = _committed_baseline() if check else []
     rows = run(quick)
     print_table("Serving KV pool — block-move overhead per policy", rows,
                 ["policy", "blocks_written", "blocks_moved", "wamp",
                  "mean_E", "compactions", "blocks_per_s", "tok_per_s",
                  "wall_s"])
     save_json("bench_serving", rows, {"quick": quick})
+    base_e2e = _baseline_row(baseline, "mdc (e2e engine)")
+    if check and base_e2e and base_e2e.get("tok_per_s"):
+        got = _baseline_row(rows, "mdc (e2e engine)")["tok_per_s"]
+        # the committed tok/s was measured on a different machine: scale the
+        # floor by this host's pool-only heavy-row speed (pure host work,
+        # same on both sides) so the gate trips on code, not on hardware
+        base_heavy = _baseline_row(baseline, "mdc (heavy)")
+        cur_heavy = _baseline_row(rows, "mdc (heavy)")
+        host_ratio = 1.0
+        if base_heavy and cur_heavy and base_heavy.get("blocks_per_s"):
+            host_ratio = min(1.0, cur_heavy["blocks_per_s"]
+                             / base_heavy["blocks_per_s"])
+        floor = 0.7 * base_e2e["tok_per_s"] * host_ratio
+        print(f"[check] e2e tok/s {got:.1f} vs committed baseline "
+              f"{base_e2e['tok_per_s']:.1f} "
+              f"(host speed ratio {host_ratio:.2f}, floor {floor:.1f})")
+        if got < floor:
+            raise SystemExit(
+                f"serving throughput regression: {got:.1f} tok/s is >30% "
+                f"below the committed baseline "
+                f"{base_e2e['tok_per_s']:.1f} tok/s (host-speed adjusted "
+                f"floor {floor:.1f})")
+
+
+def cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale request streams (slow)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if e2e tok/s regresses >30%% vs the "
+                         "committed experiments/bench/bench_serving.json")
+    args = ap.parse_args()
+    main(quick=not args.full, check=args.check)
 
 
 if __name__ == "__main__":
-    main()
+    cli()

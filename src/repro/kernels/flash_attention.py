@@ -91,12 +91,15 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     jax.jit,
     static_argnames=("causal", "q_block", "kv_block", "interpret"))
 def flash_attention_bhsd(q, k, v, *, causal: bool = True, q_block: int = 128,
-                         kv_block: int = 128, interpret: bool = True):
+                         kv_block: int = 128, interpret: bool | None = None):
     """Core entry: q (B, H, Sq, D); k/v (B, Kh, Skv, D); H % Kh == 0.
 
     Sq/Skv need not be multiples of the block sizes (padded + masked here).
-    Returns (B, H, Sq, D) in q.dtype.
+    Returns (B, H, Sq, D) in q.dtype.  ``interpret=None`` auto-selects:
+    Mosaic on TPU, interpret mode everywhere else.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, H, Sq, D = q.shape
     _, Kh, Skv, _ = k.shape
     assert H % Kh == 0, (H, Kh)

@@ -41,12 +41,15 @@ def _priority_kernel(live_ref, up2_ref, unow_ref, o_ref, *, S: int):
 
 @functools.partial(jax.jit, static_argnames=("S", "block_rows", "interpret"))
 def mdc_priority(live, up2, u_now, *, S: int, block_rows: int = _ROWS,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
     """live (N,) int/float, up2 (N,) float, u_now scalar → key (N,) f32.
 
     N is padded to a (block_rows·128) multiple; padding returns +inf keys
-    (never selected).
+    (never selected).  ``interpret=None`` auto-selects: Mosaic on TPU,
+    interpret mode everywhere else.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     (N,) = live.shape
     tile = block_rows * _LANES
     pad = (-N) % tile

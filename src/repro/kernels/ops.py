@@ -1,9 +1,10 @@
 """Public jit'd entry points for the Pallas kernels.
 
-Each op auto-selects interpret mode off-TPU (this container is CPU-only; on
-a real pod the compiled Mosaic kernel runs).  Layouts match the model code:
-attention tensors are (B, S, H, D) head-interleaved, the pool layouts match
-repro.serving.kvcache.
+Every kernel auto-selects its execution mode off its ``interpret=None``
+default (resolved in the kernel modules: Mosaic on TPU, interpret mode
+everywhere else — this container is CPU-only; on a real pod the compiled
+Mosaic kernel runs).  Layouts match the model code: attention tensors are
+(B, S, H, D) head-interleaved, the pool layouts match repro.serving.kvcache.
 """
 
 from __future__ import annotations
@@ -17,10 +18,6 @@ from .paged_attention import paged_attention_bkgd
 from .segment_compact import segment_compact as _segment_compact
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
                     kv_block: int = 128):
     """q: (B, Sq, H, D); k/v: (B, Skv, Kh, D) → (B, Sq, H, D)."""
@@ -28,7 +25,7 @@ def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     out = flash_attention_bhsd(qt, kt, vt, causal=causal, q_block=q_block,
-                               kv_block=kv_block, interpret=_interpret())
+                               kv_block=kv_block)
     return jnp.swapaxes(out, 1, 2)
 
 
@@ -40,20 +37,18 @@ def paged_attention(q, k_pool, v_pool, block_tables, seq_lens):
     G = H // Kh
     bt = jnp.clip(block_tables, 0, k_pool.shape[0] - 1).astype(jnp.int32)
     out = paged_attention_bkgd(q.reshape(B, Kh, G, D), k_pool, v_pool, bt,
-                               seq_lens.astype(jnp.int32),
-                               interpret=_interpret())
+                               seq_lens.astype(jnp.int32))
     return out.reshape(B, H, D)
 
 
 def segment_compact(pool, src_idx, *, tile: int = 8192):
     """pool: (N, E); src_idx: (M,) → (M, E) relocated payloads."""
-    return _segment_compact(pool, src_idx.astype(jnp.int32), tile=tile,
-                            interpret=_interpret())
+    return _segment_compact(pool, src_idx.astype(jnp.int32), tile=tile)
 
 
 def mdc_priority(live, up2, u_now, *, S: int):
     """Fused §5.1.3 key over all segments → (N,) f32."""
-    return _mdc_priority(live, up2, u_now, S=S, interpret=_interpret())
+    return _mdc_priority(live, up2, u_now, S=S)
 
 
 def mdc_select_victims(live, up2, u_now, *, S: int, k: int):

@@ -71,10 +71,13 @@ def _pa_kernel(block_tables_ref, seq_lens_ref,   # scalar prefetch (SMEM)
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention_bkgd(q, k_pool, v_pool, block_tables, seq_lens, *,
-                         interpret: bool = True):
+                         interpret: bool | None = None):
     """q: (B, Kh, G, D); k_pool/v_pool: (num_pages, T, Kh, D);
     block_tables: (B, P) int32 (clamped to valid page ids by the caller);
-    seq_lens: (B,) int32.  Returns (B, Kh, G, D)."""
+    seq_lens: (B,) int32.  Returns (B, Kh, G, D).  ``interpret=None``
+    auto-selects: Mosaic on TPU, interpret mode everywhere else."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, Kh, G, D = q.shape
     _, T, _, _ = k_pool.shape
     P = block_tables.shape[1]

@@ -31,12 +31,15 @@ def _compact_kernel(src_ref, pool_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def segment_compact(pool, src_idx, *, tile: int = 8192,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """pool: (N, E) block payloads; src_idx: (M,) int32.
 
     Returns (M, E) == pool[src_idx], as a pipelined HBM gather-copy.
-    E is padded to a lane multiple (128) if needed.
+    E is padded to a lane multiple (128) if needed.  ``interpret=None``
+    auto-selects: Mosaic on TPU, interpret mode everywhere else.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     N, E = pool.shape
     (M,) = src_idx.shape
     pad = (-E) % 128

@@ -21,6 +21,7 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               policy: str = "mdc", seed: int = 0, n_slabs: int = 9,
               blocks_per_slab: int = 4, page_T: int = 8, max_batch: int = 4,
               n_open: int = 4, params=None, model: Model | None = None,
+              use_pallas: bool | None = None, max_decode_chunk: int = 32,
               verbose: bool = True) -> dict:
     if model is None:
         model = Model(get_config(arch).smoke())
@@ -29,7 +30,10 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              blocks_per_slab=blocks_per_slab, page_T=page_T,
                              max_batch=max_batch, max_seq=256, policy=policy,
                              params=params, compact_trigger=2,
-                             compact_batch=3, n_open=n_open)
+                             compact_batch=3, n_open=n_open,
+                             use_pallas=use_pallas,
+                             max_decode_chunk=max_decode_chunk,
+                             warmup=True)  # AOT-compile outside the timed loop
     # mixed short/long request stream (the checkerboarding driver)
     for _ in range(requests):
         plen = int(rng.integers(4, 40))
@@ -37,18 +41,19 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
         eng.submit(rng.integers(1, model.cfg.vocab_size, size=plen), nnew)
 
     t0 = time.time()
-    steps = 0
-    while eng.queue or any(s.active for s in eng.slots):
+    dispatches = 0
+    while eng.has_work():
         eng.step()
-        steps += 1
+        dispatches += 1
     dt = time.time() - t0
     m = eng.metrics()
     toks = sum(len(v) for v in eng.finished.values())
-    out = dict(policy=policy, requests=requests, decode_steps=steps,
+    out = dict(policy=policy, requests=requests, dispatches=dispatches,
                tokens=toks, tok_per_s=toks / dt, **m)
     if verbose:
         print(f"[serve] {policy:12s} {toks:5d} tok in {dt:6.2f}s "
-              f"({out['tok_per_s']:7.1f} tok/s)  Wamp={m['wamp']:.3f} "
+              f"({out['tok_per_s']:7.1f} tok/s, {dispatches} dispatches)  "
+              f"Wamp={m['wamp']:.3f} "
               f"meanE={m['mean_E_compacted']:.3f} "
               f"compactions={m['compactions']}")
     return out
@@ -62,15 +67,22 @@ def main() -> None:
                     default=["mdc", "greedy", "age", "cost_benefit"])
     ap.add_argument("--n-open", type=int, default=4,
                     help="open slabs (lifetime buckets) for §5.3 placement")
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="max decode tokens per device dispatch")
+    ap.add_argument("--use-pallas", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="Pallas kernels: auto = Mosaic on TPU, ref on CPU")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    use_pallas = {"auto": None, "on": True, "off": False}[args.use_pallas]
 
     model = Model(get_config(args.arch).smoke())
     import jax
     params = model.init(jax.random.PRNGKey(0))
     results = [serve_run(arch=args.arch, requests=args.requests, policy=p,
                          seed=args.seed, n_open=args.n_open, params=params,
-                         model=model)
+                         model=model, use_pallas=use_pallas,
+                         max_decode_chunk=args.chunk)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

@@ -413,12 +413,19 @@ def decode_step(params, cache, token, cfg, extras=None):
     return logits, cache
 
 
-def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16):
+def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16,
+            true_len=None):
     """Run the full prompt, return (last-position logits, populated cache).
 
     Implemented as forward + cache extraction for attention families; SSM
     families return their recurrent states.  (The serving engine uses the
     paged pool instead; this dense-cache path is what the dry-run lowers.)
+
+    ``true_len`` (traced scalar, optional): the prompt may be right-padded to
+    a bucketed static length — causal masking makes the pad invisible to
+    positions < true_len — and the "last-position" logits are then read at
+    ``true_len - 1`` via a dynamic slice.  This keeps the compile key at the
+    bucket size instead of every distinct prompt length.
     """
     B, S = tokens.shape
     cache = init_cache(cfg, B, max_len, cache_dtype)
@@ -511,6 +518,11 @@ def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16)
     else:
         raise ValueError(fam)
 
-    logits = _unembed(params, x[:, -1:, :], cfg)[:, 0]
-    cache["cur_len"] = jnp.full((B,), S, jnp.int32)
+    if true_len is None:
+        last = x[:, -1:, :]
+        cache["cur_len"] = jnp.full((B,), S, jnp.int32)
+    else:
+        last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+        cache["cur_len"] = jnp.full((B,), true_len, jnp.int32)
+    logits = _unembed(params, last, cfg)[:, 0]
     return logits, cache

@@ -3,12 +3,24 @@
 The engine owns the tensor pool (per-layer K/V page arrays) and executes, on
 device, the two data paths the pool manager plans on host:
 
-  * decode      — one token for every active slot, reading KV through block
-                  tables (kernels.paged_attention on TPU; the vectorized ref
-                  path on CPU), writing the new token's K/V into its page;
+  * decode      — up to ``max_decode_chunk`` tokens for every active slot per
+                  dispatch, reading KV through block tables
+                  (kernels.paged_attention on TPU; the vectorized ref path on
+                  CPU), writing each new token's K/V into its page;
   * compaction  — the paper's cleaning: gather live pages of MDC victims
                   into fresh slabs (kernels.segment_compact) and remap the
                   block tables.
+
+The decode loop is *device-resident* (DESIGN.md §2): block tables, sequence
+lengths and last-token state live on device between dispatches, the K/V
+pools are donated through every jitted path (multi-step decode, prefill
+scatter, compaction move) so they are updated in place, and the host only
+intervenes at pre-computed *events* — the next page-boundary crossing
+(``seq_len % page_T`` wrap ⇒ a fresh block must be allocated, possibly
+triggering compaction), request completion, or admission.  Each dispatch
+decodes ``n = min(tokens-to-next-event, max_decode_chunk)`` tokens inside a
+single ``lax.fori_loop``, so host work is O(events), not O(tokens) — the
+paper's "one big I/O instead of many small ones", applied to dispatch.
 
 Supported families: dense + moe (GQA attention).  MLA pages (deepseek) would
 carry the latent cache instead (smaller pages, same policy — DESIGN.md §5);
@@ -16,14 +28,16 @@ SSM state never checkerboards, so mamba2 serves from dense state and the
 pool is inapplicable (also §5).
 
 Batch slots are fixed (``max_batch``) so the decode step compiles once;
-inactive slots point at a reserved trash page and are masked out.
+inactive slots point at a reserved trash page and are masked out.  Per-slot
+bookkeeping is vectorized numpy (no Python slot objects): ``rid``, ``lens``,
+``to_gen``, ``npages``, ``tokens`` arrays plus the ``bt`` block-table matrix.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -45,17 +59,9 @@ class Request:
     max_new_tokens: int
 
 
-@dataclasses.dataclass
-class _Slot:
-    rid: int = -1
-    seq_len: int = 0
-    to_generate: int = 0
-    pages: list = dataclasses.field(default_factory=list)
-    out_tokens: list = dataclasses.field(default_factory=list)
-
-    @property
-    def active(self) -> bool:
-        return self.rid >= 0
+def _pow2(n: int) -> int:
+    """Smallest power of two ≥ n (≥ 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
 
 
 def _paged_attn(q, k_pool, v_pool, bt, lens, use_pallas: bool):
@@ -64,17 +70,32 @@ def _paged_attn(q, k_pool, v_pool, bt, lens, use_pallas: bool):
     return kernels.ref.paged_attention_ref(q, k_pool, v_pool, bt, lens)
 
 
-def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool):
-    """Builds the jitted batched decode step over the paged pool.
+def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
+                           max_chunk: int = 32):
+    """Builds the jitted *multi-step* decode dispatch over the paged pool.
 
-    tokens (B,), seq_lens (B,) = current lengths, bt (B, P) physical pages.
-    Writes the new token's K/V at position seq_lens (page seq_lens//T), then
-    attends over seq_lens+1 tokens.  Returns (next_tokens, k_pools, v_pools).
+    The returned function has signature
+
+        out, k_pools, v_pools, seq_lens, tokens = step(
+            params, k_pools, v_pools, bt, seq_lens, tokens, active, n)
+
+    with ``bt (B, P)`` int32 physical pages, ``seq_lens (B,)`` current
+    lengths, ``tokens (B,)`` the last emitted token per slot, ``active (B,)``
+    bool, and ``n`` a *traced* int32 in [1, max_chunk]: the dispatch decodes
+    exactly ``n`` tokens per active slot inside one ``lax.fori_loop`` (no
+    recompile when ``n`` changes) and returns them in ``out (max_chunk, B)``
+    (rows ≥ n undefined).  Each iteration writes the incoming token's K/V at
+    position ``seq_len`` (page ``seq_len // page_T``) and attends over
+    ``seq_len + 1`` tokens.  Inactive slots write into the caller's trash
+    page and their seq_len/token state is frozen.
+
+    K/V pools and the seq_lens/tokens state are donated: the pools are never
+    copied across dispatches.
     """
     assert cfg.family in ("dense", "moe"), cfg.family
+    assert max_chunk >= 1
 
-    def step(params, k_pools, v_pools, bt, seq_lens, tokens):
-        B = tokens.shape[0]
+    def one_token(params, k_pools, v_pools, bt, seq_lens, tokens, active):
         x = jnp.take(params["embed"], tokens[:, None], axis=0)  # (B,1,d)
         pos = seq_lens[:, None]
         page = jnp.take_along_axis(bt, (seq_lens // page_T)[:, None], 1)[:, 0]
@@ -95,9 +116,58 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool):
         x, (k_pools, v_pools) = jax.lax.scan(
             layer, x, (params["blocks"], k_pools, v_pools))
         logits = tfm._unembed(params, x, cfg)[:, 0]
-        return jnp.argmax(logits, -1).astype(jnp.int32), k_pools, v_pools
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        return jnp.where(active, nxt, tokens), k_pools, v_pools
 
-    return jax.jit(step, donate_argnums=(1, 2))
+    def step(params, k_pools, v_pools, bt, seq_lens, tokens, active, n):
+        B = tokens.shape[0]
+        out = jnp.zeros((max_chunk, B), jnp.int32)
+
+        def body(t, carry):
+            k_pools, v_pools, seq_lens, tokens, out = carry
+            tokens, k_pools, v_pools = one_token(
+                params, k_pools, v_pools, bt, seq_lens, tokens, active)
+            out = jax.lax.dynamic_update_index_in_dim(out, tokens, t, 0)
+            seq_lens = seq_lens + active.astype(jnp.int32)
+            return (k_pools, v_pools, seq_lens, tokens, out)
+
+        k_pools, v_pools, seq_lens, tokens, out = jax.lax.fori_loop(
+            0, n, body, (k_pools, v_pools, seq_lens, tokens, out))
+        return out, k_pools, v_pools, seq_lens, tokens
+
+    return jax.jit(step, donate_argnums=(1, 2, 4, 5))
+
+
+def _scatter_prefill_fn(k_pools, v_pools, kp, vp, pages):
+    """Write prefill K/V pages into the pool (donated — no pool copy)."""
+    k_pools = k_pools.at[:, pages].set(kp.astype(k_pools.dtype))
+    v_pools = v_pools.at[:, pages].set(vp.astype(v_pools.dtype))
+    return k_pools, v_pools
+
+
+def _move_pages_fn(k_pools, v_pools, src, dst, *, use_pallas):
+    """Compaction data path: pool[dst] = pool[src] (donated pools).
+
+    The gather reads the pre-scatter pool, so src/dst overlap (survivors
+    re-placed into a just-freed victim slab) is safe.
+    """
+    if use_pallas:
+        L = k_pools.shape[0]
+        n_pages, T, Kh, hd = k_pools.shape[1:]
+        kf = k_pools.reshape(L * n_pages, T * Kh * hd)
+        vf = v_pools.reshape(L * n_pages, T * Kh * hd)
+        off = jnp.arange(L, dtype=jnp.int32)[:, None] * n_pages
+        src_l = (off + src[None, :]).reshape(-1)
+        moved_k = kernels.segment_compact(kf, src_l).reshape(
+            L, len(src), T, Kh, hd)
+        moved_v = kernels.segment_compact(vf, src_l).reshape(
+            L, len(src), T, Kh, hd)
+    else:
+        moved_k = k_pools[:, src]
+        moved_v = v_pools[:, src]
+    k_pools = k_pools.at[:, dst].set(moved_k)
+    v_pools = v_pools.at[:, dst].set(moved_v)
+    return k_pools, v_pools
 
 
 class PagedServingEngine:
@@ -106,16 +176,20 @@ class PagedServingEngine:
     def __init__(self, model: Model, *, n_slabs: int = 16,
                  blocks_per_slab: int = 8, page_T: int = 16,
                  max_batch: int = 4, max_seq: int = 512,
-                 policy: str = "mdc", use_pallas: bool = False,
+                 policy: str = "mdc", use_pallas: bool | None = None,
                  params=None, seed: int = 0,
                  compact_trigger: int = 2, compact_batch: int = 4,
-                 n_open: int = 4):
+                 n_open: int = 4, max_decode_chunk: int = 32,
+                 warmup: bool = False):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
         self.max_batch = max_batch
         self.max_pages_per_seq = (max_seq + page_T - 1) // page_T
+        if use_pallas is None:  # backend-aware default: Mosaic on TPU only
+            use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = use_pallas
+        self.max_decode_chunk = max_decode_chunk
 
         self.pool = LogStructuredKVPool(
             n_slabs, blocks_per_slab, policy=policy, n_open=n_open,
@@ -133,34 +207,108 @@ class PagedServingEngine:
 
         self.params = params if params is not None else model.init(
             jax.random.PRNGKey(seed))
-        self.slots = [_Slot() for _ in range(max_batch)]
-        self.bt = np.full((max_batch, self.max_pages_per_seq), self.trash_page,
-                          dtype=np.int32)
-        self.queue: list[Request] = []
+
+        # --- host slot state: flat numpy arrays, one row per batch slot ---
+        B, P = max_batch, self.max_pages_per_seq
+        self.rid = np.full(B, -1, np.int64)       # owning request (-1 free)
+        self.lens = np.zeros(B, np.int32)         # current sequence length
+        self.to_gen = np.zeros(B, np.int32)       # tokens left to emit
+        self.npages = np.zeros(B, np.int32)       # allocated pages per slot
+        self.tokens = np.zeros(B, np.int32)       # last emitted token
+        self.bt = np.full((B, P), self.trash_page, np.int32)
+        self._out = [None] * B                    # per-slot output buffers
+        self._out_n = np.zeros(B, np.int32)
+
+        # --- device-resident mirrors (uploaded only when an event dirties
+        # them; the decode dispatch itself keeps seq_lens/tokens on device) --
+        self._bt_dev = jnp.asarray(self.bt)
+        self._lens_dev = jnp.asarray(self.lens)
+        self._tok_dev = jnp.asarray(self.tokens)
+        self._act_dev = jnp.asarray(self.rid >= 0)
+        self._bt_dirty = False
+        self._state_dirty = False
+
+        self.queue: collections.deque[Request] = collections.deque()
         self.finished: dict[int, list[int]] = {}
-        self._decode = make_paged_decode_step(cfg, page_T, use_pallas)
+        self._admit_done: list[int] = []  # finished during admission
+        self._decode = make_paged_decode_step(cfg, page_T, use_pallas,
+                                              max_chunk=max_decode_chunk)
         self._prefill = jax.jit(
             functools.partial(_prefill_fn, cfg=cfg),
             static_argnames=("max_len",))
+        self._scatter = jax.jit(_scatter_prefill_fn, donate_argnums=(0, 1))
+        self._move = jax.jit(_move_pages_fn, donate_argnums=(0, 1),
+                             static_argnames=("use_pallas",))
         self._next_rid = 0
+        if warmup:
+            self.warmup()
+
+    def warmup(self) -> None:
+        """Ahead-of-time compile of the serving hot paths (what production
+        engines do at startup): the multi-step decode dispatch and one
+        prefill + page-scatter per power-of-two prompt bucket.  All dispatch
+        inputs are inert (inactive slots / trash pages), so warming mutates
+        no served state."""
+        out, self.k_pools, self.v_pools, self._lens_dev, self._tok_dev = (
+            self._decode(self.params, self.k_pools, self.v_pools,
+                         self._bt_dev, self._lens_dev, self._tok_dev,
+                         self._act_dev, np.int32(1)))
+        out.block_until_ready()
+        T = self.page_T
+        max_prompt_bucket = _pow2(self.max_pages_per_seq * T)
+        tb = _pow2(T)
+        while tb <= max_prompt_bucket:
+            n_pages = -(-tb // T)
+            _, max_len = self._prefill_bucket(tb, n_pages)
+            first, ks, vs = self._prefill(
+                self.params, jnp.zeros((1, tb), jnp.int32), np.int32(1),
+                max_len=max_len)
+            L, _, _, Kh, hd = ks.shape
+            kp = ks[:, 0].reshape(L, max_len // T, T, Kh, hd)
+            vp = vs[:, 0].reshape(L, max_len // T, T, Kh, hd)
+            trash = np.full(max_len // T, self.trash_page, np.int32)
+            self.k_pools, self.v_pools = self._scatter(
+                self.k_pools, self.v_pools, kp, vp, jnp.asarray(trash))
+            tb *= 2
 
     # ------------------------------------------------------------- requests
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
                                   max_new_tokens))
         return rid
 
-    def _est_death(self, slot: _Slot) -> float:
-        """Paper §5.3 placement estimator: blocks die when their sequence
-        finishes ⇒ expected death clock = now + blocks that will die then."""
-        return self.pool.u_now + slot.seq_len + slot.to_generate
+    def slot_active(self, i: int) -> bool:
+        return self.rid[i] >= 0
+
+    def slot_pages(self, i: int) -> np.ndarray:
+        """Physical pages held by slot i (a view of the block-table row)."""
+        return self.bt[i, :self.npages[i]]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool((self.rid >= 0).any())
+
+    def _prefill_bucket(self, plen: int, n_pages: int) -> tuple[int, int]:
+        """(padded prompt length, prefill cache length) — the compile key.
+
+        The prompt bucket is a power of two; the cache length is the
+        smallest multiple of ``page_T`` covering both it and the
+        power-of-two page bucket (so non-power-of-two page sizes reshape
+        cleanly).
+        """
+        T = self.page_T
+        tok_bucket = max(_pow2(plen), _pow2(T))
+        max_len = max(_pow2(n_pages) * T, -(-tok_bucket // T) * T)
+        return tok_bucket, max_len
 
     def _admit(self) -> None:
-        for i, slot in enumerate(self.slots):
-            if slot.active or not self.queue:
-                continue
+        free = np.flatnonzero(self.rid < 0)
+        for i in free:
+            if not self.queue:
+                break
             req = self.queue[0]
             need = (len(req.prompt) + req.max_new_tokens + self.page_T - 1
                     ) // self.page_T
@@ -168,91 +316,138 @@ class PagedServingEngine:
                 raise ValueError("request exceeds max_seq")
             if self.pool.free_blocks() < need + self.pool.compact_trigger:
                 break  # admission control: wait for deaths/compaction
-            self.queue.pop(0)
-            self._start(i, req)
+            self.queue.popleft()
+            self._start(int(i), req)
 
     def _start(self, i: int, req: Request) -> None:
-        slot = self.slots[i]
-        slot.rid, slot.seq_len = req.rid, len(req.prompt)
-        slot.to_generate = req.max_new_tokens
-        slot.pages, slot.out_tokens = [], []
-        n_pages = (len(req.prompt) + self.page_T - 1) // self.page_T
+        plen = len(req.prompt)
+        n_pages = (plen + self.page_T - 1) // self.page_T
+        # §5.3 placement estimator: blocks die when their sequence finishes
+        # ⇒ expected death clock = now + blocks that will die then.
+        est = self.pool.u_now + plen + req.max_new_tokens
         # batched alloc: any compaction fires (and remaps the *other* slots'
         # pages via the callback) before these page ids are handed out
         pages = self.pool.alloc_blocks(
             np.full(n_pages, req.rid, dtype=np.int64),
-            np.full(n_pages, self._est_death(slot)))
-        slot.pages.extend(int(p) for p in pages)
+            np.full(n_pages, est))
         self.bt[i, :] = self.trash_page
-        self.bt[i, :n_pages] = slot.pages
+        self.bt[i, :n_pages] = pages
+        self.npages[i] = n_pages
 
-        # dense prefill -> scatter K/V into the allocated pages
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        first_tok, ks, vs = self._prefill(self.params, toks,
-                                          max_len=n_pages * self.page_T)
+        # dense prefill -> scatter K/V into the allocated pages.  Prompt and
+        # cache lengths are bucketed to powers of two so distinct prompt
+        # lengths reuse one compiled prefill per bucket; the true length is
+        # traced (dynamic last-token slice), not baked into the compile key.
+        tok_bucket, max_len = self._prefill_bucket(plen, n_pages)
+        toks = np.zeros(tok_bucket, np.int32)
+        toks[:plen] = req.prompt
+        first_tok, ks, vs = self._prefill(
+            self.params, jnp.asarray(toks)[None], np.int32(plen),
+            max_len=max_len)
         L, _, _, Kh, hd = ks.shape
-        kp = ks[:, 0].reshape(L, n_pages, self.page_T, Kh, hd)
-        vp = vs[:, 0].reshape(L, n_pages, self.page_T, Kh, hd)
-        pages = jnp.asarray(slot.pages, jnp.int32)
-        self.k_pools = self.k_pools.at[:, pages].set(kp.astype(self.k_pools.dtype))
-        self.v_pools = self.v_pools.at[:, pages].set(vp.astype(self.v_pools.dtype))
-        slot.out_tokens.append(int(first_tok[0]))
-        slot.to_generate -= 1
+        nb = max_len // self.page_T
+        kp = ks[:, 0].reshape(L, nb, self.page_T, Kh, hd)
+        vp = vs[:, 0].reshape(L, nb, self.page_T, Kh, hd)
+        # scatter the whole bucket; pages beyond the allocation land in the
+        # trash page, so the compile key is the bucket size, not n_pages
+        pages_pad = np.full(nb, self.trash_page, np.int32)
+        pages_pad[:n_pages] = pages
+        self.k_pools, self.v_pools = self._scatter(
+            self.k_pools, self.v_pools, kp, vp, jnp.asarray(pages_pad))
+
+        self.rid[i] = req.rid
+        self.lens[i] = plen
+        self.tokens[i] = int(first_tok[0])
+        self.to_gen[i] = req.max_new_tokens - 1
+        out = np.empty(req.max_new_tokens, np.int32)
+        out[0] = self.tokens[i]
+        self._out[i] = out
+        self._out_n[i] = 1
+        self._bt_dirty = self._state_dirty = True
+        if self.to_gen[i] <= 0:  # prefill token already completed the request
+            self._admit_done.append(req.rid)
+            self._finish(i)
+
+    def _finish(self, i: int) -> None:
+        rid = int(self.rid[i])
+        self.finished[rid] = self._out[i][:self._out_n[i]].tolist()
+        self.pool.free_pages(self.slot_pages(i).astype(np.int64))
+        self.bt[i, :] = self.trash_page
+        self.rid[i] = -1
+        self.lens[i] = self.to_gen[i] = self.npages[i] = 0
+        self.tokens[i] = 0
+        self._out[i] = None
+        self._out_n[i] = 0
+        self._bt_dirty = self._state_dirty = True
 
     # ---------------------------------------------------------------- step
+    def _sync_device(self) -> None:
+        """Upload host state that an event dirtied since the last dispatch."""
+        if self._bt_dirty:
+            self._bt_dev = jnp.asarray(self.bt)
+            self._bt_dirty = False
+        if self._state_dirty:
+            self._lens_dev = jnp.asarray(self.lens)
+            self._tok_dev = jnp.asarray(self.tokens)
+            self._act_dev = jnp.asarray(self.rid >= 0)
+            self._state_dirty = False
+
+    def _event_horizon(self, active: np.ndarray) -> int:
+        """Tokens until the earliest host event: a slot crossing into an
+        unallocated page (computed from ``seq_len % page_T``) or finishing."""
+        room = self.npages * self.page_T - self.lens
+        until = np.minimum(room, self.to_gen)[active]
+        return int(max(min(int(until.min()), self.max_decode_chunk), 1))
+
     def step(self) -> list[int]:
-        """Admit + decode one token for every active slot.  Returns finished
-        request ids."""
+        """Admit, then decode up to ``max_decode_chunk`` tokens for every
+        active slot in one device dispatch.  Returns finished request ids."""
         self._admit()
-        active = [i for i, s in enumerate(self.slots) if s.active]
-        if not active:
-            return []
+        done, self._admit_done = self._admit_done, []
+        active = self.rid >= 0
+        if not active.any():
+            return done
 
-        # pages for the incoming tokens must exist before the step writes
-        # them; one batched alloc covers every slot that crossed a page
-        # boundary (compaction, if it fires, remaps held pages first)
-        growing = [i for i in active
-                   if self.slots[i].seq_len % self.page_T == 0
-                   and self.slots[i].seq_len // self.page_T
-                   >= len(self.slots[i].pages)]
-        if growing:
+        # pages for the incoming tokens must exist before the dispatch writes
+        # them; one batched alloc covers every slot at a page boundary
+        # (compaction, if it fires, remaps held pages first)
+        growing = np.flatnonzero(active
+                                 & (self.lens >= self.npages * self.page_T))
+        if growing.size:
             pages = self.pool.alloc_blocks(
-                np.array([self.slots[i].rid for i in growing]),
-                np.array([self._est_death(self.slots[i]) for i in growing]))
-            for i, page in zip(growing, pages):
-                slot = self.slots[i]
-                slot.pages.append(int(page))
-                self.bt[i, len(slot.pages) - 1] = page
+                self.rid[growing],
+                self.pool.u_now + (self.lens[growing]
+                                   + self.to_gen[growing]).astype(np.float64))
+            self.bt[growing, self.npages[growing]] = pages
+            self.npages[growing] += 1
+            self._bt_dirty = True
 
-        tokens = np.zeros(self.max_batch, np.int32)
-        lens = np.zeros(self.max_batch, np.int32)
-        for i in active:
-            slot = self.slots[i]
-            tokens[i] = slot.out_tokens[-1]
-            lens[i] = slot.seq_len
-        nxt, self.k_pools, self.v_pools = self._decode(
-            self.params, self.k_pools, self.v_pools,
-            jnp.asarray(self.bt), jnp.asarray(lens), jnp.asarray(tokens))
-        nxt = np.asarray(nxt)
+        n = self._event_horizon(active)
+        self._sync_device()
+        out, self.k_pools, self.v_pools, self._lens_dev, self._tok_dev = (
+            self._decode(self.params, self.k_pools, self.v_pools,
+                         self._bt_dev, self._lens_dev, self._tok_dev,
+                         self._act_dev, np.int32(n)))
+        toks = np.asarray(out)[:n]  # ONE host sync per dispatch, not per token
 
-        done = []
-        for i in active:
-            slot = self.slots[i]
-            slot.seq_len += 1
-            slot.out_tokens.append(int(nxt[i]))
-            slot.to_generate -= 1
-            if slot.to_generate <= 0:
-                done.append(slot.rid)
-                self.finished[slot.rid] = list(slot.out_tokens)
-                self.pool.free_pages(np.asarray(slot.pages))
-                self.bt[i, :] = self.trash_page
-                self.slots[i] = _Slot()
+        # host bookkeeping: O(active slots) per dispatch
+        for i in np.flatnonzero(active):
+            w = self._out_n[i]
+            self._out[i][w:w + n] = toks[:, i]
+        self._out_n[active] += n
+        self.lens[active] += n
+        self.to_gen[active] -= n
+        self.tokens[active] = toks[-1, active]
+
+        for i in np.flatnonzero(active & (self.to_gen <= 0)):
+            done.append(int(self.rid[i]))
+            self._finish(int(i))
         return done
 
     def run_to_completion(self, max_steps: int = 100_000) -> dict:
         for _ in range(max_steps):
             self.step()
-            if not self.queue and not any(s.active for s in self.slots):
+            if not self.has_work():
                 break
         return self.finished
 
@@ -260,33 +455,22 @@ class PagedServingEngine:
     def _execute_plan(self, plan) -> None:
         if len(plan) == 0:
             return
-        src = jnp.asarray(plan.src_pages, jnp.int32)
-        dst = jnp.asarray(plan.dst_pages, jnp.int32)
-        L = self.k_pools.shape[0]
-        n_pages, T, Kh, hd = self.k_pools.shape[1:]
-        if self.use_pallas:
-            kf = self.k_pools.reshape(L * n_pages, T * Kh * hd)
-            vf = self.v_pools.reshape(L * n_pages, T * Kh * hd)
-            # per-layer page ids in the flattened pool
-            off = jnp.arange(L, dtype=jnp.int32)[:, None] * n_pages
-            src_l = (off + src[None, :]).reshape(-1)
-            moved_k = kernels.segment_compact(kf, src_l).reshape(
-                L, len(plan), T, Kh, hd)
-            moved_v = kernels.segment_compact(vf, src_l).reshape(
-                L, len(plan), T, Kh, hd)
-        else:
-            moved_k = self.k_pools[:, src]
-            moved_v = self.v_pools[:, src]
-        self.k_pools = self.k_pools.at[:, dst].set(moved_k)
-        self.v_pools = self.v_pools.at[:, dst].set(moved_v)
-        # remap block tables (host); mutate in place — callers hold the list
-        remap = {int(s): int(d) for s, d in zip(plan.src_pages, plan.dst_pages)}
-        for i, slot in enumerate(self.slots):
-            if not slot.active:
-                continue
-            slot.pages[:] = [remap.get(p, p) for p in slot.pages]
-            if slot.pages:
-                self.bt[i, :len(slot.pages)] = slot.pages
+        # pad the plan to a power-of-two bucket with trash→trash moves so
+        # plan sizes share compiled executables
+        m = len(plan)
+        bucket = _pow2(m)
+        src = np.full(bucket, self.trash_page, np.int32)
+        dst = np.full(bucket, self.trash_page, np.int32)
+        src[:m] = plan.src_pages
+        dst[:m] = plan.dst_pages
+        self.k_pools, self.v_pools = self._move(
+            self.k_pools, self.v_pools, jnp.asarray(src), jnp.asarray(dst),
+            use_pallas=self.use_pallas)
+        # remap block tables: one vectorized page-id lookup over the matrix
+        lut = np.arange(self.trash_page + 1, dtype=np.int32)
+        lut[plan.src_pages] = plan.dst_pages
+        self.bt = lut[self.bt]
+        self._bt_dirty = True
 
     # ------------------------------------------------------------- metrics
     def metrics(self) -> dict:
@@ -301,8 +485,10 @@ class PagedServingEngine:
         }
 
 
-def _prefill_fn(params, toks, *, cfg, max_len):
-    """Dense prefill; returns (first token, K (L,B,max_len,Kh,hd), V)."""
-    logits, cache = tfm.prefill(params, toks, cfg, max_len)
+def _prefill_fn(params, toks, true_len, *, cfg, max_len):
+    """Bucketed dense prefill; ``toks`` is right-padded to the bucket and
+    ``true_len`` (traced) marks the prompt end.  Returns (first token,
+    K (L, B, max_len, Kh, hd), V)."""
+    logits, cache = tfm.prefill(params, toks, cfg, max_len, true_len=true_len)
     first = jnp.argmax(logits, -1).astype(jnp.int32)
     return first, cache["k"], cache["v"]

@@ -195,22 +195,128 @@ def test_engine_compaction_plan_execution_consistent(smoke_model, use_pallas):
             # plan-execution path runs many times, not just under pressure
             eng.pool.compact()
         eng.pool.check_invariants()
-        for i, slot in enumerate(eng.slots):
-            if not slot.active:
+        for i in range(eng.max_batch):
+            if not eng.slot_active(i):
                 continue
-            pages = np.asarray(slot.pages)
-            # block table rows mirror the slot's page list exactly
-            assert (eng.bt[i, :len(pages)] == pages).all()
+            pages = eng.slot_pages(i)
+            # block table rows beyond the held pages stay parked on trash
             assert (eng.bt[i, len(pages):] == eng.trash_page).all()
             # every held page is owned by this sequence in the pool
-            assert (eng.pool.block_owner[pages] == slot.rid).all()
-        if not eng.queue and not any(s.active for s in eng.slots):
+            assert (eng.pool.block_owner[pages] == eng.rid[i]).all()
+        if not eng.has_work():
             break
     assert eng.metrics()["compactions"] >= 2, "config must force compactions"
     assert eng.finished[rid] == want
     for r, n in zip(side, [8, 6, 12]):
         assert len(eng.finished[r]) == n
     assert eng.metrics()["free_blocks"] == eng.pool.n_slabs * eng.pool.S
+
+
+# -------------------------------------------------- multi-step decode loop
+
+def _mixed_stream(eng, vocab, seed=3):
+    rng = np.random.default_rng(seed)
+    lens = [5, 17, 9, 24, 3, 12]
+    news = [6, 10, 4, 8, 12, 5]
+    return [eng.submit(rng.integers(1, vocab, size=l), n)
+            for l, n in zip(lens, news)], news
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_multistep_decode_equals_singlestep(smoke_model, use_pallas):
+    """The tentpole equivalence: a multi-token device dispatch must be an
+    invisible batching of the single-token loop — bit-identical tokens and
+    identical pool traffic (Wamp / compaction counters), because the event
+    schedule (page-boundary allocs, deaths, compactions) is the same."""
+    results = []
+    for chunk in (1, 8):
+        eng = PagedServingEngine(smoke_model, n_slabs=14, blocks_per_slab=2,
+                                 page_T=8, max_batch=3, max_seq=96,
+                                 policy="mdc", compact_trigger=2,
+                                 compact_batch=3, seed=0,
+                                 use_pallas=use_pallas,
+                                 max_decode_chunk=chunk)
+        rids, news = _mixed_stream(eng, smoke_model.cfg.vocab_size)
+        eng.run_to_completion()
+        eng.pool.check_invariants()
+        for rid, n in zip(rids, news):
+            assert len(eng.finished[rid]) == n
+        results.append((eng.finished, eng.metrics()))
+    (fin1, m1), (fin8, m8) = results
+    assert fin1 == fin8                      # bit-identical tokens
+    assert m1["wamp"] == m8["wamp"]          # identical pool traffic
+    assert m1["compactions"] == m8["compactions"]
+    assert m1["blocks_written"] == m8["blocks_written"]
+    assert m1["blocks_moved"] == m8["blocks_moved"]
+
+
+def test_compaction_midbatch_remaps_device_block_tables(smoke_model):
+    """Compaction firing between multi-step dispatches must remap both the
+    host block-table matrix and its device-resident mirror, and stay
+    invisible to the decoded tokens (dense reference is the oracle)."""
+    import jax.numpy as jnp
+
+    prompt = (np.arange(3, 30) * 5) % smoke_model.cfg.vocab_size
+    n_new = 10
+    params, want = _dense_reference_decode(smoke_model, prompt, n_new)
+    eng = PagedServingEngine(smoke_model, n_slabs=7, blocks_per_slab=2,
+                             page_T=8, max_batch=3, max_seq=96,
+                             policy="mdc", params=params, n_open=1,
+                             compact_trigger=2, compact_batch=3,
+                             max_decode_chunk=8)
+    rid = eng.submit(prompt, n_new)
+    rng = np.random.default_rng(1)
+    side = [eng.submit(rng.integers(1, 100, size=l), n)
+            for l, n in [(5, 8), (11, 6), (3, 12)]]
+    compacted = 0
+    for _ in range(10_000):
+        eng.step()
+        plan = eng.pool.compact()  # force mid-batch compaction every dispatch
+        if plan is not None and len(plan):
+            compacted += 1
+            # host remap is a vectorized lookup: evacuated pages are gone
+            # from bt (unless re-used as a destination in the same plan)
+            held = eng.bt[eng.bt != eng.trash_page]
+            gone = np.setdiff1d(plan.src_pages, plan.dst_pages)
+            assert not np.isin(gone, held).any()
+        eng._sync_device()
+        # the device-resident block table mirrors the host matrix exactly
+        assert (np.asarray(eng._bt_dev) == eng.bt).all()
+        assert isinstance(eng._bt_dev, jnp.ndarray)
+        if not eng.has_work():
+            break
+    assert compacted >= 1, "at least one forced mid-batch compaction"
+    assert eng.metrics()["compactions"] >= 2, "config must force compactions"
+    assert eng.finished[rid] == want
+    for r, n in zip(side, [8, 6, 12]):
+        assert len(eng.finished[r]) == n
+    eng.pool.check_invariants()
+
+
+def test_single_token_request_reported_by_step(smoke_model):
+    """A request satisfied entirely by its prefill token (max_new_tokens=1)
+    completes during admission; step() must still report its rid."""
+    eng = PagedServingEngine(smoke_model, n_slabs=8, blocks_per_slab=2,
+                             page_T=8, max_batch=2, max_seq=64, policy="mdc")
+    rid = eng.submit(np.arange(1, 6), 1)
+    done = eng.step()
+    assert done == [rid]
+    assert len(eng.finished[rid]) == 1
+    assert not eng.has_work()
+    eng.pool.check_invariants()
+
+
+def test_non_pow2_page_size(smoke_model):
+    """Prefill bucketing must not assume page_T is a power of two."""
+    prompt = (np.arange(2, 16) * 3) % smoke_model.cfg.vocab_size
+    eng = PagedServingEngine(smoke_model, n_slabs=10, blocks_per_slab=2,
+                             page_T=12, max_batch=2, max_seq=96,
+                             policy="mdc", compact_trigger=2, compact_batch=2)
+    rid = eng.submit(prompt, 6)
+    eng.run_to_completion()
+    assert len(eng.finished[rid]) == 6
+    eng.pool.check_invariants()
 
 
 @pytest.mark.parametrize("policy", ["mdc", "greedy", "age"])
