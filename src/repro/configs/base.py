@@ -94,6 +94,14 @@ class ModelConfig:
             kw.update(n_enc_layers=2)
         return self.with_(**kw)
 
+    def tp_smoke(self) -> "ModelConfig":
+        """Smoke config with tensor-parallel-friendly head counts (16 q /
+        8 kv): enough kv heads for an 8-way "model" mesh to really shard the
+        serving K/V pools (the plain smoke()'s 2 kv heads would fall back to
+        replication).  One definition so the sharded-serving tests and the
+        bench mesh row exercise the same model."""
+        return self.smoke().with_(n_heads=16, n_kv_heads=8)
+
 
 @dataclasses.dataclass(frozen=True)
 class ShapeConfig:

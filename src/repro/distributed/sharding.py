@@ -39,6 +39,19 @@ DEFAULT_RULES: dict[Any, list[tuple[str, ...]]] = {
     None: [],
 }
 
+# Serving (tensor-parallel decode) rules: ONLY the per-head axes shard, and
+# only over "model".  Everything else — embed, ff, vocab, batch — replicates,
+# so every cross-head / cross-ff contraction in the decode step is computed
+# in full on every shard.  That is what makes the sharded engine bit-identical
+# to the 1-device engine (DESIGN.md §6): the head axis partitions *independent*
+# computations (each kv head's pages, each q head's attention), so no floating
+# point reduction ever changes its summation order.
+SERVING_RULES: dict[Any, list[tuple[str, ...]]] = {
+    "heads": [("model",)],
+    "kv": [("model",)],
+    None: [],
+}
+
 
 def resolve_spec(shape: tuple, axes: tuple, mesh: Mesh,
                  rules: dict | None = None) -> PartitionSpec:
@@ -65,6 +78,26 @@ def resolve_spec(shape: tuple, axes: tuple, mesh: Mesh,
     while parts and parts[-1] is None:
         parts.pop()
     return PartitionSpec(*parts)
+
+
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """``shard_map`` portably across the jax range CI tests (0.4.30→latest):
+    the import moved out of ``jax.experimental`` and the replication-check
+    kwarg was renamed (check_rep → check_vma) along the way.  The check is
+    disabled in every case — the wrapped bodies are ``pallas_call``s, which
+    are opaque to it."""
+    try:  # newer jax: public top-level API
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+    import inspect
+    kw = {}
+    params = inspect.signature(sm).parameters
+    for name in ("check_rep", "check_vma"):
+        if name in params:
+            kw[name] = False
+            break
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
 
 
 def _is_axes(x):

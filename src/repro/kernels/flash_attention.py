@@ -25,6 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec
+
+from ..distributed.sharding import shard_map_unchecked
 
 NEG_INF = float("-inf")
 
@@ -136,3 +139,23 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, q_block: int = 128,
         interpret=interpret,
     )(q, k, v)
     return out[:, :, :Sq]
+
+
+def flash_attention_sharded(q, k, v, *, mesh, axis: str = "model",
+                            causal: bool = True, q_block: int = 128,
+                            kv_block: int = 128,
+                            interpret: bool | None = None):
+    """Tensor-parallel flash attention: shard the head axis over ``axis`` and
+    run one independent kernel per shard (``pallas_call`` is opaque to GSPMD,
+    hence the explicit ``shard_map``).  q: (B, H, Sq, D), k/v: (B, Kh, Skv, D)
+    with both H and Kh divisible by the axis size so GQA groups stay aligned
+    (local H/n over local Kh/n keeps the same group size).  Every head's
+    online softmax is self-contained, so results are bitwise identical to the
+    unsharded kernel."""
+    head_spec = PartitionSpec(None, axis, None, None)
+    fn = functools.partial(flash_attention_bhsd, causal=causal,
+                           q_block=q_block, kv_block=kv_block,
+                           interpret=interpret)
+    return shard_map_unchecked(fn, mesh,
+                               in_specs=(head_spec, head_spec, head_spec),
+                               out_specs=head_spec)(q, k, v)

@@ -12,32 +12,56 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .flash_attention import flash_attention_bhsd
+from .flash_attention import flash_attention_bhsd, flash_attention_sharded
 from .mdc_priority import mdc_priority as _mdc_priority
-from .paged_attention import paged_attention_bkgd
+from .paged_attention import paged_attention_bkgd, paged_attention_sharded
 from .segment_compact import segment_compact as _segment_compact
 
 
+def _mesh_shards(mesh, axis: str = "model") -> int:
+    """Usable shard count of ``mesh`` along ``axis`` (1 when no mesh)."""
+    if mesh is None or axis not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[axis])
+
+
 def flash_attention(q, k, v, *, causal: bool = True, q_block: int = 128,
-                    kv_block: int = 128):
-    """q: (B, Sq, H, D); k/v: (B, Skv, Kh, D) → (B, Sq, H, D)."""
+                    kv_block: int = 128, mesh=None):
+    """q: (B, Sq, H, D); k/v: (B, Skv, Kh, D) → (B, Sq, H, D).
+
+    With ``mesh`` (an axis named "model"), heads shard over the mesh via
+    ``shard_map`` — one independent kernel per shard; falls back to the
+    single-kernel path when the heads don't divide the axis."""
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
-    out = flash_attention_bhsd(qt, kt, vt, causal=causal, q_block=q_block,
-                               kv_block=kv_block)
+    n = _mesh_shards(mesh)
+    if n > 1 and qt.shape[1] % n == 0 and kt.shape[1] % n == 0:
+        out = flash_attention_sharded(qt, kt, vt, mesh=mesh, causal=causal,
+                                      q_block=q_block, kv_block=kv_block)
+    else:
+        out = flash_attention_bhsd(qt, kt, vt, causal=causal, q_block=q_block,
+                                   kv_block=kv_block)
     return jnp.swapaxes(out, 1, 2)
 
 
-def paged_attention(q, k_pool, v_pool, block_tables, seq_lens):
+def paged_attention(q, k_pool, v_pool, block_tables, seq_lens, *, mesh=None):
     """q: (B, H, D); pools: (num_pages, T, Kh, D); block_tables: (B, P);
-    seq_lens: (B,) → (B, H, D)."""
+    seq_lens: (B,) → (B, H, D).
+
+    With ``mesh``, kv heads shard over the "model" axis (shard_map; tables
+    and lengths replicated — one host plan drives all shards); the unsharded
+    kernel is used when Kh doesn't divide the axis."""
     B, H, D = q.shape
     Kh = k_pool.shape[2]
     G = H // Kh
     bt = jnp.clip(block_tables, 0, k_pool.shape[0] - 1).astype(jnp.int32)
-    out = paged_attention_bkgd(q.reshape(B, Kh, G, D), k_pool, v_pool, bt,
-                               seq_lens.astype(jnp.int32))
+    qg = q.reshape(B, Kh, G, D)
+    lens = seq_lens.astype(jnp.int32)
+    if _mesh_shards(mesh) > 1 and Kh % _mesh_shards(mesh) == 0:
+        out = paged_attention_sharded(qg, k_pool, v_pool, bt, lens, mesh=mesh)
+    else:
+        out = paged_attention_bkgd(qg, k_pool, v_pool, bt, lens)
     return out.reshape(B, H, D)
 
 

@@ -24,6 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec
+
+from ..distributed.sharding import shard_map_unchecked
 
 NEG_INF = float("-inf")
 
@@ -104,3 +107,28 @@ def paged_attention_bkgd(q, k_pool, v_pool, block_tables, seq_lens, *,
         out_shape=jax.ShapeDtypeStruct((B, Kh, G, D), q.dtype),
         interpret=interpret,
     )(block_tables, seq_lens, q, k_pool, v_pool)
+
+
+def paged_attention_sharded(q, k_pool, v_pool, block_tables, seq_lens, *,
+                            mesh, axis: str = "model",
+                            interpret: bool | None = None):
+    """Tensor-parallel paged attention: one independent kernel per shard over
+    its local kv heads (grid (B, Kh/n, P)), zero cross-device traffic.
+
+    GSPMD cannot partition a ``pallas_call`` custom call, so the mesh path is
+    an explicit ``shard_map`` along the head axis.  q: (B, Kh, G, D) and the
+    pools shard their kv-head dim over ``axis``; the block tables and
+    sequence lengths are *replicated* — the host computes one placement /
+    compaction plan and every shard reads KV through the same physical page
+    ids (DESIGN.md §6).  Each head's online softmax runs unchanged on its
+    owning shard, so outputs are bitwise identical to the unsharded kernel.
+    """
+    head_spec = PartitionSpec(None, axis, None, None)   # (B, Kh, G, D)
+    pool_spec = PartitionSpec(None, None, axis, None)   # (pages, T, Kh, D)
+    rep = PartitionSpec()
+    fn = functools.partial(paged_attention_bkgd, interpret=interpret)
+    return shard_map_unchecked(
+        fn, mesh,
+        in_specs=(head_spec, pool_spec, pool_spec, rep, rep),
+        out_specs=head_spec,
+    )(q, k_pool, v_pool, block_tables, seq_lens)

@@ -6,16 +6,42 @@ touches jax device state — dryrun.py must set XLA_FLAGS before any jax init.
 
 from __future__ import annotations
 
+import math
+
 import jax
+
+
+def _make_mesh(shape: tuple, axes: tuple):
+    """jax.make_mesh where available; manual Mesh on older jaxlibs (the CI
+    fast lane matrixes down to the requirements-dev floor)."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    import numpy as np
+    from jax.sharding import Mesh
+    n = math.prod(shape)
+    return Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 chips per pod (TPU v5e-256); 2 pods when multi_pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh over however many (host) devices exist — used by tests."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"))
+    return _make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_serving_mesh(n_model: int):
+    """1-D tensor-parallel mesh for the paged serving engine: ``n_model``
+    devices on a single "model" axis (heads shard, everything else
+    replicates — see distributed.sharding.SERVING_RULES / DESIGN.md §6)."""
+    have = len(jax.devices())
+    if n_model > have:
+        raise ValueError(
+            f"serving mesh wants {n_model} devices but only {have} exist; "
+            f"on CPU run with XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={n_model}")
+    return _make_mesh((n_model,), ("model",))

@@ -22,7 +22,7 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               blocks_per_slab: int = 4, page_T: int = 8, max_batch: int = 4,
               n_open: int = 4, params=None, model: Model | None = None,
               use_pallas: bool | None = None, max_decode_chunk: int = 32,
-              verbose: bool = True) -> dict:
+              mesh=None, verbose: bool = True) -> dict:
     if model is None:
         model = Model(get_config(arch).smoke())
     rng = np.random.default_rng(seed)
@@ -32,7 +32,7 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              params=params, compact_trigger=2,
                              compact_batch=3, n_open=n_open,
                              use_pallas=use_pallas,
-                             max_decode_chunk=max_decode_chunk,
+                             max_decode_chunk=max_decode_chunk, mesh=mesh,
                              warmup=True)  # AOT-compile outside the timed loop
     # mixed short/long request stream (the checkerboarding driver)
     for _ in range(requests):
@@ -72,9 +72,18 @@ def main() -> None:
     ap.add_argument("--use-pallas", choices=["auto", "on", "off"],
                     default="auto",
                     help="Pallas kernels: auto = Mosaic on TPU, ref on CPU")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="tensor-parallel serving over N devices (1-D 'model'"
+                         " mesh; on CPU export XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N first)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     use_pallas = {"auto": None, "on": True, "off": False}[args.use_pallas]
+
+    mesh = None
+    if args.mesh:
+        from .mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh)
 
     model = Model(get_config(args.arch).smoke())
     import jax
@@ -82,7 +91,7 @@ def main() -> None:
     results = [serve_run(arch=args.arch, requests=args.requests, policy=p,
                          seed=args.seed, n_open=args.n_open, params=params,
                          model=model, use_pallas=use_pallas,
-                         max_decode_chunk=args.chunk)
+                         max_decode_chunk=args.chunk, mesh=mesh)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

@@ -161,13 +161,23 @@ def gqa_train(x, p, cfg, *, causal=True):
     return jnp.einsum("bshe,hed->bsd", out, p["wo"])
 
 
-def gqa_prefill(x, p, cfg):
-    """Prefill: like train but also returns the KV cache to serve from."""
+def gqa_prefill(x, p, cfg, *, gather_heads: bool = False):
+    """Prefill: like train but also returns the KV cache to serve from.
+
+    ``gather_heads`` (the serving engine's prefill path): gather the head
+    dim before the output projection, so under a head-sharded serving mesh
+    the cross-head contraction is computed in full on every shard — what
+    keeps sharded prefill bit-identical to the 1-device engine (DESIGN.md
+    §6).  Off (the default), GSPMD keeps its row-parallel wo freedom for the
+    training/dryrun meshes, like gqa_train."""
     B, S, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     q, k, v = _project_qkv(x, p, cfg, positions)
     out = chunked_attention(q, k, v, causal=True,
                             q_block=cfg.q_block, kv_block=cfg.kv_block)
+    if gather_heads:
+        from ..distributed.sharding import logical_constraint
+        out = logical_constraint(out, ("batch", None, None, None))
     return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (k, v)
 
 

@@ -260,6 +260,18 @@ def forward(params, tokens, cfg, extras=None):
 
 # ------------------------------------------------------------- decode path
 
+def kv_pool_axes():
+    """Logical axes of the serving engine's paged K/V pools, layout
+    (layers, n_pages, page_T, kv_heads, head_dim).
+
+    Only the kv-head dim shards (over "model", via SERVING_RULES): pages and
+    page offsets stay unsharded because the host-side pool manager addresses
+    *global* physical page ids — one placement/compaction plan drives every
+    shard (DESIGN.md §6).  Contrast with the dense decode cache
+    (``cache_spec``), whose length dim shards as "seq_kv"."""
+    return ("layers", None, None, "kv", None)
+
+
 def cache_spec(cfg, batch, max_len, dtype=jnp.bfloat16):
     """ShapeDtypeStruct tree + logical axes for the decode cache."""
     L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
@@ -414,7 +426,7 @@ def decode_step(params, cache, token, cfg, extras=None):
 
 
 def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16,
-            true_len=None):
+            true_len=None, gather_heads=False):
     """Run the full prompt, return (last-position logits, populated cache).
 
     Implemented as forward + cache extraction for attention families; SSM
@@ -440,7 +452,8 @@ def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16,
     # rematerialization (~10× flops, measured; EXPERIMENTS.md §Perf iter 6).
     if fam in ("dense", "moe"):
         def step(h, lp):
-            a, (k, v) = att.gqa_prefill(rmsnorm(h, lp["ln1"]), lp["attn"], cfg)
+            a, (k, v) = att.gqa_prefill(rmsnorm(h, lp["ln1"]), lp["attn"],
+                                        cfg, gather_heads=gather_heads)
             h = h + a
             h = h + _block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
             return h, (pad_kv(k), pad_kv(v))

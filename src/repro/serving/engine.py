@@ -36,14 +36,18 @@ bookkeeping is vectorized numpy (no Python slot objects): ``rid``, ``lens``,
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from ..configs.base import ModelConfig
+from ..distributed.sharding import (SERVING_RULES, _is_axes, resolve_spec,
+                                    tree_shardings)
 from ..models import Model
 from ..models import attention as att
 from ..models import transformer as tfm
@@ -64,14 +68,42 @@ def _pow2(n: int) -> int:
     return 1 << max(int(n) - 1, 0).bit_length()
 
 
-def _paged_attn(q, k_pool, v_pool, bt, lens, use_pallas: bool):
+# per-head projections shard over the serving mesh; every other weight is
+# replicated (see _serving_param_shardings)
+_HEAD_SHARDED_PARAMS = ("wq", "wk", "wv")
+
+
+def _serving_param_shardings(model: Model, params, mesh):
+    """Tensor-parallel placement of the serving params: ``wq``/``wk``/``wv``
+    shard their head axis over the mesh "model" axis; everything else —
+    ``wo``, MLP/MoE, norms, embeddings — replicates.
+
+    Replicating ``wo`` (instead of Megatron's row-parallel split) is a
+    deliberate serving trade: after an all-gather of the tiny per-head
+    context vectors, every cross-head contraction is computed in full on
+    every shard, in the same summation order as the 1-device engine — which
+    is what makes sharded decode *bit-identical*, not just numerically close
+    (DESIGN.md §6).  The HBM-bandwidth-dominant state (the K/V pools) and
+    the attention compute still shard fully.
+    """
+    def mask(path, ax):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        return tuple(ax) if name in _HEAD_SHARDED_PARAMS else (None,) * len(ax)
+
+    axes = jax.tree_util.tree_map_with_path(mask, model.axes(),
+                                            is_leaf=_is_axes)
+    return tree_shardings(axes, params, mesh, rules=SERVING_RULES)
+
+
+def _paged_attn(q, k_pool, v_pool, bt, lens, use_pallas: bool, mesh=None):
     if use_pallas:
-        return kernels.paged_attention(q, k_pool, v_pool, bt, lens)
+        return kernels.paged_attention(q, k_pool, v_pool, bt, lens, mesh=mesh)
     return kernels.ref.paged_attention_ref(q, k_pool, v_pool, bt, lens)
 
 
 def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
-                           max_chunk: int = 32):
+                           max_chunk: int = 32, mesh=None, kv_shard=None,
+                           rep_shard=None):
     """Builds the jitted *multi-step* decode dispatch over the paged pool.
 
     The returned function has signature
@@ -91,6 +123,12 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
 
     K/V pools and the seq_lens/tokens state are donated: the pools are never
     copied across dispatches.
+
+    With a serving mesh (``mesh``/``kv_shard``/``rep_shard``), the pools and
+    the QKV projections arrive head-sharded; the per-head attention output is
+    gathered (``rep_shard`` constraint) before the replicated ``wo``
+    contraction so the epilogue — and therefore every decoded token — is
+    computed bit-identically to the 1-device engine (DESIGN.md §6).
     """
     assert cfg.family in ("dense", "moe"), cfg.family
     assert max_chunk >= 1
@@ -107,7 +145,12 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
             q, k, v = att._project_qkv(hn, lp["attn"], cfg, pos)
             kp = kp.at[page, off].set(k[:, 0].astype(kp.dtype))
             vp = vp.at[page, off].set(v[:, 0].astype(vp.dtype))
-            o = _paged_attn(q[:, 0], kp, vp, bt, seq_lens + 1, use_pallas)
+            o = _paged_attn(q[:, 0], kp, vp, bt, seq_lens + 1, use_pallas,
+                            mesh)
+            if rep_shard is not None:
+                # all-gather the (B, H, hd) context so the cross-head wo
+                # contraction runs in full on every shard (bit-identity)
+                o = jax.lax.with_sharding_constraint(o, rep_shard)
             h = h + jnp.einsum("bhe,hed->bd", o.astype(h.dtype),
                                lp["attn"]["wo"])[:, None]
             h = h + tfm._block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
@@ -133,25 +176,38 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
 
         k_pools, v_pools, seq_lens, tokens, out = jax.lax.fori_loop(
             0, n, body, (k_pools, v_pools, seq_lens, tokens, out))
+        if kv_shard is not None:
+            # pin the donated pools' output sharding to their input sharding
+            # so the in-place buffer reuse survives under the mesh
+            k_pools = jax.lax.with_sharding_constraint(k_pools, kv_shard)
+            v_pools = jax.lax.with_sharding_constraint(v_pools, kv_shard)
         return out, k_pools, v_pools, seq_lens, tokens
 
     return jax.jit(step, donate_argnums=(1, 2, 4, 5))
 
 
-def _scatter_prefill_fn(k_pools, v_pools, kp, vp, pages):
+def _scatter_prefill_fn(k_pools, v_pools, kp, vp, pages, shard=None):
     """Write prefill K/V pages into the pool (donated — no pool copy)."""
     k_pools = k_pools.at[:, pages].set(kp.astype(k_pools.dtype))
     v_pools = v_pools.at[:, pages].set(vp.astype(v_pools.dtype))
+    if shard is not None:
+        k_pools = jax.lax.with_sharding_constraint(k_pools, shard)
+        v_pools = jax.lax.with_sharding_constraint(v_pools, shard)
     return k_pools, v_pools
 
 
-def _move_pages_fn(k_pools, v_pools, src, dst, *, use_pallas):
+def _move_pages_fn(k_pools, v_pools, src, dst, *, use_pallas, shard=None):
     """Compaction data path: pool[dst] = pool[src] (donated pools).
 
     The gather reads the pre-scatter pool, so src/dst overlap (survivors
-    re-placed into a just-freed victim slab) is safe.
+    re-placed into a just-freed victim slab) is safe.  Under a mesh the move
+    is a pure page-axis gather/scatter — every shard relocates its own head
+    slice of the pages with zero cross-device traffic — so the jnp path is
+    used (GSPMD partitions it); the Pallas kernel stays the 1-device fast
+    path (a pallas_call is opaque to GSPMD and the flattened payload layout
+    would mix the sharded head dim into the lane dim).
     """
-    if use_pallas:
+    if use_pallas and shard is None:
         L = k_pools.shape[0]
         n_pages, T, Kh, hd = k_pools.shape[1:]
         kf = k_pools.reshape(L * n_pages, T * Kh * hd)
@@ -167,11 +223,26 @@ def _move_pages_fn(k_pools, v_pools, src, dst, *, use_pallas):
         moved_v = v_pools[:, src]
     k_pools = k_pools.at[:, dst].set(moved_k)
     v_pools = v_pools.at[:, dst].set(moved_v)
+    if shard is not None:
+        k_pools = jax.lax.with_sharding_constraint(k_pools, shard)
+        v_pools = jax.lax.with_sharding_constraint(v_pools, shard)
     return k_pools, v_pools
 
 
 class PagedServingEngine:
-    """Continuous-batching engine on the log-structured KV pool."""
+    """Continuous-batching engine on the log-structured KV pool.
+
+    ``mesh`` (a 1-D ``jax.sharding.Mesh`` with a "model" axis, e.g.
+    ``launch.mesh.make_serving_mesh(8)``) turns the engine tensor-parallel:
+    the K/V pools and QKV projections shard their head axis across the mesh,
+    block tables / lengths / token buffers replicate, and the donation chain
+    (decode → prefill scatter → compaction move) holds per shard.  The
+    host-side pool manager is mesh-oblivious — one placement/compaction plan
+    drives every shard — so Wamp and compaction counts are shard-invariant
+    and the decoded tokens are bit-identical to the 1-device engine
+    (DESIGN.md §6).  Head counts that don't divide the mesh fall back to
+    replication (the resolver's divisibility rule) instead of failing.
+    """
 
     def __init__(self, model: Model, *, n_slabs: int = 16,
                  blocks_per_slab: int = 8, page_T: int = 16,
@@ -180,7 +251,7 @@ class PagedServingEngine:
                  params=None, seed: int = 0,
                  compact_trigger: int = 2, compact_batch: int = 4,
                  n_open: int = 4, max_decode_chunk: int = 32,
-                 warmup: bool = False):
+                 warmup: bool = False, mesh=None):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
@@ -202,11 +273,32 @@ class PagedServingEngine:
 
         L, Kh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
         shape = (L, n_pages + 1, page_T, Kh, hd)
-        self.k_pools = jnp.zeros(shape, jnp.bfloat16)
-        self.v_pools = jnp.zeros(shape, jnp.bfloat16)
+
+        self.mesh = mesh
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError("serving mesh needs a 'model' axis; use "
+                                 "launch.mesh.make_serving_mesh")
+            self._rep_shard = NamedSharding(mesh, PartitionSpec())
+            self._kv_shard = NamedSharding(
+                mesh, resolve_spec(shape, tfm.kv_pool_axes(), mesh,
+                                   SERVING_RULES))
+        else:
+            self._rep_shard = self._kv_shard = None
+        # whether the pools actually shard (divisible kv heads) or fell back
+        # to replication — the mesh-aware kernel/constraint paths key off this
+        self._pool_sharded = (self._kv_shard is not None and
+                              any(p is not None for p in self._kv_shard.spec))
+
+        self.k_pools = self._zeros_kv(shape)
+        self.v_pools = self._zeros_kv(shape)
 
         self.params = params if params is not None else model.init(
             jax.random.PRNGKey(seed))
+        if mesh is not None:
+            self.params = jax.device_put(
+                self.params, _serving_param_shardings(model, self.params,
+                                                      mesh))
 
         # --- host slot state: flat numpy arrays, one row per batch slot ---
         B, P = max_batch, self.max_pages_per_seq
@@ -221,27 +313,56 @@ class PagedServingEngine:
 
         # --- device-resident mirrors (uploaded only when an event dirties
         # them; the decode dispatch itself keeps seq_lens/tokens on device) --
-        self._bt_dev = jnp.asarray(self.bt)
-        self._lens_dev = jnp.asarray(self.lens)
-        self._tok_dev = jnp.asarray(self.tokens)
-        self._act_dev = jnp.asarray(self.rid >= 0)
+        self._bt_dev = self._put_rep(self.bt)
+        self._lens_dev = self._put_rep(self.lens)
+        self._tok_dev = self._put_rep(self.tokens)
+        self._act_dev = self._put_rep(self.rid >= 0)
         self._bt_dirty = False
         self._state_dirty = False
 
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: dict[int, list[int]] = {}
         self._admit_done: list[int] = []  # finished during admission
-        self._decode = make_paged_decode_step(cfg, page_T, use_pallas,
-                                              max_chunk=max_decode_chunk)
+        # pass the mesh / pool sharding to the jitted paths only when the
+        # pools actually shard; with replicated fallback pools everything
+        # runs the plain (pallas-capable) kernels identically on every device
+        move_shard = self._kv_shard if self._pool_sharded else None
+        self._decode = make_paged_decode_step(
+            cfg, page_T, use_pallas, max_chunk=max_decode_chunk,
+            mesh=mesh if self._pool_sharded else None,
+            kv_shard=self._kv_shard, rep_shard=self._rep_shard)
         self._prefill = jax.jit(
             functools.partial(_prefill_fn, cfg=cfg),
             static_argnames=("max_len",))
-        self._scatter = jax.jit(_scatter_prefill_fn, donate_argnums=(0, 1))
-        self._move = jax.jit(_move_pages_fn, donate_argnums=(0, 1),
-                             static_argnames=("use_pallas",))
+        self._scatter = jax.jit(
+            functools.partial(_scatter_prefill_fn, shard=self._kv_shard),
+            donate_argnums=(0, 1))
+        self._move = jax.jit(
+            functools.partial(_move_pages_fn, shard=move_shard),
+            donate_argnums=(0, 1), static_argnames=("use_pallas",))
         self._next_rid = 0
         if warmup:
             self.warmup()
+
+    # -------------------------------------------------------- mesh plumbing
+    def _zeros_kv(self, shape):
+        """Allocate a pool tensor directly under its sharding: each device
+        materializes only its head-slice — never the full pool (which is the
+        per-device-HBM win sharding exists for)."""
+        if self._kv_shard is None:
+            return jnp.zeros(shape, jnp.bfloat16)
+        return jax.jit(functools.partial(jnp.zeros, shape, jnp.bfloat16),
+                       out_shardings=self._kv_shard)()
+
+    def _put_rep(self, x):
+        """Upload host state, replicated across the mesh when sharded."""
+        return jnp.asarray(x) if self._rep_shard is None else jax.device_put(
+            np.asarray(x), self._rep_shard)
+
+    def _mesh_ctx(self):
+        """Mesh context for paths whose sharding is steered by logical-axis
+        constraints resolved at trace time (prefill); null off-mesh."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
     def warmup(self) -> None:
         """Ahead-of-time compile of the serving hot paths (what production
@@ -260,15 +381,16 @@ class PagedServingEngine:
         while tb <= max_prompt_bucket:
             n_pages = -(-tb // T)
             _, max_len = self._prefill_bucket(tb, n_pages)
-            first, ks, vs = self._prefill(
-                self.params, jnp.zeros((1, tb), jnp.int32), np.int32(1),
-                max_len=max_len)
+            with self._mesh_ctx():
+                first, ks, vs = self._prefill(
+                    self.params, jnp.zeros((1, tb), jnp.int32), np.int32(1),
+                    max_len=max_len)
             L, _, _, Kh, hd = ks.shape
             kp = ks[:, 0].reshape(L, max_len // T, T, Kh, hd)
             vp = vs[:, 0].reshape(L, max_len // T, T, Kh, hd)
             trash = np.full(max_len // T, self.trash_page, np.int32)
             self.k_pools, self.v_pools = self._scatter(
-                self.k_pools, self.v_pools, kp, vp, jnp.asarray(trash))
+                self.k_pools, self.v_pools, kp, vp, self._put_rep(trash))
             tb *= 2
 
     # ------------------------------------------------------------- requests
@@ -341,9 +463,10 @@ class PagedServingEngine:
         tok_bucket, max_len = self._prefill_bucket(plen, n_pages)
         toks = np.zeros(tok_bucket, np.int32)
         toks[:plen] = req.prompt
-        first_tok, ks, vs = self._prefill(
-            self.params, jnp.asarray(toks)[None], np.int32(plen),
-            max_len=max_len)
+        with self._mesh_ctx():
+            first_tok, ks, vs = self._prefill(
+                self.params, jnp.asarray(toks)[None], np.int32(plen),
+                max_len=max_len)
         L, _, _, Kh, hd = ks.shape
         nb = max_len // self.page_T
         kp = ks[:, 0].reshape(L, nb, self.page_T, Kh, hd)
@@ -353,7 +476,7 @@ class PagedServingEngine:
         pages_pad = np.full(nb, self.trash_page, np.int32)
         pages_pad[:n_pages] = pages
         self.k_pools, self.v_pools = self._scatter(
-            self.k_pools, self.v_pools, kp, vp, jnp.asarray(pages_pad))
+            self.k_pools, self.v_pools, kp, vp, self._put_rep(pages_pad))
 
         self.rid[i] = req.rid
         self.lens[i] = plen
@@ -384,12 +507,12 @@ class PagedServingEngine:
     def _sync_device(self) -> None:
         """Upload host state that an event dirtied since the last dispatch."""
         if self._bt_dirty:
-            self._bt_dev = jnp.asarray(self.bt)
+            self._bt_dev = self._put_rep(self.bt)
             self._bt_dirty = False
         if self._state_dirty:
-            self._lens_dev = jnp.asarray(self.lens)
-            self._tok_dev = jnp.asarray(self.tokens)
-            self._act_dev = jnp.asarray(self.rid >= 0)
+            self._lens_dev = self._put_rep(self.lens)
+            self._tok_dev = self._put_rep(self.tokens)
+            self._act_dev = self._put_rep(self.rid >= 0)
             self._state_dirty = False
 
     def _event_horizon(self, active: np.ndarray) -> int:
@@ -457,15 +580,10 @@ class PagedServingEngine:
             return
         # pad the plan to a power-of-two bucket with trash→trash moves so
         # plan sizes share compiled executables
-        m = len(plan)
-        bucket = _pow2(m)
-        src = np.full(bucket, self.trash_page, np.int32)
-        dst = np.full(bucket, self.trash_page, np.int32)
-        src[:m] = plan.src_pages
-        dst[:m] = plan.dst_pages
+        src, dst = plan.padded(_pow2(len(plan)), self.trash_page)
         self.k_pools, self.v_pools = self._move(
-            self.k_pools, self.v_pools, jnp.asarray(src), jnp.asarray(dst),
-            use_pallas=self.use_pallas)
+            self.k_pools, self.v_pools, self._put_rep(src),
+            self._put_rep(dst), use_pallas=self.use_pallas)
         # remap block tables: one vectorized page-id lookup over the matrix
         lut = np.arange(self.trash_page + 1, dtype=np.int32)
         lut[plan.src_pages] = plan.dst_pages
@@ -488,7 +606,9 @@ class PagedServingEngine:
 def _prefill_fn(params, toks, true_len, *, cfg, max_len):
     """Bucketed dense prefill; ``toks`` is right-padded to the bucket and
     ``true_len`` (traced) marks the prompt end.  Returns (first token,
-    K (L, B, max_len, Kh, hd), V)."""
-    logits, cache = tfm.prefill(params, toks, cfg, max_len, true_len=true_len)
+    K (L, B, max_len, Kh, hd), V).  ``gather_heads`` keeps sharded prefill
+    bit-identical under a serving mesh (and is inert off-mesh)."""
+    logits, cache = tfm.prefill(params, toks, cfg, max_len, true_len=true_len,
+                                gather_heads=True)
     first = jnp.argmax(logits, -1).astype(jnp.int32)
     return first, cache["k"], cache["v"]

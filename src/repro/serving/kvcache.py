@@ -51,13 +51,29 @@ PoolStats = StoreStats  # unified counters; serving names are alias properties
 
 @dataclasses.dataclass
 class CompactionPlan:
-    """src/dst physical page ids (parallel arrays) + owners for remapping."""
+    """src/dst physical page ids (parallel arrays) + owners for remapping.
+
+    Page ids are *global* physical ids, so one plan is valid for every shard
+    of a tensor-parallel pool: each shard applies the same src→dst moves to
+    its head-slice of the pages (DESIGN.md §6).  Plans therefore carry no
+    device or shard information — they are pure host-side placement.
+    """
     src_pages: np.ndarray
     dst_pages: np.ndarray
     owners: np.ndarray
 
     def __len__(self) -> int:
         return len(self.src_pages)
+
+    def padded(self, bucket: int, fill: int) -> tuple[np.ndarray, np.ndarray]:
+        """(src, dst) int32 arrays padded to ``bucket`` with fill→fill moves
+        (the engine points ``fill`` at its trash page), so plan sizes share
+        compiled executables."""
+        src = np.full(bucket, fill, np.int32)
+        dst = np.full(bucket, fill, np.int32)
+        src[:len(self)] = self.src_pages
+        dst[:len(self)] = self.dst_pages
+        return src, dst
 
 
 class LogStructuredKVPool:

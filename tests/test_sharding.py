@@ -13,7 +13,7 @@ import pytest
 from _hyp import given, settings, st  # degrades to skips without hypothesis
 
 import jax
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.distributed.sharding import DEFAULT_RULES, resolve_spec, spec_shards
 
@@ -57,6 +57,70 @@ def test_known_rules_resolve_as_documented():
     # 1x1 mesh everything divides — structural check only
     spec = resolve_spec((8, 128), ("kv", "head_dim"), mesh)
     assert spec_shards(spec, mesh) >= 1
+
+
+# --------------------------------------------------- resolver edge cases
+# resolve_spec only reads mesh.axis_names / mesh.shape, so a duck-typed
+# mesh lets the properties run against *multi-way* axes without devices
+# (a real Mesh on this host could only ever be 1x1, where everything
+# divides and the interesting branches never execute).
+
+class _FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+_MESHES = [_FakeMesh({"data": 5, "model": 3}),
+           _FakeMesh({"model": 8}),
+           _FakeMesh({"pod": 2, "data": 3, "model": 4})]
+
+ALL_AXES = AXIS_NAMES + ["seq_act", "batch"]
+
+
+@given(st.integers(0, len(_MESHES) - 1),
+       st.lists(st.tuples(st.sampled_from(ALL_AXES), st.integers(1, 48)),
+                min_size=1, max_size=5))
+@settings(max_examples=80, deadline=None)
+def test_resolver_never_reuses_axis_and_always_divides(mi, dims):
+    """On meshes with non-trivial axis sizes: every assigned mesh axis must
+    divide its dim, and no mesh axis is ever assigned to two dims of one
+    tensor (both are GSPMD hard errors)."""
+    mesh = _MESHES[mi]
+    axes = tuple(a for a, _ in dims)
+    shape = tuple(s for _, s in dims)
+    spec = resolve_spec(shape, axes, mesh)
+    used = []
+    for size, part in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if part is None:
+            continue
+        total = 1
+        for m in (part,) if isinstance(part, str) else part:
+            assert m in mesh.axis_names
+            used.append(m)
+            total *= mesh.shape[m]
+        assert size % total == 0, (size, part)
+    assert len(used) == len(set(used)), spec
+
+
+def test_resolver_falls_back_to_replication_when_nothing_divides():
+    """No candidate divides ⇒ replicate (PartitionSpec()), never raise —
+    this is what lets kv_heads=2 serve on an 8-way model mesh."""
+    mesh = _FakeMesh({"model": 8})
+    assert resolve_spec((2, 32), ("kv", "head_dim"), mesh) == PartitionSpec()
+    # joint candidate ("pod","data") skipped when only one member exists,
+    # and the single-axis fallback is taken instead
+    mesh2 = _FakeMesh({"data": 4})
+    spec = resolve_spec((8, 16), ("batch", "embed"), mesh2)
+    assert spec[0] == "data"
+    # ... and the second dim can't reuse "data" even though embed maps to it
+    assert len(spec) < 2 or spec[1] is None
+
+
+def test_resolver_zero_sized_dim_replicates():
+    mesh = _FakeMesh({"model": 8})
+    assert resolve_spec((0, 8), ("vocab", "kv"), mesh) == \
+        PartitionSpec(None, "model")
 
 
 DRYRUN_SNIPPET = textwrap.dedent("""
