@@ -76,6 +76,90 @@ def pool_traffic(policy: str, *, n_slabs=64, bps=8, n_seqs=600, seed=0,
                 wall_s=round(time.time() - t0, 2))
 
 
+def shared_prefix_rows(quick: bool = True) -> list[dict]:
+    """N users × one system prompt + unique tails (the prefix-cache
+    workload): cold vs cached engine on the identical request stream.
+
+    Protocol: each engine runs the workload twice — the first pass warms
+    every compile bucket (and, for the cached engine, populates the radix
+    tree, so the timed pass measures *steady-state* serving where even the
+    first submission of a prompt prefix hits).  Metrics are deltas over the
+    timed pass.  The cached engine's decoded tokens are asserted
+    bit-identical to the cold engine's (pool_dtype=float32 — the exact-reuse
+    mode, DESIGN.md §7), so the row can't silently ship wrong tokens."""
+    import jax.numpy as jnp
+
+    from repro.serving import PagedServingEngine
+
+    model = Model(get_config("qwen3-1.7b").smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    n_req = 12 if quick else 32
+    rng = np.random.default_rng(5)
+    sys_prompt = np.random.default_rng(99).integers(
+        1, model.cfg.vocab_size, size=48)  # 6 full pages at page_T=8
+    reqs = [(np.concatenate([sys_prompt,
+                             rng.integers(1, model.cfg.vocab_size,
+                                          size=int(rng.integers(4, 13)))]),
+             int(rng.integers(6, 11))) for _ in range(n_req)]
+
+    def run(cache: bool):
+        eng = PagedServingEngine(
+            model, n_slabs=16, blocks_per_slab=4, page_T=8, max_batch=4,
+            max_seq=128, policy="mdc", params=params, compact_trigger=2,
+            compact_batch=3, prefix_cache=cache, pool_dtype=jnp.float32,
+            warmup=True)
+        # Warm passes: the first populates the radix tree (and compiles the
+        # first-hit shapes), the second — cache runs only — compiles the
+        # *steady-state* hit shapes (deeper matches once a prompt's own tail
+        # pages are cached).  The tree is key-stable after pass 2, so the
+        # timed pass replays exactly pass 2's executables.
+        for _ in range(2 if cache else 1):
+            for prompt, n_new in reqs:
+                eng.submit(prompt, n_new)
+            while eng.has_work():
+                eng.step()
+        base = eng.pool.stats.snapshot()
+        pf_total0, pf_saved0 = eng._prefill_tokens_total, \
+            eng._prefill_tokens_saved
+        if cache:   # hit rate, like every other metric, is a timed-pass delta
+            hits0, lookups0 = eng.prefix_cache.hits, eng.prefix_cache.lookups
+        done0 = len(eng.finished)
+        t0 = time.time()
+        rids = [eng.submit(p, n) for p, n in reqs]  # timed steady-state pass
+        while eng.has_work():
+            eng.step()
+        dt = time.time() - t0
+        st = eng.pool.stats.since(base)
+        toks = sum(len(eng.finished[r]) for r in rids)
+        assert len(eng.finished) == done0 + n_req
+        row = dict(blocks_written=st.blocks_written,
+                   blocks_moved=st.blocks_moved, wamp=round(st.wamp(), 3),
+                   mean_E=round(st.mean_E(), 3), compactions=st.compactions,
+                   tok_per_s=round(toks / dt, 1))
+        if cache:
+            total = eng._prefill_tokens_total - pf_total0
+            saved = eng._prefill_tokens_saved - pf_saved0
+            hits = eng.prefix_cache.hits - hits0
+            lookups = eng.prefix_cache.lookups - lookups0
+            row.update(hit_rate=round(hits / max(lookups, 1), 3),
+                       prefill_saved=saved,
+                       prefill_x=round(total / max(total - saved, 1), 2))
+        tokens = [eng.finished[r] for r in rids]
+        eng.pool.check_invariants()
+        return row, tokens
+
+    cold_row, cold_tokens = run(False)
+    hot_row, hot_tokens = run(True)
+    assert hot_tokens == cold_tokens, \
+        "prefix-cache hits changed decoded tokens (must be bit-identical)"
+    # acceptance floor (ISSUE 4): >= 2x fewer prefill tokens at >= 90% hits
+    assert hot_row["prefill_x"] >= 2.0, hot_row
+    assert hot_row["hit_rate"] >= 0.9, hot_row
+    cold_row["policy"] = "mdc (shared_prefix off)"
+    hot_row["policy"] = "mdc (shared_prefix on)"
+    return [cold_row, hot_row]
+
+
 def _e2e_row(label: str, e2e: dict, **extra) -> dict:
     return {"policy": label, "blocks_written": e2e["blocks_written"],
             "blocks_moved": e2e["blocks_moved"],
@@ -101,6 +185,9 @@ def run(quick: bool = True, mesh_devices: int = 0) -> list[dict]:
                     model=model, verbose=False)
     rows.append(_e2e_row("mdc (e2e engine)", e2e,
                          tok_per_s_pre_multistep=TOK_PER_S_PRE_MULTISTEP))
+    # shared-prefix workload: cold vs prefix-cached engine, bit-identity
+    # asserted inside (tokens must not change; only FLOPs and Wamp may)
+    rows.extend(shared_prefix_rows(quick))
     if mesh_devices:
         # tensor-parallel engine over an N-device "model" mesh: same pool
         # plan (Wamp/compactions shard-invariant), per-device tok/s recorded.
@@ -188,8 +275,9 @@ def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
         return
     base = {r.get("policy"): r for r in baseline}
     lines = ["### bench_serving vs committed baseline", "",
-             "| policy | tok/s | base | Δ | Wamp | base | Δ |",
-             "|---|---|---|---|---|---|---|"]
+             "| policy | tok/s | base | Δ | Wamp | base | Δ "
+             "| hit | prefill saved | Δ |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         b = base.get(r.get("policy"), {})
 
@@ -202,7 +290,9 @@ def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
             f"| {r['policy']} | {_fmt(r.get('tok_per_s'))} "
             f"| {_fmt(b.get('tok_per_s'))} | {d('tok_per_s')} "
             f"| {_fmt(r.get('wamp'))} | {_fmt(b.get('wamp'))} "
-            f"| {d('wamp')} |")
+            f"| {d('wamp')} "
+            f"| {_fmt(r.get('hit_rate'))} | {_fmt(r.get('prefill_saved'))} "
+            f"| {d('prefill_saved')} |")
     with open(path, "a") as f:
         f.write("\n".join(lines) + "\n")
 
@@ -213,7 +303,8 @@ def main(quick: bool = True, check: bool = False, mesh: int = 0) -> None:
     print_table("Serving KV pool — block-move overhead per policy", rows,
                 ["policy", "blocks_written", "blocks_moved", "wamp",
                  "mean_E", "compactions", "blocks_per_s", "tok_per_s",
-                 "tok_per_s_per_device", "wall_s"])
+                 "tok_per_s_per_device", "hit_rate", "prefill_saved",
+                 "prefill_x", "wall_s"])
     save_json("bench_serving", rows, {"quick": quick})
     _github_step_summary(rows, baseline)
     if check:

@@ -72,10 +72,12 @@ class StoreStats:
     user_bytes: int = 0
     gc_moves: int = 0          # items relocated by cleaning
     gc_bytes: int = 0
-    deaths: int = 0            # items superseded / freed
+    deaths: int = 0            # items superseded / freed (refcount hit zero)
     cleaned_segments: int = 0
     cleanings: int = 0         # clean cycles (pool: compactions)
     sum_E_cleaned: float = 0.0  # Σ empty-fraction of cleaned segments
+    frames_shared: int = 0     # extra references taken on live frames
+    ref_drops: int = 0         # decrefs that did NOT free (sharing survived)
 
     def wamp(self) -> float:
         """Write amplification: moved / written, in bytes when byte counts
@@ -151,6 +153,7 @@ class EvacResult:
     up2_slot: np.ndarray     # per-slot appended u_p2 per item
     segs: np.ndarray         # source segment per item
     slots: np.ndarray        # source slot per item
+    refs: np.ndarray = None  # reference count per item (carried by the move)
 
     def __len__(self) -> int:
         return len(self.items)
@@ -248,6 +251,12 @@ class FrameLog(LogStructureBase):
         self.seg_fill = np.zeros(nseg, dtype=np.int64)  # next free slot
         self.slot_item = np.full((nseg, self.S), -1, dtype=np.int64)
         self.slot_up2 = np.zeros((nseg, self.S), dtype=np.float64)
+        # reference count per slot: 0 = dead/empty, >= 1 live.  Frontends
+        # that never share (simulator, checkpoint) keep it pinned at 1 for
+        # live slots, so the ref machinery is invisible to them; the KV
+        # pool's prefix cache increfs shared pages (multi-referenced
+        # liveness, DESIGN.md §7).
+        self.slot_ref = np.zeros((nseg, self.S), dtype=np.int64)
         self.max_items = max_items
         if max_items is not None:
             self.item_seg = np.full(max_items, -1, dtype=np.int64)
@@ -277,14 +286,20 @@ class FrameLog(LogStructureBase):
 
     def append(self, s: int, items: np.ndarray, up2: np.ndarray,
                probs: np.ndarray | None = None,
-               kind: str | None = None) -> np.ndarray:
-        """Append items to an OPEN segment; returns their slot indices."""
+               kind: str | None = None,
+               refs: np.ndarray | None = None) -> np.ndarray:
+        """Append items to an OPEN segment; returns their slot indices.
+
+        ``refs``: reference count per item (default 1 — a fresh user write
+        has exactly its owner's reference).  GC re-appends pass the counts
+        carried out of the victims so sharing survives relocation."""
         n = len(items)
         start = int(self.seg_fill[s])
         assert self.seg_state[s] == OPEN and start + n <= self.S
         sl = slice(start, start + n)
         self.slot_item[s, sl] = items
         self.slot_up2[s, sl] = up2
+        self.slot_ref[s, sl] = 1 if refs is None else refs
         self.seg_fill[s] = start + n
         self.seg_live[s] += n
         self.seg_up2sum[s] += float(np.sum(up2))
@@ -298,16 +313,75 @@ class FrameLog(LogStructureBase):
         self._count_write(kind, n, n * self.frame_bytes)
         return np.arange(start, start + n)
 
+    # -- sharing --------------------------------------------------------------
+    def incref_slots(self, segs: np.ndarray, slots: np.ndarray,
+                     up2: np.ndarray | None = None) -> None:
+        """Take an extra reference on live frames (prefix sharing).
+
+        A multi-referenced frame is live until *every* reference is dropped;
+        ``up2`` (optional) raises each frame's death estimate to the max over
+        its referencing sequences — a shared frame dies when the *last*
+        referencer does, so that is the estimate the placement sort and the
+        MDC victim key must see.  (seg, slot) pairs must be unique within
+        one call, like ``kill_slots`` — fancy-index updates apply once per
+        unique index, so a duplicate would silently under-count."""
+        segs = np.asarray(segs, dtype=np.int64)
+        slots = np.asarray(slots, dtype=np.int64)
+        if len(segs) == 0:
+            return
+        flat = segs * self.S + slots
+        assert len(np.unique(flat)) == len(flat), \
+            "duplicate (seg, slot) in one incref call"
+        assert (self.slot_ref[segs, slots] >= 1).all(), "incref of dead slot"
+        self.slot_ref[segs, slots] += 1
+        self.stats.frames_shared += len(segs)
+        if up2 is not None:
+            self.raise_up2(segs, slots, up2)
+
+    def raise_up2(self, segs: np.ndarray, slots: np.ndarray,
+                  up2: np.ndarray) -> None:
+        """Raise death estimates to ``max(current, up2)`` and re-tag the
+        containing segments (the §5.2.2 retag rule, as in ByteLog): sealed
+        segments recompute their frozen u_p2 mean so victim selection sees
+        the extended lifetime immediately."""
+        cur = self.slot_up2[segs, slots]
+        new = np.maximum(cur, np.asarray(up2, dtype=np.float64))
+        self.slot_up2[segs, slots] = new
+        np.add.at(self.seg_up2sum, segs, new - cur)
+        used = np.unique(segs[self.seg_state[segs] == USED])
+        if len(used):
+            self.seg_up2[used] = (self.seg_up2sum[used]
+                                  / np.maximum(self.seg_live[used], 1))
+
     # -- deaths ---------------------------------------------------------------
     def kill_slots(self, segs: np.ndarray, slots: np.ndarray,
                    probs: np.ndarray | None = None,
                    tick: bool = False) -> np.ndarray:
-        """Mark frames dead (their content was superseded / its owner died).
+        """Drop one reference per frame; frames whose count hits zero die.
+
+        For never-sharing frontends every live frame has exactly one
+        reference, so this is the plain "mark frames dead" of the paper
+        (their content was superseded / its owner died).  (seg, slot) pairs
+        must be unique within one call.  Death accounting — C decrement,
+        u_p2 sums, the paper's per-death clock tick — happens only for
+        frames that actually die; a decref that leaves the frame shared
+        only counts ``ref_drops``.
 
         Returns the segments auto-released (sealed segments that became fully
         empty), when ``auto_release_empty`` is on."""
         if len(segs) == 0:
             return np.empty(0, dtype=np.int64)
+        refs = self.slot_ref[segs, slots]
+        assert (refs >= 1).all(), "decref of dead slot"
+        self.slot_ref[segs, slots] = refs - 1
+        survive = refs > 1
+        if survive.any():
+            self.stats.ref_drops += int(survive.sum())
+            segs, slots = segs[~survive], slots[~survive]
+            if probs is not None:
+                probs = probs[~survive]
+            if len(segs) == 0:
+                return np.empty(0, dtype=np.int64)
         up2v = self.slot_up2[segs, slots]
         self.slot_item[segs, slots] = -1
         np.add.at(self.seg_live, segs, -1)
@@ -373,6 +447,7 @@ class FrameLog(LogStructureBase):
             up2_slot=self.slot_up2[victims][r, c],
             segs=segs,
             slots=c.astype(np.int64),
+            refs=self.slot_ref[victims][r, c],
         )
         counts = mask.sum(axis=1)
         self.stats.sum_E_cleaned += float((1.0 - counts / self.S).sum())
@@ -391,12 +466,17 @@ class FrameLog(LogStructureBase):
         super().release(victims)
         self.slot_item[victims] = -1
         self.slot_up2[victims] = 0.0
+        self.slot_ref[victims] = 0
         self.seg_fill[victims] = 0
 
     # -- invariant checks (used by property tests) ----------------------------
     def check_invariants(self) -> None:
         live_mask = self.slot_item >= 0
         assert (live_mask.sum(axis=1) == self.seg_live).all(), "C != live slots"
+        # refcounts and occupancy agree: a frame is live iff someone holds a
+        # reference, and never freed while its refcount is positive
+        assert ((self.slot_ref > 0) == live_mask).all(), \
+            "slot_ref / slot_item disagree on liveness"
         assert (self.seg_live[self.seg_state == FREE] == 0).all()
         assert self.free_count() == int((self.seg_state == FREE).sum())
         # nothing live past the fill pointer

@@ -22,7 +22,14 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               blocks_per_slab: int = 4, page_T: int = 8, max_batch: int = 4,
               n_open: int = 4, params=None, model: Model | None = None,
               use_pallas: bool | None = None, max_decode_chunk: int = 32,
-              mesh=None, verbose: bool = True) -> dict:
+              mesh=None, prefix_cache: bool = False,
+              prefix_cache_pages: int = 0, shared_prefix_len: int = 0,
+              verbose: bool = True) -> dict:
+    """One engine run over a request stream; returns metrics.
+
+    ``prefix_cache`` turns on shared-prefix KV reuse; ``shared_prefix_len``
+    prepends that many common tokens to every prompt (the system-prompt
+    workload that makes the cache hit)."""
     if model is None:
         model = Model(get_config(arch).smoke())
     rng = np.random.default_rng(seed)
@@ -33,12 +40,18 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              compact_batch=3, n_open=n_open,
                              use_pallas=use_pallas,
                              max_decode_chunk=max_decode_chunk, mesh=mesh,
+                             prefix_cache=prefix_cache,
+                             prefix_cache_pages=prefix_cache_pages,
                              warmup=True)  # AOT-compile outside the timed loop
-    # mixed short/long request stream (the checkerboarding driver)
+    # mixed short/long request stream (the checkerboarding driver); with
+    # shared_prefix_len, every prompt opens with the same system prompt
+    sys_prompt = np.random.default_rng(99).integers(
+        1, model.cfg.vocab_size, size=shared_prefix_len)
     for _ in range(requests):
         plen = int(rng.integers(4, 40))
         nnew = int(rng.choice([4, 8, 12, 24, 48], p=[.3, .25, .2, .15, .1]))
-        eng.submit(rng.integers(1, model.cfg.vocab_size, size=plen), nnew)
+        prompt = rng.integers(1, model.cfg.vocab_size, size=plen)
+        eng.submit(np.concatenate([sys_prompt, prompt]), nnew)
 
     t0 = time.time()
     dispatches = 0
@@ -51,11 +64,15 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
     out = dict(policy=policy, requests=requests, dispatches=dispatches,
                tokens=toks, tok_per_s=toks / dt, **m)
     if verbose:
+        extra = ""
+        if "prefix_hit_rate" in m:
+            extra = (f"  hit={m['prefix_hit_rate']:.2f} "
+                     f"prefill_saved={m['prefill_tokens_saved']}")
         print(f"[serve] {policy:12s} {toks:5d} tok in {dt:6.2f}s "
               f"({out['tok_per_s']:7.1f} tok/s, {dispatches} dispatches)  "
               f"Wamp={m['wamp']:.3f} "
               f"meanE={m['mean_E_compacted']:.3f} "
-              f"compactions={m['compactions']}")
+              f"compactions={m['compactions']}{extra}")
     return out
 
 
@@ -76,6 +93,16 @@ def main() -> None:
                     help="tensor-parallel serving over N devices (1-D 'model'"
                          " mesh; on CPU export XLA_FLAGS=--xla_force_host_"
                          "platform_device_count=N first)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix KV reuse: cache full-page prompt "
+                         "prefixes and prefill only the uncached tail")
+    ap.add_argument("--prefix-cache-pages", type=int, default=0, metavar="P",
+                    help="soft cap on cached pages (LRU eviction above it; "
+                         "0 = bounded only by pool pressure); implies "
+                         "--prefix-cache")
+    ap.add_argument("--shared-prefix-len", type=int, default=0, metavar="S",
+                    help="prepend S common system-prompt tokens to every "
+                         "request (the workload prefix caching accelerates)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     use_pallas = {"auto": None, "on": True, "off": False}[args.use_pallas]
@@ -91,7 +118,10 @@ def main() -> None:
     results = [serve_run(arch=args.arch, requests=args.requests, policy=p,
                          seed=args.seed, n_open=args.n_open, params=params,
                          model=model, use_pallas=use_pallas,
-                         max_decode_chunk=args.chunk, mesh=mesh)
+                         max_decode_chunk=args.chunk, mesh=mesh,
+                         prefix_cache=args.prefix_cache,
+                         prefix_cache_pages=args.prefix_cache_pages,
+                         shared_prefix_len=args.shared_prefix_len)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

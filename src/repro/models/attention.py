@@ -181,6 +181,51 @@ def gqa_prefill(x, p, cfg, *, gather_heads: bool = False):
     return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (k, v)
 
 
+def gqa_prefill_cont(x, p, cfg, k_pre, v_pre, *, kv_len: int | None = None,
+                     gather_heads: bool = False):
+    """Prefill *continuation*: ``x`` holds positions ``[P, P+S)`` of a
+    sequence whose first ``P`` positions already have cached K/V
+    (``k_pre``/``v_pre``: (B, P, Kh, hd), e.g. gathered from the serving
+    pool's shared prefix pages).  Only the tail's Q/K/V are computed; the
+    attention runs over ``concat(prefix, tail)`` with ``q_offset=P``, which
+    is exactly the mask and the per-row online-softmax arithmetic of a full
+    prefill's rows ``[P, P+S)`` — the cached prefix must be *unpadded* so
+    key positions line up absolutely (the engine guarantees full-page
+    prefixes).
+
+    ``kv_len`` (static): total key extent to present to the attention.  For
+    bit-identity with a full prefill this must be the *full prompt's padded
+    bucket*: reductions over the key dim (softmax sums, P·V) are tiled by
+    shape, so only an identical extent — same nonzero layout, masked
+    tail exactly zero — reproduces the full prefill's arithmetic to the
+    last ulp.  The tail K/V is zero-padded (or pad rows truncated) to
+    ``kv_len - P``; both regions are causally masked, so the value layout
+    matches the full prefill's wherever the mask admits.
+
+    Returns (attn out, (k_tail, v_tail))."""
+    B, S, _ = x.shape
+    P = k_pre.shape[1]
+    positions = P + jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    kt, vt = k, v
+    if kv_len is not None:
+        ext = kv_len - P
+        assert ext >= 1
+        if S < ext:   # masked zeros out to the full prompt's bucket
+            pad = ((0, 0), (0, ext - S), (0, 0), (0, 0))
+            kt, vt = jnp.pad(kt, pad), jnp.pad(vt, pad)
+        elif S > ext:  # only pad rows (>= plen - P) are cut, all masked
+            kt, vt = kt[:, :ext], vt[:, :ext]
+    k_cat = jnp.concatenate([k_pre.astype(k.dtype), kt], axis=1)
+    v_cat = jnp.concatenate([v_pre.astype(v.dtype), vt], axis=1)
+    out = chunked_attention(q, k_cat, v_cat, causal=True, q_offset=P,
+                            q_block=cfg.q_block, kv_block=cfg.kv_block)
+    if gather_heads:
+        from ..distributed.sharding import logical_constraint
+        out = logical_constraint(out, ("batch", None, None, None))
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (k, v)
+
+
 def gqa_decode(x, p, cfg, cache_k, cache_v, cur_len):
     """One-token decode. x: (B,1,d). cache_[kv]: (B,T,Kh,hd) updated in place
     at position cur_len (B,). Returns (out, new_k, new_v)."""

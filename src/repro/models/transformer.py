@@ -539,3 +539,50 @@ def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16,
         cache["cur_len"] = jnp.full((B,), true_len, jnp.int32)
     logits = _unembed(params, last, cfg)[:, 0]
     return logits, cache
+
+
+def prefill_with_prefix(params, tokens, cfg, prefix_k, prefix_v, max_len,
+                        true_len=None, kv_len=None, cache_dtype=jnp.bfloat16,
+                        gather_heads=False):
+    """Tail-only prefill over cached prefix K/V (the prefix-cache hit path).
+
+    ``tokens`` (B, S) is the *uncached tail* of the prompt (right-padded to
+    its bucket, true length ``true_len``); ``prefix_k``/``prefix_v``
+    (L, B, P, Kh, hd) hold the first ``P`` positions' K/V, e.g. gathered
+    from the serving pool's shared prefix pages.  Row-for-row this computes
+    exactly what :func:`prefill`'s positions ``[P, P+true_len)`` compute —
+    same rope positions, same attention arithmetic via
+    ``gqa_prefill_cont`` — but spends FLOPs only on the tail.  The prefix
+    must be unpadded (full pages) so key positions align absolutely, and
+    ``kv_len`` (static) must be the *full prompt's* padded bucket so the
+    key-dim reductions tile identically (see ``gqa_prefill_cont``).
+
+    Returns (last-tail-position logits, K tail cache (L, B, max_len, Kh,
+    hd), V tail cache) — only the tail's K/V, for the engine to scatter
+    into its freshly allocated pages.  Attention families only (dense/moe:
+    the paged engine's families)."""
+    assert cfg.family in ("dense", "moe"), cfg.family
+    B, S = tokens.shape
+    x = _embed(params, tokens, cfg, None)
+
+    def pad_kv(k):  # (B,S,K,hd) -> (B,max_len,K,hd)
+        return jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0),
+                           (0, 0))).astype(cache_dtype)
+
+    def step(h, xs):
+        lp, kp, vp = xs
+        a, (k, v) = att.gqa_prefill_cont(rmsnorm(h, lp["ln1"]), lp["attn"],
+                                         cfg, kp, vp, kv_len=kv_len,
+                                         gather_heads=gather_heads)
+        h = h + a
+        h = h + _block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+        return h, (pad_kv(k), pad_kv(v))
+
+    x, (ks, vs) = jax.lax.scan(step, x, (params["blocks"], prefix_k,
+                                         prefix_v))
+    if true_len is None:
+        last = x[:, -1:, :]
+    else:
+        last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    logits = _unembed(params, last, cfg)[:, 0]
+    return logits, ks, vs

@@ -3,6 +3,7 @@ space is reclaimed by the paper's MDC cleaning policy."""
 
 from .engine import PagedServingEngine, Request
 from .kvcache import CompactionPlan, LogStructuredKVPool, PoolStats
+from .prefix_cache import PrefixCache
 
 __all__ = ["PagedServingEngine", "Request", "LogStructuredKVPool",
-           "CompactionPlan", "PoolStats"]
+           "CompactionPlan", "PoolStats", "PrefixCache"]

@@ -54,6 +54,7 @@ from ..models import transformer as tfm
 from ..models.layers import rmsnorm
 from .. import kernels
 from .kvcache import LogStructuredKVPool
+from .prefix_cache import PrefixCache
 
 
 @dataclasses.dataclass
@@ -251,7 +252,9 @@ class PagedServingEngine:
                  params=None, seed: int = 0,
                  compact_trigger: int = 2, compact_batch: int = 4,
                  n_open: int = 4, max_decode_chunk: int = 32,
-                 warmup: bool = False, mesh=None):
+                 warmup: bool = False, mesh=None,
+                 prefix_cache: bool = False, prefix_cache_pages: int = 0,
+                 pool_dtype=jnp.bfloat16):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
@@ -261,6 +264,11 @@ class PagedServingEngine:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = use_pallas
         self.max_decode_chunk = max_decode_chunk
+        # Pool payload dtype.  Reuse note (DESIGN.md §7): with a reduced
+        # dtype, a prefix-hit tail prefill attends the *rounded* prefix K/V
+        # where a cold full prefill attends full-precision activations, so
+        # hits are approximate; pool_dtype=float32 makes them bit-exact.
+        self.pool_dtype = pool_dtype
 
         self.pool = LogStructuredKVPool(
             n_slabs, blocks_per_slab, policy=policy, n_open=n_open,
@@ -268,6 +276,13 @@ class PagedServingEngine:
         # synchronous plan execution: tensor move + block-table remap happen
         # before any compaction-freed page id can be re-allocated
         self.pool.on_compaction = self._execute_plan
+        # shared-prefix KV reuse: full-page prompt prefixes keyed in a radix
+        # tree over the pool's physical pages (refcounted; DESIGN.md §7)
+        self.prefix_cache = (
+            PrefixCache(self.pool, page_T, capacity_pages=prefix_cache_pages)
+            if (prefix_cache or prefix_cache_pages) else None)
+        self._prefill_tokens_total = 0   # prompt tokens submitted to prefill
+        self._prefill_tokens_saved = 0   # of those, served from the cache
         n_pages = n_slabs * blocks_per_slab
         self.trash_page = n_pages  # reserved scratch page for inactive slots
 
@@ -331,9 +346,16 @@ class PagedServingEngine:
             cfg, page_T, use_pallas, max_chunk=max_decode_chunk,
             mesh=mesh if self._pool_sharded else None,
             kv_shard=self._kv_shard, rep_shard=self._rep_shard)
+        # prefill K/V leave the model at the pool dtype: with an f32 pool
+        # the cached prefix is the *unrounded* activation value, which is
+        # what makes prefix-hit tail prefills bit-exact (DESIGN.md §7)
         self._prefill = jax.jit(
-            functools.partial(_prefill_fn, cfg=cfg),
+            functools.partial(_prefill_fn, cfg=cfg, cache_dtype=pool_dtype),
             static_argnames=("max_len",))
+        self._prefill_cont = jax.jit(
+            functools.partial(_prefill_cont_fn, cfg=cfg, page_T=page_T,
+                              cache_dtype=pool_dtype),
+            static_argnames=("max_len", "kv_len"))
         self._scatter = jax.jit(
             functools.partial(_scatter_prefill_fn, shard=self._kv_shard),
             donate_argnums=(0, 1))
@@ -350,8 +372,8 @@ class PagedServingEngine:
         materializes only its head-slice — never the full pool (which is the
         per-device-HBM win sharding exists for)."""
         if self._kv_shard is None:
-            return jnp.zeros(shape, jnp.bfloat16)
-        return jax.jit(functools.partial(jnp.zeros, shape, jnp.bfloat16),
+            return jnp.zeros(shape, self.pool_dtype)
+        return jax.jit(functools.partial(jnp.zeros, shape, self.pool_dtype),
                        out_shardings=self._kv_shard)()
 
     def _put_rep(self, x):
@@ -369,7 +391,14 @@ class PagedServingEngine:
         engines do at startup): the multi-step decode dispatch and one
         prefill + page-scatter per power-of-two prompt bucket.  All dispatch
         inputs are inert (inactive slots / trash pages), so warming mutates
-        no served state."""
+        no served state.
+
+        The prefix-hit continuation prefill is NOT warmed: its compile key
+        is (shared pages, tail bucket, kv_len) — the exact prefix length is
+        what makes hits bit-identical (DESIGN.md §7), and pre-compiling the
+        combinatorial key space isn't feasible without knowing the
+        workload's prefix lengths.  Hit shapes compile at first use; a
+        steady workload reuses a handful of keys."""
         out, self.k_pools, self.v_pools, self._lens_dev, self._tok_dev = (
             self._decode(self.params, self.k_pools, self.v_pools,
                          self._bt_dev, self._lens_dev, self._tok_dev,
@@ -436,47 +465,118 @@ class PagedServingEngine:
                     ) // self.page_T
             if need > self.max_pages_per_seq:
                 raise ValueError("request exceeds max_seq")
-            if self.pool.free_blocks() < need + self.pool.compact_trigger:
+            avail = self.pool.free_blocks()
+            if (avail < need + self.pool.compact_trigger
+                    and self.prefix_cache is not None):
+                # unreferenced cached prefixes are reclaimable on demand
+                # (the pool's pressure hook evicts them before OOM); only
+                # walk the tree when free blocks alone don't suffice
+                avail += self.prefix_cache.evictable()
+            if avail < need + self.pool.compact_trigger:
                 break  # admission control: wait for deaths/compaction
             self.queue.popleft()
             self._start(int(i), req)
 
     def _start(self, i: int, req: Request) -> None:
         plen = len(req.prompt)
-        n_pages = (plen + self.page_T - 1) // self.page_T
+        T = self.page_T
+        n_pages = (plen + T - 1) // T
         # §5.3 placement estimator: blocks die when their sequence finishes
         # ⇒ expected death clock = now + blocks that will die then.
         est = self.pool.u_now + plen + req.max_new_tokens
+
+        # --- shared-prefix lookup: splice cached full pages (the lookup is
+        # CoW-capped: at least one prompt token is always prefilled, and a
+        # fully-matched final page is recomputed privately — DESIGN.md §7)
+        n_shared = 0
+        if self.prefix_cache is not None:
+            hit = self.prefix_cache.lookup(req.prompt)
+            n_shared = len(hit)
+            if n_shared:
+                shared = np.asarray(hit, np.int64)
+                # one reference per referencing sequence; the death estimate
+                # becomes the max over referencers (shared prefixes sort
+                # into long-lifetime slabs)
+                self.pool.incref_pages(shared, est)
+                # park the shared ids in the block table *before* the tail
+                # alloc: a compaction fired by it remaps this row too
+                self.bt[i, :] = self.trash_page
+                self.bt[i, :n_shared] = shared
+                self.npages[i] = n_shared
+
         # batched alloc: any compaction fires (and remaps the *other* slots'
-        # pages via the callback) before these page ids are handed out
-        pages = self.pool.alloc_blocks(
-            np.full(n_pages, req.rid, dtype=np.int64),
-            np.full(n_pages, est))
-        self.bt[i, :] = self.trash_page
-        self.bt[i, :n_pages] = pages
+        # pages via the callback) before these page ids are handed out.  If
+        # the pool still OOMs, the just-taken prefix references must be
+        # given back (rid[i] is not set yet, so no _finish would ever
+        # decref them) — otherwise every failed admission of a hitting
+        # prompt would permanently inflate the shared pages' refcounts.
+        try:
+            pages_new = self.pool.alloc_blocks(
+                np.full(n_pages - n_shared, req.rid, dtype=np.int64),
+                np.full(n_pages - n_shared, est))
+        except Exception:
+            if n_shared:
+                self.pool.free_pages(self.bt[i, :n_shared].astype(np.int64))
+                self.bt[i, :] = self.trash_page
+                self.npages[i] = 0
+                self._bt_dirty = True
+            raise
+        if n_shared == 0:
+            self.bt[i, :] = self.trash_page
+        self.bt[i, n_shared:n_pages] = pages_new
         self.npages[i] = n_pages
 
         # dense prefill -> scatter K/V into the allocated pages.  Prompt and
         # cache lengths are bucketed to powers of two so distinct prompt
         # lengths reuse one compiled prefill per bucket; the true length is
         # traced (dynamic last-token slice), not baked into the compile key.
-        tok_bucket, max_len = self._prefill_bucket(plen, n_pages)
-        toks = np.zeros(tok_bucket, np.int32)
-        toks[:plen] = req.prompt
-        with self._mesh_ctx():
-            first_tok, ks, vs = self._prefill(
-                self.params, jnp.asarray(toks)[None], np.int32(plen),
-                max_len=max_len)
+        # On a prefix hit, only the uncached tail is computed: the tail
+        # prefill attends the cached prefix K/V gathered straight from the
+        # pool pages (exact-length, so key positions align absolutely and
+        # the arithmetic matches a cold prefill row-for-row).
+        if n_shared:
+            tlen = plen - n_shared * T
+            tok_bucket, max_len = self._prefill_bucket(tlen,
+                                                       n_pages - n_shared)
+            toks = np.zeros(tok_bucket, np.int32)
+            toks[:tlen] = req.prompt[n_shared * T:]
+            prefix_pages = self.bt[i, :n_shared].astype(np.int32)  # post-remap
+            # kv_len = the bucket a cold full prefill of this prompt would
+            # attend over: identical key extents are what make the hit
+            # arithmetic bit-identical (gqa_prefill_cont's dtype/tiling note)
+            kv_len = self._prefill_bucket(plen, n_pages)[0]
+            with self._mesh_ctx():
+                first_tok, ks, vs = self._prefill_cont(
+                    self.params, self.k_pools, self.v_pools,
+                    self._put_rep(prefix_pages), jnp.asarray(toks)[None],
+                    np.int32(tlen), max_len=max_len, kv_len=kv_len)
+            self._prefill_tokens_saved += n_shared * T
+        else:
+            tok_bucket, max_len = self._prefill_bucket(plen, n_pages)
+            toks = np.zeros(tok_bucket, np.int32)
+            toks[:plen] = req.prompt
+            with self._mesh_ctx():
+                first_tok, ks, vs = self._prefill(
+                    self.params, jnp.asarray(toks)[None], np.int32(plen),
+                    max_len=max_len)
+        self._prefill_tokens_total += plen
         L, _, _, Kh, hd = ks.shape
-        nb = max_len // self.page_T
-        kp = ks[:, 0].reshape(L, nb, self.page_T, Kh, hd)
-        vp = vs[:, 0].reshape(L, nb, self.page_T, Kh, hd)
+        nb = max_len // T
+        kp = ks[:, 0].reshape(L, nb, T, Kh, hd)
+        vp = vs[:, 0].reshape(L, nb, T, Kh, hd)
         # scatter the whole bucket; pages beyond the allocation land in the
         # trash page, so the compile key is the bucket size, not n_pages
         pages_pad = np.full(nb, self.trash_page, np.int32)
-        pages_pad[:n_pages] = pages
+        pages_pad[:len(pages_new)] = pages_new
         self.k_pools, self.v_pools = self._scatter(
             self.k_pools, self.v_pools, kp, vp, self._put_rep(pages_pad))
+
+        # register this prompt's full (immutable) pages for future sharing;
+        # already-cached keys keep their existing page, so a recomputed
+        # boundary page simply stays private to this sequence
+        if self.prefix_cache is not None and plen // T:
+            self.prefix_cache.insert(req.prompt,
+                                     self.bt[i, :plen // T].copy(), est)
 
         self.rid[i] = req.rid
         self.lens[i] = plen
@@ -584,16 +684,20 @@ class PagedServingEngine:
         self.k_pools, self.v_pools = self._move(
             self.k_pools, self.v_pools, self._put_rep(src),
             self._put_rep(dst), use_pallas=self.use_pallas)
-        # remap block tables: one vectorized page-id lookup over the matrix
+        # remap block tables: one vectorized page-id lookup over the matrix.
+        # Every reference holder remaps with the same LUT — all slot rows
+        # (shared pages appear in several) and the prefix-cache tree.
         lut = np.arange(self.trash_page + 1, dtype=np.int32)
         lut[plan.src_pages] = plan.dst_pages
         self.bt = lut[self.bt]
+        if self.prefix_cache is not None:
+            self.prefix_cache.remap(lut)
         self._bt_dirty = True
 
     # ------------------------------------------------------------- metrics
     def metrics(self) -> dict:
         st = self.pool.stats
-        return {
+        m = {
             "blocks_written": st.blocks_written,
             "blocks_moved": st.blocks_moved,
             "wamp": st.wamp(),
@@ -601,14 +705,51 @@ class PagedServingEngine:
             "compactions": st.compactions,
             "free_blocks": self.pool.free_blocks(),
         }
+        if self.prefix_cache is not None:
+            total = self._prefill_tokens_total
+            saved = self._prefill_tokens_saved
+            m.update(
+                prefix_hit_rate=self.prefix_cache.hit_rate(),
+                prefill_tokens=total,
+                prefill_tokens_saved=saved,
+                prefill_tokens_computed=total - saved,
+                prefix_cache_pages=self.prefix_cache.n_pages,
+                prefix_evictions=self.prefix_cache.evictions,
+                frames_shared=st.frames_shared,
+            )
+        return m
 
 
-def _prefill_fn(params, toks, true_len, *, cfg, max_len):
+def _prefill_cont_fn(params, k_pools, v_pools, pages, toks, true_len, *,
+                     cfg, page_T, max_len, kv_len=None,
+                     cache_dtype=jnp.bfloat16):
+    """Prefix-hit prefill: gather the cached prefix K/V from the pool pages
+    and run the tail-only continuation prefill (tfm.prefill_with_prefix).
+
+    ``pages`` (n_shared,) are global physical page ids — replicated under a
+    mesh, so the gather keeps the pools' head sharding and the hit path is
+    mesh-oblivious like every other pool plan.  The prefix stays
+    exact-length (no padding between prefix and tail), which is what makes
+    the continuation arithmetic match a cold prefill row-for-row; the
+    compile key is therefore (n_shared, tail bucket)."""
+    L, _, T, Kh, hd = k_pools.shape
+    n = pages.shape[0]
+    k_pre = k_pools[:, pages].reshape(L, 1, n * T, Kh, hd)
+    v_pre = v_pools[:, pages].reshape(L, 1, n * T, Kh, hd)
+    logits, ks, vs = tfm.prefill_with_prefix(
+        params, toks, cfg, k_pre, v_pre, max_len, true_len=true_len,
+        kv_len=kv_len, cache_dtype=cache_dtype, gather_heads=True)
+    first = jnp.argmax(logits, -1).astype(jnp.int32)
+    return first, ks, vs
+
+
+def _prefill_fn(params, toks, true_len, *, cfg, max_len,
+                cache_dtype=jnp.bfloat16):
     """Bucketed dense prefill; ``toks`` is right-padded to the bucket and
     ``true_len`` (traced) marks the prompt end.  Returns (first token,
     K (L, B, max_len, Kh, hd), V).  ``gather_heads`` keeps sharded prefill
     bit-identical under a serving mesh (and is inert off-mesh)."""
     logits, cache = tfm.prefill(params, toks, cfg, max_len, true_len=true_len,
-                                gather_heads=True)
+                                cache_dtype=cache_dtype, gather_heads=True)
     first = jnp.argmax(logits, -1).astype(jnp.int32)
     return first, cache["k"], cache["v"]

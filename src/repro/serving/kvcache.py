@@ -107,9 +107,12 @@ class LogStructuredKVPool:
                              auto_release_empty=True)
         self.core._oom_msg = "KV pool out of slabs (compaction failed)"
         # Flat per-page views of the core's slot arrays (page = slab*S + slot):
-        # the owner sequence id (-1 dead/empty) and the estimated death clock.
+        # the owner sequence id (-1 dead/empty), the estimated death clock,
+        # and the reference count (shared prefix pages hold one per
+        # referencing sequence plus one for the prefix cache itself).
         self.block_owner = self.core.slot_item.reshape(-1)
         self.block_death = self.core.slot_up2.reshape(-1)
+        self.block_ref = self.core.slot_ref.reshape(-1)
 
         # open slabs bucketed by expected-lifetime quantile (-1: none yet)
         self._open = np.full(n_open, -1, dtype=np.int64)
@@ -122,6 +125,11 @@ class LogStructuredKVPool:
         # manual mode (no callback): plans queue here; the caller must drain
         # them before its next alloc
         self.pending_plans: list[CompactionPlan] = []
+        # pressure hook: called with the page deficit when compaction alone
+        # cannot satisfy an alloc — the engine registers the prefix cache's
+        # LRU eviction here, so unreferenced cached prefixes are given back
+        # before the pool declares OOM
+        self.on_pressure = None  # Callable[[int], None] | None
 
     # unified accounting lives in the core
     @property
@@ -170,7 +178,7 @@ class LogStructuredKVPool:
         raise RuntimeError("KV pool: no open slab (all slabs sealed+full)")
 
     def _place(self, owners: np.ndarray, deaths: np.ndarray,
-               kind: str) -> np.ndarray:
+               kind: str, refs: np.ndarray | None = None) -> np.ndarray:
         """Append blocks into lifetime-bucketed open slabs; returns page ids.
 
         Vectorized: one core.append per (bucket, slab) run — O(slabs touched),
@@ -190,7 +198,9 @@ class LogStructuredKVPool:
                 take = min(self.core.room(s), len(idx) - pos)
                 sel = idx[pos:pos + take]
                 slots = self.core.append(s, owners[sel], deaths[sel],
-                                         kind=kind)
+                                         kind=kind,
+                                         refs=None if refs is None
+                                         else refs[sel])
                 out[sel] = s * self.S + slots
                 pos += take
                 if self.core.room(s) == 0:
@@ -213,23 +223,52 @@ class LogStructuredKVPool:
         n = len(seq_ids)
         if n == 0:
             return np.empty(0, dtype=np.int64)
+        self._compact_until(n)
+        if self.core.free_frames() < n and self.on_pressure is not None:
+            # last resort before OOM: ask the owner to drop reclaimable
+            # references (prefix-cache LRU eviction), then clean again
+            self.on_pressure(n - self.core.free_frames())
+            self._compact_until(n)
+        if self.core.free_frames() < n:
+            raise RuntimeError("KV pool out of slabs (compaction failed)")
+        return self._place(seq_ids, est_deaths, kind="user")
+
+    def _compact_until(self, n: int) -> None:
+        """Run compaction cycles until ``n`` frames are appendable and the
+        free-slab reserve is above the trigger, or no cycle makes progress."""
         while (self.core.free_count() <= self.compact_trigger
                or self.core.free_frames() < n):
             before = self.core.free_frames()
             if self.compact() is None or self.core.free_frames() <= before:
                 break
-        if self.core.free_frames() < n:
-            raise RuntimeError("KV pool out of slabs (compaction failed)")
-        return self._place(seq_ids, est_deaths, kind="user")
 
     def alloc_block(self, seq_id: int, est_death: float) -> int:
         """Single-block convenience wrapper over :meth:`alloc_blocks`."""
         return int(self.alloc_blocks(np.array([seq_id]),
                                      np.array([est_death]))[0])
 
+    # ------------------------------------------------------------- sharing
+    def incref_pages(self, pages: np.ndarray,
+                     est_deaths: np.ndarray | float | None = None) -> None:
+        """Add one reference per page (a sequence or the prefix cache starts
+        sharing them).  ``est_deaths`` raises each page's death estimate to
+        the max over its referencing sequences — shared hot prefixes sort
+        into long-lifetime slabs and stop being pointlessly relocated."""
+        pages = np.asarray(pages, dtype=np.int64)
+        if len(pages) == 0:
+            return
+        assert (self.block_owner[pages] >= 0).all(), "incref of dead page"
+        up2 = None
+        if est_deaths is not None:
+            up2 = np.broadcast_to(np.asarray(est_deaths, np.float64),
+                                  pages.shape)
+        self.core.incref_slots(pages // self.S, pages % self.S, up2=up2)
+
     # --------------------------------------------------------------- death
     def free_pages(self, pages: np.ndarray) -> None:
-        """Kill blocks (their sequence finished / was preempted)."""
+        """Drop one reference per block; unshared blocks die (their sequence
+        finished / was preempted), shared ones stay live for the remaining
+        referencers — a page is freed exactly when its refcount hits zero."""
         pages = np.asarray(pages, dtype=np.int64)
         pages = pages[pages >= 0]
         if len(pages) == 0:
@@ -264,10 +303,11 @@ class LogStructuredKVPool:
         src = res.segs * self.S + res.slots
         # §5.3: sort survivors by expected death so they re-cluster; the
         # victims were freed above, so capacity for the survivors exists.
+        # Reference counts ride along: sharing is invariant under relocation.
         order = np.argsort(res.up2_slot, kind="stable")
         dst = np.empty(len(src), dtype=np.int64)
         dst[order] = self._place(res.items[order], res.up2_slot[order],
-                                 kind="gc")
+                                 kind="gc", refs=res.refs[order])
         plan = CompactionPlan(src_pages=src, dst_pages=dst, owners=res.items)
         if self.on_compaction is not None:
             self.on_compaction(plan)

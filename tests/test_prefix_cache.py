@@ -1,0 +1,397 @@
+"""Shared-prefix KV reuse: refcounted pool invariants + engine equivalence.
+
+The subsystem's two contracts (DESIGN.md §7):
+
+* pool level — a multi-referenced page is live while *any* reference
+  remains and is freed exactly when its count hits zero; compaction moves
+  carry reference counts; `StoreStats` live accounting survives arbitrary
+  interleavings of share / decref / compact (property-tested against a
+  brute-force shadow model);
+* engine level — a prefix-cache hit is *invisible*: decoded tokens are
+  bit-identical to a cold run (ref and pallas-interpret paths, and under a
+  2-device mesh), only the prefill FLOPs and the pool traffic change.
+
+Bit-exactness needs ``pool_dtype=float32`` (the cached prefix must hold
+the unrounded prefill activations — §7's dtype note); the default bf16
+pool gives approximate reuse and is exercised for invariants only.
+"""
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # degrades to skips without hypothesis
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving import LogStructuredKVPool, PagedServingEngine, PrefixCache
+
+
+# ------------------------------------------------------------ pool refcounts
+
+def test_incref_keeps_page_alive_until_last_decref():
+    pool = LogStructuredKVPool(8, 4, policy="mdc", compact_trigger=1,
+                               compact_batch=2, n_open=2)
+    pages = pool.alloc_blocks(np.full(3, 7), np.full(3, 50.0))
+    pool.incref_pages(pages, 90.0)          # a second sequence shares them
+    assert (pool.block_ref[pages] == 2).all()
+    pool.free_pages(pages)                  # first reference drops
+    assert (pool.block_owner[pages] >= 0).all(), "freed while referenced"
+    assert (pool.block_ref[pages] == 1).all()
+    assert pool.stats.blocks_died == 0      # no page actually died
+    assert pool.stats.ref_drops == 3
+    pool.free_pages(pages)                  # last reference drops
+    assert (pool.block_owner[pages] == -1).all()
+    assert pool.stats.blocks_died == 3
+    assert pool.stats.frames_shared == 3
+    pool.check_invariants()
+
+
+def test_incref_raises_death_estimate_to_max():
+    pool = LogStructuredKVPool(8, 4, policy="mdc", compact_trigger=1,
+                               compact_batch=2, n_open=2)
+    pages = pool.alloc_blocks(np.full(2, 1), np.full(2, 50.0))
+    pool.incref_pages(pages, 200.0)         # longer-lived referencer
+    assert (pool.block_death[pages] == 200.0).all()
+    pool.incref_pages(pages, 120.0)         # shorter one must NOT lower it
+    assert (pool.block_death[pages] == 200.0).all()
+    # the up2 sums feeding seal means / MDC keys follow the raise
+    seg = int(pages[0]) // pool.S
+    live = pool.core.seg_live[seg]
+    assert pool.core.seg_up2sum[seg] == pytest.approx(200.0 * live)
+    pool.free_pages(pages)
+    pool.free_pages(pages)
+    pool.free_pages(pages)
+    pool.check_invariants()
+
+
+def test_compaction_carries_refcounts():
+    """Evacuating a slab with shared pages must preserve each page's count
+    at its destination — sharing is invariant under relocation."""
+    pool = LogStructuredKVPool(8, 4, policy="mdc", compact_trigger=0,
+                               compact_batch=4, n_open=1)
+    held = {}  # shadow: page -> refcount (remapped by the plan callback)
+
+    def execute(plan):
+        remap = dict(zip(plan.src_pages.tolist(), plan.dst_pages.tolist()))
+        for p, r in list(held.items()):
+            if p in remap:
+                held[remap[p]] = held.pop(p)
+
+    pool.on_compaction = execute
+    short, shared = [], []
+    for i in range(8):
+        short.append(pool.alloc_block(100 + i, est_death=5.0))
+        p = pool.alloc_block(200 + i, est_death=1e6)
+        pool.incref_pages(np.asarray([p]), 1e6)   # shared with a 2nd seq
+        shared.append(p)
+        held[p] = 2
+    for p in short:
+        held[p] = 1
+    pool.free_pages(np.asarray(short))
+    for p in short:
+        del held[p]
+    plan = pool.compact()
+    assert plan is not None and len(plan) > 0
+    pool.check_invariants()
+    pages = np.asarray(list(held.keys()))
+    assert (pool.block_ref[pages] == [held[int(p)] for p in pages]).all()
+    # drop both references; only then do the pages die
+    pool.free_pages(pages)
+    assert (pool.block_owner[pages] >= 0).all()
+    pool.free_pages(pages)
+    assert (pool.block_owner[pages] == -1).all()
+    pool.check_invariants()
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_pool_refcount_invariants_random_traffic(seed):
+    """The property test: interleaved alloc / share / decref / forced
+    compaction against a brute-force shadow model.  Invariants:
+
+    * a page with refcount > 0 is never freed, never re-allocated, and its
+      owner/refcount match the shadow exactly (after plan remaps);
+    * compaction never drops a referenced page: every live page of a victim
+      appears in the plan's src→dst map;
+    * StoreStats live-frame accounting equals a brute-force recount.
+    """
+    rng = np.random.default_rng(seed)
+    pool = LogStructuredKVPool(10, 4, policy="mdc", compact_trigger=2,
+                               compact_batch=3, n_open=2)
+    refs: dict[int, int] = {}      # page -> shadow refcount
+    seqs: dict[int, list[int]] = {}  # seq -> pages it references
+    deaths = 0
+
+    def execute(plan):
+        live_before = set(refs)
+        src = set(plan.src_pages.tolist())
+        assert src <= live_before, "compaction moved a dead page"
+        remap = dict(zip(plan.src_pages.tolist(), plan.dst_pages.tolist()))
+        moved = {}
+        for p in list(refs):
+            if p in remap:
+                moved[remap[p]] = refs.pop(p)
+        refs.update(moved)
+        for pages in seqs.values():
+            pages[:] = [remap.get(p, p) for p in pages]
+
+    pool.on_compaction = execute
+    sid = 0
+    for _ in range(250):
+        op = rng.random()
+        if op < 0.45 or not seqs:                      # new sequence
+            if pool.free_blocks() < 8:
+                continue
+            n = int(rng.integers(1, 4))
+            pages = pool.alloc_blocks(np.full(n, sid),
+                                      rng.integers(1, 100, n).astype(float))
+            for p in pages:
+                assert int(p) not in refs, "re-allocated a referenced page"
+                refs[int(p)] = 1
+            seqs[sid] = pages.tolist()
+            sid += 1
+        elif op < 0.65:                                # share another's pages
+            donor = rng.choice(list(seqs))
+            take = [p for p in seqs[donor]
+                    if refs[p] < 4][:int(rng.integers(1, 3))]
+            if not take:
+                continue
+            pool.incref_pages(np.asarray(take), float(rng.integers(50, 200)))
+            for p in take:
+                refs[p] += 1
+            seqs[sid] = take
+            sid += 1
+        elif op < 0.9:                                 # a sequence finishes
+            kill = rng.choice(list(seqs))
+            pages = seqs.pop(kill)
+            pool.free_pages(np.asarray(pages))
+            for p in pages:
+                refs[p] -= 1
+                if refs[p] == 0:
+                    del refs[p]
+                    deaths += 1
+        else:                                          # forced compaction
+            pool.compact()
+        # --- invariants vs the shadow ---
+        pool.check_invariants()
+        if refs:
+            pages = np.asarray(list(refs.keys()))
+            assert (pool.block_owner[pages] >= 0).all(), \
+                "page freed while referenced"
+            assert (pool.block_ref[pages]
+                    == np.asarray(list(refs.values()))).all()
+        # brute-force live recount == core accounting == shadow
+        live = int((pool.block_owner >= 0).sum())
+        assert live == len(refs)
+        assert live == int(pool.core.seg_live.sum())
+        assert pool.stats.deaths == deaths
+    for k in list(seqs):
+        pool.free_pages(np.asarray(seqs.pop(k)))
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------- radix tree
+
+def _mini_pool():
+    return LogStructuredKVPool(8, 4, policy="mdc", compact_trigger=1,
+                               compact_batch=2, n_open=2)
+
+
+def test_radix_tree_longest_prefix_and_cow_boundary():
+    pool = _mini_pool()
+    cache = PrefixCache(pool, page_T=4)
+    toks = np.arange(1, 11)  # 10 tokens = 2 full pages + partial
+    pages = pool.alloc_blocks(np.full(3, 0), np.full(3, 50.0))
+    adopted = cache.insert(toks, pages[:2], 50.0)
+    assert adopted == 2                      # the partial page never enters
+    assert cache.n_pages == 2
+    assert (pool.block_ref[pages[:2]] == 2).all()   # tree holds one ref
+    assert pool.block_ref[pages[2]] == 1
+    # longest-prefix match: full match, 1-page match, miss
+    assert cache.lookup(toks) == pages[:2].tolist()
+    assert cache.lookup(np.r_[toks[:4], [99, 99, 99, 99]]) == [pages[0]]
+    assert cache.lookup(np.asarray([99] * 8)) == []
+    assert cache.hit_rate() == pytest.approx(2 / 3)
+    # a referenced *leaf* pins its ancestors: while the owning sequence
+    # still references the deeper page, nothing is reclaimable — the
+    # unreferenced parent cannot be evicted out from under it
+    pool.free_pages(pages[:1])                  # owner drops the parent only
+    assert cache.evictable() == 0
+    pool.free_pages(pages[1:2])                 # ... and the leaf
+    assert cache.evictable() == 2
+    cache.check_invariants()
+
+
+def test_radix_tree_lru_eviction_and_capacity():
+    pool = _mini_pool()
+    cache = PrefixCache(pool, page_T=4, capacity_pages=2)
+    owner = 0
+    entries = []
+    for base in (0, 100, 200):
+        toks = np.arange(base, base + 4)
+        page = pool.alloc_blocks(np.full(1, owner), np.full(1, 50.0))
+        cache.insert(toks, page, 50.0)
+        pool.free_pages(page)  # owner finishes; tree ref keeps it alive
+        entries.append((toks, int(page[0])))
+        owner += 1
+    # capacity 2: the LRU entry (base 0) was evicted and its page truly died
+    # (lookups carry a one-token tail so the CoW cap admits the full page)
+    assert cache.n_pages == 2
+    assert cache.lookup(np.r_[entries[0][0], [7]]) == []
+    assert pool.block_owner[entries[0][1]] == -1
+    assert cache.evictions == 1
+    # a prompt no longer than one page never splices (CoW: at least one
+    # token must be prefilled), so it is a miss by definition
+    assert cache.lookup(entries[1][0]) == []
+    # a referenced page is never evicted, whatever the pressure
+    hit = cache.lookup(np.r_[entries[1][0], [7]])
+    assert len(hit) == 1
+    pool.incref_pages(np.asarray(hit), 60.0)   # an active sequence uses it
+    cache.evict(10)
+    assert pool.block_owner[hit[0]] >= 0
+    assert cache.lookup(np.r_[entries[1][0], [7]]) == hit
+    cache.check_invariants()
+
+
+def test_pool_pressure_evicts_unreferenced_prefixes():
+    """When compaction alone cannot satisfy an alloc, the pool's pressure
+    hook must give back unreferenced cached pages instead of raising OOM."""
+    pool = LogStructuredKVPool(4, 2, policy="mdc", compact_trigger=0,
+                               compact_batch=2, n_open=1)
+    pool.on_compaction = lambda plan: None
+    cache = PrefixCache(pool, page_T=4)
+    for base in range(0, 24, 4):  # fill the whole pool with cached prefixes
+        toks = np.arange(base, base + 4)
+        page = pool.alloc_blocks(np.full(1, base), np.full(1, 50.0))
+        cache.insert(toks, page, 50.0)
+        pool.free_pages(page)
+    assert pool.free_blocks() <= 2
+    pages = pool.alloc_blocks(np.full(4, 99), np.full(4, 70.0))  # would OOM
+    assert len(pages) == 4
+    assert cache.evictions >= 2
+    cache.check_invariants()
+    pool.check_invariants()
+
+
+# ------------------------------------------------------- engine equivalence
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    return Model(get_config("qwen3-1.7b").smoke())
+
+
+def _shared_stream(eng, vocab, *, n_req=6, sys_len=24, seed=1):
+    """N users × one system prompt + unique tails (the ISSUE's workload)."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = np.random.default_rng(42).integers(1, vocab, size=sys_len)
+    rids = []
+    for _ in range(n_req):
+        tail = rng.integers(1, vocab, size=int(rng.integers(3, 14)))
+        rids.append(eng.submit(np.concatenate([sys_prompt, tail]),
+                               int(rng.integers(4, 12))))
+    return rids
+
+
+def _run_engine(model, *, prefix_cache, use_pallas=False, mesh=None,
+                n_slabs=8):
+    eng = PagedServingEngine(model, n_slabs=n_slabs, blocks_per_slab=2,
+                             page_T=8, max_batch=3, max_seq=96, policy="mdc",
+                             n_open=1, compact_trigger=2, compact_batch=3,
+                             seed=0, use_pallas=use_pallas, mesh=mesh,
+                             prefix_cache=prefix_cache,
+                             pool_dtype=jnp.float32)
+    _shared_stream(eng, model.cfg.vocab_size)
+    eng.run_to_completion()
+    eng.pool.check_invariants()
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.check_invariants()
+    return eng
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_prefix_hit_decode_bit_identical_to_cold(smoke_model, use_pallas):
+    """THE acceptance equivalence: with the cache on, decoded tokens are
+    bit-identical to the cold engine, most prefill tokens are served from
+    the cache, and sharing shows up in the pool stats."""
+    cold = _run_engine(smoke_model, prefix_cache=False,
+                       use_pallas=use_pallas)
+    hot = _run_engine(smoke_model, prefix_cache=True, use_pallas=use_pallas)
+    assert hot.finished == cold.finished      # bit-identical tokens
+    m = hot.metrics()
+    assert m["prefix_hit_rate"] >= 5 / 6      # every follower hits
+    assert m["prefill_tokens_saved"] >= m["prefill_tokens_computed"], \
+        "prefix caching must at least halve the prefill tokens computed"
+    assert m["frames_shared"] > 0
+    # both engines clean under this pool size: the equivalence holds across
+    # compaction remaps of shared pages, not just in the easy no-move case
+    assert cold.metrics()["compactions"] >= 1
+    assert m["compactions"] >= 1
+
+
+def test_prefix_cache_default_off(smoke_model):
+    eng = PagedServingEngine(smoke_model, n_slabs=8, blocks_per_slab=2,
+                             page_T=8, max_batch=2, max_seq=64)
+    assert eng.prefix_cache is None
+    assert "prefix_hit_rate" not in eng.metrics()
+
+
+def test_shared_pages_survive_donor_finish_and_compaction(smoke_model):
+    """Submit the donor alone, drain it, force compaction, then submit the
+    followers: hits must still be served (the tree's references keep the
+    prefix alive and remapped) and stay bit-identical to cold."""
+    model = smoke_model
+    cold = _run_engine(model, prefix_cache=False)
+    eng = PagedServingEngine(model, n_slabs=10, blocks_per_slab=2,
+                             page_T=8, max_batch=3, max_seq=96, policy="mdc",
+                             n_open=1, compact_trigger=2, compact_batch=3,
+                             seed=0, prefix_cache=True,
+                             pool_dtype=jnp.float32)
+    rng = np.random.default_rng(1)
+    sys_prompt = np.random.default_rng(42).integers(
+        1, model.cfg.vocab_size, size=24)
+    reqs = []
+    for _ in range(6):
+        tail = rng.integers(1, model.cfg.vocab_size,
+                            size=int(rng.integers(3, 14)))
+        reqs.append((np.concatenate([sys_prompt, tail]),
+                     int(rng.integers(4, 12))))
+    first = eng.submit(*reqs[0])
+    eng.run_to_completion()                   # donor fully drains
+    assert eng.prefix_cache.n_pages >= 3
+    eng.pool.compact()                        # pages move; tree must remap
+    eng.prefix_cache.check_invariants()
+    for prompt, n_new in reqs[1:]:
+        eng.submit(prompt, n_new)
+    eng.run_to_completion()
+    assert eng.finished == cold.finished
+    # all 5 followers hit (the donor's own lookup is the one miss)
+    assert eng.metrics()["prefix_hit_rate"] == pytest.approx(5 / 6)
+
+
+# --------------------------------------------------------------- mesh = 2
+
+NDEV = len(jax.devices())
+needs2 = pytest.mark.skipif(
+    NDEV < 2, reason="needs 2 (virtual) devices: run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=2 "
+    "(CI multidevice job)")
+
+
+@needs2
+def test_prefix_hit_bit_identical_under_mesh2(smoke_model):
+    """Cache hits must be mesh-oblivious: a 2-way tensor-parallel engine
+    with the prefix cache decodes bit-identically to the cold 1-device
+    engine, with identical (shard-invariant) pool metrics vs the 1-device
+    cached engine.  Uses the TP smoke model so the pools actually shard."""
+    from repro.launch.mesh import make_serving_mesh
+    model = Model(get_config("qwen3-1.7b").tp_smoke())
+    cold = _run_engine(model, prefix_cache=False)
+    hot1 = _run_engine(model, prefix_cache=True)
+    hot2 = _run_engine(model, prefix_cache=True, mesh=make_serving_mesh(2))
+    assert hot2.finished == cold.finished     # hits invisible, sharded
+    assert hot2.metrics() == hot1.metrics()   # Wamp/hits shard-invariant
+    spec = tuple(hot2.k_pools.sharding.spec)
+    assert "model" in spec, "pools must actually shard"
