@@ -371,6 +371,9 @@ class FrameLog(LogStructureBase):
         empty), when ``auto_release_empty`` is on."""
         if len(segs) == 0:
             return np.empty(0, dtype=np.int64)
+        flat = np.asarray(segs, dtype=np.int64) * self.S + slots
+        assert len(np.unique(flat)) == len(flat), \
+            "duplicate (seg, slot) in one kill_slots call"
         refs = self.slot_ref[segs, slots]
         assert (refs >= 1).all(), "decref of dead slot"
         self.slot_ref[segs, slots] = refs - 1

@@ -133,6 +133,45 @@ def select_victims(policy: str, k: int, *, live: np.ndarray, S: int,
     return _take_smallest(key, k)
 
 
+def key_preempt(recompute: np.ndarray, freeable: np.ndarray,
+                remaining: np.ndarray) -> np.ndarray:
+    """Sequence-preemption priority (serving scheduler, DESIGN.md §8);
+    smallest key preempted first.
+
+    The MDC declining-cost shape applied to *sequences* instead of
+    segments: B−A ≡ ``recompute`` (tokens to re-prefill on resume — the
+    cost of evicting the sequence), A ≡ ``freeable`` (pages whose last
+    reference the preemption drops — the space reclaimed now), and
+    C·interval ≡ ``freeable`` × ``remaining`` (the space-time the pages
+    would otherwise stay occupied, with the predicted remaining lifetime
+    as the interval estimate).  Sequences that are cheap to recompute,
+    hold many exclusive pages, and would otherwise hold them longest are
+    preempted first; a sequence about to finish (small ``remaining``) is
+    spared — it frees its pages by itself momentarily.  A sequence whose
+    pages are all shared (``freeable`` == 0) frees nothing and is never
+    picked (key = inf).
+    """
+    cost = recompute.astype(np.float64)
+    A = freeable.astype(np.float64)
+    interval = np.maximum(remaining.astype(np.float64), 1.0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        decline = np.where(
+            A > 0,
+            (cost / np.maximum(A, _EPS)) ** 2 / (np.maximum(A, 1.0) * interval),
+            _INF)
+    return decline
+
+
+def select_preempt(k: int, *, recompute: np.ndarray, freeable: np.ndarray,
+                   remaining: np.ndarray) -> np.ndarray:
+    """Up to ``k`` preemption victims (indices into the candidate arrays)
+    with the smallest :func:`key_preempt`, ascending — the same
+    ``_take_smallest`` top-k used by segment cleaning.  The caller passes
+    pre-filtered candidates (the engine excludes just-admitted slots
+    itself), so there is no eligibility mask here."""
+    return _take_smallest(key_preempt(recompute, freeable, remaining), k)
+
+
 def select_victims_bytes(policy: str, k: int, *, live_bytes: np.ndarray,
                          written: np.ndarray, n_chunks: np.ndarray,
                          up2: np.ndarray, seal_time: np.ndarray,

@@ -17,6 +17,50 @@ from ..models import Model
 from ..serving import PagedServingEngine
 
 
+def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
+    """Open-loop driver: Poisson arrivals at ``rate`` req/s, *independent*
+    of completions — the overload regime, where the arrival process does
+    not slow down just because the pool is full.  Returns (dispatches,
+    latency metrics): wall-clock TTFT (first token after *scheduled*
+    arrival, so queueing and preemption delays are priced in) and TPOT
+    (per-token decode latency after the first) percentiles in ms."""
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(reqs)))
+    arr_t, first_t, done_t, n_tok = {}, {}, {}, {}
+    dispatches = 0
+    nxt = 0
+    t0 = time.time()
+    while nxt < len(reqs) or eng.has_work():
+        now = time.time() - t0
+        while nxt < len(reqs) and arrivals[nxt] <= now:
+            prompt, n_new = reqs[nxt]
+            arr_t[eng.submit(prompt, n_new)] = arrivals[nxt]
+            nxt += 1
+        if not eng.has_work():  # idle until the next arrival
+            time.sleep(min(float(arrivals[nxt]) - now, 2e-3))
+            continue
+        done = eng.step()
+        dispatches += 1
+        now = time.time() - t0
+        for i in np.flatnonzero(eng.rid >= 0):
+            if eng._out_n[i] > 0:  # TTFT: survives preemption (out is kept)
+                first_t.setdefault(int(eng.rid[i]), now)
+        for rid in done:
+            first_t.setdefault(rid, now)
+            done_t[rid] = now
+            n_tok[rid] = len(eng.finished[rid])
+    ttft = np.array([first_t[r] - arr_t[r] for r in done_t])
+    tpot = np.array([(done_t[r] - first_t[r]) / max(n_tok[r] - 1, 1)
+                     for r in done_t])
+
+    def pct(a, q):
+        return round(float(np.percentile(a, q)) * 1e3, 1)
+
+    return dispatches, dict(
+        arrival_rate=rate,
+        ttft_p50_ms=pct(ttft, 50), ttft_p99_ms=pct(ttft, 99),
+        tpot_p50_ms=pct(tpot, 50), tpot_p99_ms=pct(tpot, 99))
+
+
 def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               policy: str = "mdc", seed: int = 0, n_slabs: int = 9,
               blocks_per_slab: int = 4, page_T: int = 8, max_batch: int = 4,
@@ -24,12 +68,17 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               use_pallas: bool | None = None, max_decode_chunk: int = 32,
               mesh=None, prefix_cache: bool = False,
               prefix_cache_pages: int = 0, shared_prefix_len: int = 0,
-              verbose: bool = True) -> dict:
+              stop_token: int | None = None, preemption: bool = False,
+              arrival_rate: float = 0.0, verbose: bool = True) -> dict:
     """One engine run over a request stream; returns metrics.
 
     ``prefix_cache`` turns on shared-prefix KV reuse; ``shared_prefix_len``
     prepends that many common tokens to every prompt (the system-prompt
-    workload that makes the cache hit)."""
+    workload that makes the cache hit).  ``stop_token`` enables
+    data-dependent early termination (output lifetimes become estimates);
+    ``preemption`` lets the scheduler evict + resume sequences under pool
+    pressure; ``arrival_rate`` > 0 switches to the open-loop Poisson
+    driver and adds TTFT/TPOT latency percentiles to the row."""
     if model is None:
         model = Model(get_config(arch).smoke())
     rng = np.random.default_rng(seed)
@@ -42,32 +91,46 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              max_decode_chunk=max_decode_chunk, mesh=mesh,
                              prefix_cache=prefix_cache,
                              prefix_cache_pages=prefix_cache_pages,
+                             stop_token=stop_token, preemption=preemption,
                              warmup=True)  # AOT-compile outside the timed loop
     # mixed short/long request stream (the checkerboarding driver); with
     # shared_prefix_len, every prompt opens with the same system prompt
     sys_prompt = np.random.default_rng(99).integers(
         1, model.cfg.vocab_size, size=shared_prefix_len)
+    reqs = []
     for _ in range(requests):
         plen = int(rng.integers(4, 40))
         nnew = int(rng.choice([4, 8, 12, 24, 48], p=[.3, .25, .2, .15, .1]))
         prompt = rng.integers(1, model.cfg.vocab_size, size=plen)
-        eng.submit(np.concatenate([sys_prompt, prompt]), nnew)
+        reqs.append((np.concatenate([sys_prompt, prompt]), nnew))
 
+    lat: dict = {}
     t0 = time.time()
-    dispatches = 0
-    while eng.has_work():
-        eng.step()
-        dispatches += 1
+    if arrival_rate > 0:
+        dispatches, lat = _open_loop(eng, reqs, arrival_rate, rng)
+    else:
+        for prompt, nnew in reqs:
+            eng.submit(prompt, nnew)
+        dispatches = 0
+        while eng.has_work():
+            eng.step()
+            dispatches += 1
     dt = time.time() - t0
     m = eng.metrics()
     toks = sum(len(v) for v in eng.finished.values())
     out = dict(policy=policy, requests=requests, dispatches=dispatches,
-               tokens=toks, tok_per_s=toks / dt, **m)
+               tokens=toks, tok_per_s=toks / dt, **lat, **m)
     if verbose:
         extra = ""
         if "prefix_hit_rate" in m:
             extra = (f"  hit={m['prefix_hit_rate']:.2f} "
                      f"prefill_saved={m['prefill_tokens_saved']}")
+        if m["preemptions"]:
+            extra += (f"  preempt={m['preemptions']} "
+                      f"recomputed={m['recomputed_tokens']}")
+        if lat:
+            extra += (f"  ttft_p99={lat['ttft_p99_ms']:.0f}ms "
+                      f"tpot_p50={lat['tpot_p50_ms']:.1f}ms")
         print(f"[serve] {policy:12s} {toks:5d} tok in {dt:6.2f}s "
               f"({out['tok_per_s']:7.1f} tok/s, {dispatches} dispatches)  "
               f"Wamp={m['wamp']:.3f} "
@@ -103,6 +166,21 @@ def main() -> None:
     ap.add_argument("--shared-prefix-len", type=int, default=0, metavar="S",
                     help="prepend S common system-prompt tokens to every "
                          "request (the workload prefix caching accelerates)")
+    ap.add_argument("--stop-token", type=int, default=None, metavar="ID",
+                    help="token id that terminates a request early (detected "
+                         "on device inside the decode dispatch); output "
+                         "lengths become data-dependent, so page death "
+                         "estimates switch to the EWMA length predictor")
+    ap.add_argument("--preemption", action="store_true",
+                    help="under pool pressure, preempt running sequences "
+                         "(declining-cost victim key), free their pages and "
+                         "resume them later via recompute — admission stays "
+                         "live instead of stalling until natural deaths")
+    ap.add_argument("--arrival-rate", type=float, default=0.0, metavar="R",
+                    help="open-loop mode: submit requests by a Poisson "
+                         "process at R req/s (independent of completions) "
+                         "and report wall-clock TTFT/TPOT p50/p99; 0 = "
+                         "closed loop (submit everything up front)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     use_pallas = {"auto": None, "on": True, "off": False}[args.use_pallas]
@@ -121,7 +199,10 @@ def main() -> None:
                          max_decode_chunk=args.chunk, mesh=mesh,
                          prefix_cache=args.prefix_cache,
                          prefix_cache_pages=args.prefix_cache_pages,
-                         shared_prefix_len=args.shared_prefix_len)
+                         shared_prefix_len=args.shared_prefix_len,
+                         stop_token=args.stop_token,
+                         preemption=args.preemption,
+                         arrival_rate=args.arrival_rate)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

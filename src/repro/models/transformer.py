@@ -541,6 +541,31 @@ def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16,
     return logits, cache
 
 
+def greedy_decode(params, prompt, cfg, max_new_tokens, *, stop_token=None,
+                  extras=None, cache_dtype=jnp.bfloat16):
+    """Stop-aware dense-cache greedy decode: the serving reference path.
+
+    Returns the emitted token list — the prefill's last-position argmax
+    first, then one token per :func:`decode_step` — truncated at (and
+    including) the first ``stop_token``, else after ``max_new_tokens``.
+    This is the host-loop twin of the paged engine's stop-token decode
+    (``make_paged_decode_step``), used as the oracle for its early-exit and
+    preempt-resume paths.
+    """
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    max_len = len(prompt) + max_new_tokens + 1
+    logits, cache = prefill(params, toks, cfg, max_len, extras=extras,
+                            cache_dtype=cache_dtype)
+    out = [int(jnp.argmax(logits[0]))]
+    while len(out) < max_new_tokens and (stop_token is None
+                                         or out[-1] != stop_token):
+        logits, cache = decode_step(params, cache,
+                                    jnp.asarray([out[-1]], jnp.int32), cfg,
+                                    extras=extras)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
 def prefill_with_prefix(params, tokens, cfg, prefix_k, prefix_v, max_len,
                         true_len=None, kv_len=None, cache_dtype=jnp.bfloat16,
                         gather_heads=False):

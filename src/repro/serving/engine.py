@@ -55,6 +55,7 @@ from ..models.layers import rmsnorm
 from .. import kernels
 from .kvcache import LogStructuredKVPool
 from .prefix_cache import PrefixCache
+from .scheduler import choose_preempt_victims, make_length_predictor
 
 
 @dataclasses.dataclass
@@ -62,6 +63,11 @@ class Request:
     rid: int
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int
+    # resume state (preempted requests only): the tokens already emitted.
+    # All but the last have been *consumed* (their K/V must be recomputed
+    # on resume); the last is the next token to feed into decode.
+    out: np.ndarray | None = None
+    out_n: int = 0
 
 
 def _pow2(n: int) -> int:
@@ -104,7 +110,8 @@ def _paged_attn(q, k_pool, v_pool, bt, lens, use_pallas: bool, mesh=None):
 
 def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
                            max_chunk: int = 32, mesh=None, kv_shard=None,
-                           rep_shard=None):
+                           rep_shard=None, stop_token: int | None = None,
+                           trash_page: int | None = None):
     """Builds the jitted *multi-step* decode dispatch over the paged pool.
 
     The returned function has signature
@@ -122,6 +129,14 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
     ``seq_len + 1`` tokens.  Inactive slots write into the caller's trash
     page and their seq_len/token state is frozen.
 
+    ``stop_token`` (static, None = off): after each emitted token the
+    active mask drops slots whose token equals it, *inside* the fori_loop —
+    a stopped slot freezes (seq_len, token, K/V writes rerouted to
+    ``trash_page``) for the rest of the dispatch, so stop detection costs
+    no extra host sync: the engine reads the per-slot stop positions out of
+    the same once-per-dispatch token buffer.  ``trash_page`` routes frozen
+    slots' dead K/V writes away from their (still real) block tables.
+
     K/V pools and the seq_lens/tokens state are donated: the pools are never
     copied across dispatches.
 
@@ -138,6 +153,12 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
         x = jnp.take(params["embed"], tokens[:, None], axis=0)  # (B,1,d)
         pos = seq_lens[:, None]
         page = jnp.take_along_axis(bt, (seq_lens // page_T)[:, None], 1)[:, 0]
+        if trash_page is not None:
+            # a slot that stopped mid-dispatch keeps its real block table;
+            # route its dead writes to the trash page like any other
+            # inactive slot (also keeps a slot frozen at exactly
+            # npages*page_T from indexing one past its table)
+            page = jnp.where(active, page, trash_page)
         off = seq_lens % page_T
 
         def layer(h, xs):
@@ -168,15 +189,17 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
         out = jnp.zeros((max_chunk, B), jnp.int32)
 
         def body(t, carry):
-            k_pools, v_pools, seq_lens, tokens, out = carry
+            k_pools, v_pools, seq_lens, tokens, active, out = carry
             tokens, k_pools, v_pools = one_token(
                 params, k_pools, v_pools, bt, seq_lens, tokens, active)
             out = jax.lax.dynamic_update_index_in_dim(out, tokens, t, 0)
             seq_lens = seq_lens + active.astype(jnp.int32)
-            return (k_pools, v_pools, seq_lens, tokens, out)
+            if stop_token is not None:
+                active = active & (tokens != stop_token)
+            return (k_pools, v_pools, seq_lens, tokens, active, out)
 
-        k_pools, v_pools, seq_lens, tokens, out = jax.lax.fori_loop(
-            0, n, body, (k_pools, v_pools, seq_lens, tokens, out))
+        k_pools, v_pools, seq_lens, tokens, active, out = jax.lax.fori_loop(
+            0, n, body, (k_pools, v_pools, seq_lens, tokens, active, out))
         if kv_shard is not None:
             # pin the donated pools' output sharding to their input sharding
             # so the in-place buffer reuse survives under the mesh
@@ -254,7 +277,8 @@ class PagedServingEngine:
                  n_open: int = 4, max_decode_chunk: int = 32,
                  warmup: bool = False, mesh=None,
                  prefix_cache: bool = False, prefix_cache_pages: int = 0,
-                 pool_dtype=jnp.bfloat16):
+                 pool_dtype=jnp.bfloat16, stop_token: int | None = None,
+                 preemption: bool = False, predictor: str = "ewma"):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
@@ -338,6 +362,23 @@ class PagedServingEngine:
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: dict[int, list[int]] = {}
         self._admit_done: list[int] = []  # finished during admission
+        # --- pressure-aware scheduling (DESIGN.md §8) ---------------------
+        # stop_token: requests finish when they emit it, so output length —
+        # and every page's est_death — becomes a *prediction* (the length
+        # predictor, default EWMA over recent completions) instead of the
+        # exact max_new_tokens.  preemption: when admission stalls and
+        # compaction + prefix-cache eviction cannot cover the page deficit,
+        # victim sequences are preempted (pages freed via the decref path)
+        # and requeued for recompute-on-resume through the continuation
+        # prefill.
+        self.stop_token = stop_token
+        self.preemption = preemption
+        self.length_predictor = make_length_predictor(predictor)
+        self._resume: collections.deque[Request] = collections.deque()
+        self._prompt: list[np.ndarray | None] = [None] * B
+        self.preemptions = 0
+        self.resumes = 0
+        self.recomputed_tokens = 0  # prefill tokens replayed by resumes
         # pass the mesh / pool sharding to the jitted paths only when the
         # pools actually shard; with replicated fallback pools everything
         # runs the plain (pallas-capable) kernels identically on every device
@@ -345,7 +386,8 @@ class PagedServingEngine:
         self._decode = make_paged_decode_step(
             cfg, page_T, use_pallas, max_chunk=max_decode_chunk,
             mesh=mesh if self._pool_sharded else None,
-            kv_shard=self._kv_shard, rep_shard=self._rep_shard)
+            kv_shard=self._kv_shard, rep_shard=self._rep_shard,
+            stop_token=stop_token, trash_page=self.trash_page)
         # prefill K/V leave the model at the pool dtype: with an f32 pool
         # the cached prefix is the *unrounded* activation value, which is
         # what makes prefix-hit tail prefills bit-exact (DESIGN.md §7)
@@ -440,7 +482,8 @@ class PagedServingEngine:
         return self.bt[i, :self.npages[i]]
 
     def has_work(self) -> bool:
-        return bool(self.queue) or bool((self.rid >= 0).any())
+        return (bool(self.queue) or bool(self._resume)
+                or bool((self.rid >= 0).any()))
 
     def _prefill_bucket(self, plen: int, n_pages: int) -> tuple[int, int]:
         """(padded prompt length, prefill cache length) — the compile key.
@@ -455,42 +498,165 @@ class PagedServingEngine:
         max_len = max(_pow2(n_pages) * T, -(-tok_bucket // T) * T)
         return tok_bucket, max_len
 
+    def _eff_prompt(self, req: Request) -> np.ndarray:
+        """The token positions a (re)start must have K/V for: the prompt,
+        plus — for a preempted request — the emitted tokens already
+        *consumed* by decode (all but the last emitted token)."""
+        if req.out is None or req.out_n <= 1:
+            return req.prompt
+        return np.concatenate([req.prompt,
+                               req.out[:req.out_n - 1].astype(np.int32)])
+
+    def _predict_remaining(self, max_new: int, emitted: int) -> int:
+        """Tokens a request is *predicted* to still emit.  Exact
+        (``max_new - emitted``) when stop tokens are off; otherwise the
+        length predictor's estimate, clamped to [1, tokens-left]."""
+        cap = max(max_new - emitted, 1)
+        if self.stop_token is None:
+            return cap
+        pred = self.length_predictor.predict(max_new)
+        return int(np.clip(pred - emitted, 1, cap))
+
+    def _pages_needed(self, req: Request) -> int:
+        """Pages admission control reserves for this request (prompt +
+        consumed resume tokens + remaining output), gross of any cached
+        prefix.  Admission is *optimistic* — the predicted output length
+        instead of the max_new_tokens worst case — only when preemption is
+        on: an under-prediction then surfaces as pool pressure the
+        scheduler relieves by preempting, whereas without the backstop it
+        would be an OOM, so the conservative bound is kept."""
+        plen_eff = len(self._eff_prompt(req))
+        rem = (self._predict_remaining(req.max_new_tokens, req.out_n)
+               if self.preemption else max(req.max_new_tokens - req.out_n, 1))
+        return (plen_eff + rem + self.page_T - 1) // self.page_T
+
+    def _gate_avail(self, hit_pages: list[int]) -> int:
+        """Blocks the admission gate may count: free blocks, plus cached
+        prefixes reclaimable on demand (the pool's pressure hook evicts
+        unreferenced leaves before OOM) — minus the matched pages only the
+        tree still references, which the request is about to splice, not
+        reclaim."""
+        avail = self.pool.free_blocks()
+        if self.prefix_cache is not None:
+            overlap = int((self.pool.block_ref[
+                np.asarray(hit_pages, np.int64)] == 1).sum()) \
+                if hit_pages else 0
+            avail += max(self.prefix_cache.evictable() - overlap, 0)
+        return avail
+
     def _admit(self) -> None:
+        started: list[int] = []
         free = np.flatnonzero(self.rid < 0)
         for i in free:
-            if not self.queue:
+            # preempted requests resume first — they were admitted once and
+            # already carry emitted tokens the caller is waiting on
+            q = self._resume if self._resume else self.queue
+            if not q:
                 break
-            req = self.queue[0]
-            need = (len(req.prompt) + req.max_new_tokens + self.page_T - 1
-                    ) // self.page_T
-            if need > self.max_pages_per_seq:
+            req = q[0]
+            worst = (len(req.prompt) + req.max_new_tokens + self.page_T - 1
+                     ) // self.page_T
+            if worst > self.max_pages_per_seq:
                 raise ValueError("request exceeds max_seq")
+            need = self._pages_needed(req)
+            hit_pages: list[int] = []
+            if self.prefix_cache is not None:
+                # a cached prefix will be spliced, not allocated: the
+                # request's real allocation need is net of the match
+                hit_pages = self.prefix_cache.match(self._eff_prompt(req))
+                need -= len(hit_pages)
+            # the compaction reserve is compact_trigger *slabs* (see
+            # admission_reserve) — waived when nothing is active, so a
+            # request sized to the whole pool can still run alone
+            reserve = (self.pool.admission_reserve()
+                       if (self.rid >= 0).any() else 0)
             avail = self.pool.free_blocks()
-            if (avail < need + self.pool.compact_trigger
-                    and self.prefix_cache is not None):
-                # unreferenced cached prefixes are reclaimable on demand
-                # (the pool's pressure hook evicts them before OOM); only
-                # walk the tree when free blocks alone don't suffice
-                avail += self.prefix_cache.evictable()
-            if avail < need + self.pool.compact_trigger:
+            if avail < need + reserve and self.prefix_cache is not None:
+                avail = self._gate_avail(hit_pages)
+            if avail < need + reserve and self.preemption:
+                self._preempt_for(need + reserve - avail, keep=started)
+                avail = self._gate_avail(hit_pages)  # re-measured gate
+            if avail < need + reserve:
                 break  # admission control: wait for deaths/compaction
-            self.queue.popleft()
+            q.popleft()
             self._start(int(i), req)
+            started.append(int(i))
+
+    def _preempt_for(self, deficit: int, *, keep=(),
+                     min_active: int = 0) -> int:
+        """Free at least ``deficit`` blocks by preempting running
+        sequences, chosen by the declining-cost key (policies.key_preempt:
+        cheap recompute, many exclusively-held pages, long predicted
+        remaining lifetime first).  Returns the blocks actually freed.
+
+        Progress is *measured* (free blocks + evictable cache pages), not
+        estimated from the victims' refcounts: a page freed mid-way into a
+        still-OPEN lifetime-bucket slab is neither appendable (slots are
+        append-only) nor compactable (victims must be sealed) until its
+        slab drains, so trusting the per-victim estimate could pass
+        admission on blocks the allocator cannot actually hand out.
+
+        ``keep``: slots never picked (sequences admitted in the current
+        pass — preempting them before they decode a token would churn).
+        ``min_active``: stop before the active count would drop below this
+        (the growth path keeps the last sequence running: preempting a
+        sequence to fund its *own* growth would loop forever)."""
+        def avail() -> int:
+            a = self.pool.free_blocks()
+            if self.prefix_cache is not None:
+                a += self.prefix_cache.evictable()
+            return a
+
+        start = avail()
+        keep = set(int(k) for k in keep)
+        while avail() - start < deficit:
+            cand = np.array([c for c in np.flatnonzero(self.rid >= 0)
+                             if int(c) not in keep], dtype=np.int64)
+            if len(cand) == 0 or int((self.rid >= 0).sum()) <= min_active:
+                break
+            # pages whose *last* reference a preemption drops (shared
+            # prefix pages survive in the tree / other referencers)
+            freeable = np.array(
+                [int((self.pool.block_ref[
+                    self.bt[j, :self.npages[j]].astype(np.int64)] == 1).sum())
+                 for j in cand])
+            remaining = np.array(
+                [self._predict_remaining(
+                    int(self._out_n[j] + self.to_gen[j]),
+                    int(self._out_n[j])) for j in cand])
+            v = choose_preempt_victims(1, recompute=self.lens[cand],
+                                       freeable=freeable,
+                                       remaining=remaining)
+            if len(v) == 0:
+                break  # nothing preemptible frees any page
+            self._preempt(int(cand[v[0]]))
+        return max(avail() - start, 0)
 
     def _start(self, i: int, req: Request) -> None:
-        plen = len(req.prompt)
+        # A resume (req.out is not None) restarts a preempted sequence: the
+        # effective prompt is the original prompt plus the already-consumed
+        # output tokens, whose K/V is recomputed by the same (continuation)
+        # prefill a fresh request uses — surviving prefix-cache pages splice
+        # back in — and the emitted-token buffer is restored instead of
+        # taking the prefill's first token (already emitted once).
+        resume = req.out is not None
+        prompt = self._eff_prompt(req)
+        plen = len(prompt)
         T = self.page_T
         n_pages = (plen + T - 1) // T
         # §5.3 placement estimator: blocks die when their sequence finishes
-        # ⇒ expected death clock = now + blocks that will die then.
-        est = self.pool.u_now + plen + req.max_new_tokens
+        # ⇒ expected death clock = now + blocks that will die then.  With
+        # stop tokens, output length is data-dependent and this becomes the
+        # length predictor's estimate, not ground truth (DESIGN.md §8).
+        est = self.pool.u_now + plen + self._predict_remaining(
+            req.max_new_tokens, req.out_n)
 
         # --- shared-prefix lookup: splice cached full pages (the lookup is
         # CoW-capped: at least one prompt token is always prefilled, and a
         # fully-matched final page is recomputed privately — DESIGN.md §7)
         n_shared = 0
         if self.prefix_cache is not None:
-            hit = self.prefix_cache.lookup(req.prompt)
+            hit = self.prefix_cache.lookup(prompt)
             n_shared = len(hit)
             if n_shared:
                 shared = np.asarray(hit, np.int64)
@@ -539,7 +705,7 @@ class PagedServingEngine:
             tok_bucket, max_len = self._prefill_bucket(tlen,
                                                        n_pages - n_shared)
             toks = np.zeros(tok_bucket, np.int32)
-            toks[:tlen] = req.prompt[n_shared * T:]
+            toks[:tlen] = prompt[n_shared * T:]
             prefix_pages = self.bt[i, :n_shared].astype(np.int32)  # post-remap
             # kv_len = the bucket a cold full prefill of this prompt would
             # attend over: identical key extents are what make the hit
@@ -554,7 +720,7 @@ class PagedServingEngine:
         else:
             tok_bucket, max_len = self._prefill_bucket(plen, n_pages)
             toks = np.zeros(tok_bucket, np.int32)
-            toks[:plen] = req.prompt
+            toks[:plen] = prompt
             with self._mesh_ctx():
                 first_tok, ks, vs = self._prefill(
                     self.params, jnp.asarray(toks)[None], np.int32(plen),
@@ -575,25 +741,40 @@ class PagedServingEngine:
         # already-cached keys keep their existing page, so a recomputed
         # boundary page simply stays private to this sequence
         if self.prefix_cache is not None and plen // T:
-            self.prefix_cache.insert(req.prompt,
+            self.prefix_cache.insert(prompt,
                                      self.bt[i, :plen // T].copy(), est)
 
         self.rid[i] = req.rid
         self.lens[i] = plen
-        self.tokens[i] = int(first_tok[0])
-        self.to_gen[i] = req.max_new_tokens - 1
-        out = np.empty(req.max_new_tokens, np.int32)
-        out[0] = self.tokens[i]
-        self._out[i] = out
-        self._out_n[i] = 1
+        self._prompt[i] = req.prompt
+        if resume:
+            # the prefill's last-position token was already emitted before
+            # the preemption: restore the output buffer and feed the last
+            # emitted token back into decode instead
+            self.tokens[i] = int(req.out[req.out_n - 1])
+            self.to_gen[i] = req.max_new_tokens - req.out_n
+            self._out[i] = req.out
+            self._out_n[i] = req.out_n
+            self.resumes += 1
+            self.recomputed_tokens += plen
+        else:
+            self.tokens[i] = int(first_tok[0])
+            self.to_gen[i] = req.max_new_tokens - 1
+            out = np.empty(req.max_new_tokens, np.int32)
+            out[0] = self.tokens[i]
+            self._out[i] = out
+            self._out_n[i] = 1
         self._bt_dirty = self._state_dirty = True
-        if self.to_gen[i] <= 0:  # prefill token already completed the request
+        # the prefill token may already complete the request: cap reached,
+        # or (stop-token decode) the first emitted token is the stop token
+        if self.to_gen[i] <= 0 or (not resume and self.stop_token is not None
+                                   and self.tokens[i] == self.stop_token):
             self._admit_done.append(req.rid)
             self._finish(i)
 
-    def _finish(self, i: int) -> None:
-        rid = int(self.rid[i])
-        self.finished[rid] = self._out[i][:self._out_n[i]].tolist()
+    def _release_slot(self, i: int) -> None:
+        """Free slot i's pages (one decref each — shared prefix pages
+        survive for their other referencers) and reset its state."""
         self.pool.free_pages(self.slot_pages(i).astype(np.int64))
         self.bt[i, :] = self.trash_page
         self.rid[i] = -1
@@ -601,7 +782,28 @@ class PagedServingEngine:
         self.tokens[i] = 0
         self._out[i] = None
         self._out_n[i] = 0
+        self._prompt[i] = None
         self._bt_dirty = self._state_dirty = True
+
+    def _finish(self, i: int) -> None:
+        rid = int(self.rid[i])
+        self.finished[rid] = self._out[i][:self._out_n[i]].tolist()
+        self.length_predictor.observe(int(self._out_n[i]))
+        self._release_slot(i)
+
+    def _preempt(self, i: int) -> None:
+        """Evict a running sequence under pressure: drop its page
+        references and requeue it carrying its emitted tokens — onto the
+        resume queue, which `_admit` serves FIFO and *before* any new
+        admission; a later `_start` recomputes the K/V it lost through the
+        (continuation) prefill, bit-compatibly with never having been
+        preempted."""
+        self.preemptions += 1
+        self._resume.append(Request(
+            int(self.rid[i]), self._prompt[i],
+            int(self._out_n[i] + self.to_gen[i]),   # original max_new_tokens
+            out=self._out[i], out_n=int(self._out_n[i])))
+        self._release_slot(i)
 
     # ---------------------------------------------------------------- step
     def _sync_device(self) -> None:
@@ -633,14 +835,32 @@ class PagedServingEngine:
 
         # pages for the incoming tokens must exist before the dispatch writes
         # them; one batched alloc covers every slot at a page boundary
-        # (compaction, if it fires, remaps held pages first)
+        # (compaction, if it fires, remaps held pages first).  With stop
+        # tokens, est_death underestimates can push growth past the
+        # admission reserve: preemption is the backstop before the pool
+        # would OOM — but never of the last active sequence (preempting a
+        # sequence to fund its own growth would loop forever).
         growing = np.flatnonzero(active
                                  & (self.lens >= self.npages * self.page_T))
+        if growing.size and self.preemption:
+            avail = self.pool.free_blocks()
+            if self.prefix_cache is not None:
+                avail += self.prefix_cache.evictable()
+            if avail < growing.size:
+                self._preempt_for(growing.size - avail, min_active=1)
+                active = self.rid >= 0
+                growing = np.flatnonzero(
+                    active & (self.lens >= self.npages * self.page_T))
+                if not active.any():
+                    return done
         if growing.size:
+            rem = np.array([self._predict_remaining(
+                int(self._out_n[j] + self.to_gen[j]), int(self._out_n[j]))
+                for j in growing])
             pages = self.pool.alloc_blocks(
                 self.rid[growing],
                 self.pool.u_now + (self.lens[growing]
-                                   + self.to_gen[growing]).astype(np.float64))
+                                   + rem).astype(np.float64))
             self.bt[growing, self.npages[growing]] = pages
             self.npages[growing] += 1
             self._bt_dirty = True
@@ -653,18 +873,31 @@ class PagedServingEngine:
                          self._act_dev, np.int32(n)))
         toks = np.asarray(out)[:n]  # ONE host sync per dispatch, not per token
 
-        # host bookkeeping: O(active slots) per dispatch
-        for i in np.flatnonzero(active):
+        # host bookkeeping: O(active slots) per dispatch.  With stop tokens
+        # a slot may have stopped mid-dispatch: it emitted tokens only up to
+        # and including its first stop token (the device froze it there), so
+        # the per-slot emitted count comes out of the same token buffer.
+        act = np.flatnonzero(active)
+        emitted = np.full(self.max_batch, n, np.int32)
+        stopped = np.zeros(self.max_batch, bool)
+        if self.stop_token is not None and act.size:
+            hit = toks[:, act] == self.stop_token          # (n, |act|)
+            has = hit.any(axis=0)
+            emitted[act[has]] = hit.argmax(axis=0)[has] + 1
+            stopped[act[has]] = True
+        for i in act:
+            e = int(emitted[i])
             w = self._out_n[i]
-            self._out[i][w:w + n] = toks[:, i]
-        self._out_n[active] += n
-        self.lens[active] += n
-        self.to_gen[active] -= n
-        self.tokens[active] = toks[-1, active]
+            self._out[i][w:w + e] = toks[:e, i]
+            self._out_n[i] += e
+            self.lens[i] += e            # matches the device: seq_lens froze
+            self.to_gen[i] -= e          # with the active mask at the stop
+            self.tokens[i] = int(toks[e - 1, i])
 
-        for i in np.flatnonzero(active & (self.to_gen <= 0)):
-            done.append(int(self.rid[i]))
-            self._finish(int(i))
+        for i in act:
+            if stopped[i] or self.to_gen[i] <= 0:
+                done.append(int(self.rid[i]))
+                self._finish(int(i))
         return done
 
     def run_to_completion(self, max_steps: int = 100_000) -> dict:
@@ -704,6 +937,9 @@ class PagedServingEngine:
             "mean_E_compacted": st.mean_E(),
             "compactions": st.compactions,
             "free_blocks": self.pool.free_blocks(),
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "recomputed_tokens": self.recomputed_tokens,
         }
         if self.prefix_cache is not None:
             total = self._prefill_tokens_total

@@ -148,6 +148,17 @@ class LogStructuredKVPool:
     def free_blocks(self) -> int:
         return self.core.free_frames()
 
+    def admission_reserve(self) -> int:
+        """Blocks admission control must leave free: the compaction reserve.
+
+        ``compact_trigger`` is a *slab* count (``_compact_until`` compares it
+        to ``core.free_count()``, the free-slab count), so the block-unit
+        headroom admission has to respect is ``compact_trigger * S`` —
+        admitting into this reserve both starves the cleaner of evacuation
+        destinations and leaves no cushion for in-flight page growth of the
+        already-admitted sequences."""
+        return self.compact_trigger * self.S
+
     def _refresh_open_bounds(self) -> None:
         """Lifetime-quantile boundaries spread over the active horizon."""
         k = self.n_open - 1

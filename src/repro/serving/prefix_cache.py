@@ -95,27 +95,42 @@ class PrefixCache:
         return [tuple(int(t) for t in toks[i:i + T])
                 for i in range(0, (len(toks) // T) * T, T)]
 
-    def lookup(self, tokens: np.ndarray) -> list[int]:
-        """Pages of the longest *usable* cached full-page prefix of
+    def _walk(self, tokens: np.ndarray) -> list[_Node]:
+        """Nodes of the longest *usable* cached full-page prefix of
         ``tokens``: the match is capped at ``(len(tokens) - 1) // page_T``
         pages — the copy-on-write boundary rule, so at least one prompt
         token is always left for the caller to prefill (it needs the last
         position's logits; a fully-matched final page is recomputed
-        privately).
+        privately)."""
+        cap = (len(np.asarray(tokens)) - 1) // self.page_T
+        node, path = self.root, []
+        for key in self._keys(tokens)[:cap]:
+            node = node.children.get(key)
+            if node is None:
+                break
+            path.append(node)
+        return path
+
+    def match(self, tokens: np.ndarray) -> list[int]:
+        """Pages the longest usable cached prefix would splice, WITHOUT
+        touching hit counters or the LRU clock — the admission-control
+        peek (``_admit`` computes a request's page need *net* of the
+        cached prefix before deciding whether it fits)."""
+        return [n.page for n in self._walk(tokens)]
+
+    def lookup(self, tokens: np.ndarray) -> list[int]:
+        """Pages of the longest usable cached full-page prefix (see
+        :meth:`_walk` for the CoW cap).
 
         Touches the matched path's LRU clock and counts hit/reuse stats;
         the caller must incref every returned page (it splices all of
         them)."""
         self.lookups += 1
         self._clock += 1
-        cap = (len(np.asarray(tokens)) - 1) // self.page_T
-        node, pages = self.root, []
-        for key in self._keys(tokens)[:cap]:
-            node = node.children.get(key)
-            if node is None:
-                break
+        path = self._walk(tokens)
+        for node in path:
             node.last_use = self._clock
-            pages.append(node.page)
+        pages = [n.page for n in path]
         if pages:
             self.hits += 1
             self.pages_reused += len(pages)

@@ -1,0 +1,91 @@
+"""Pressure-aware scheduling: output-length prediction and preemption.
+
+With stop-token decode, a request's output length — and therefore every
+page's lifetime — is data-dependent: the exact ``est_death`` the engine
+used to hand the pool becomes an *estimate*, which is precisely the regime
+the paper's MDC key (and the BIT-inference line of work on lifetime
+estimation) targets.  This module owns the two scheduler-side pieces
+(DESIGN.md §8):
+
+* **Length predictors** — turn ``max_new_tokens`` (an upper bound) into a
+  predicted output length that the §5.3 placement sort and the MDC victim
+  key consume.  ``ewma`` (default) tracks an exponentially-weighted moving
+  average of recent *actual* completion lengths; ``max`` predicts the upper
+  bound (the old exact-lifetime behavior, and the fallback before any
+  completion has been observed).
+* **Preemption victim selection** — when admission stalls and compaction
+  plus prefix-cache eviction cannot cover the page deficit, the engine
+  preempts running sequences.  Victims are ranked by
+  :func:`repro.core.policies.key_preempt`, the MDC declining-cost shape
+  applied to sequences (recompute cost vs. freed space-time), through the
+  same ``_take_smallest`` top-k machinery segment cleaning uses.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import policies as P
+
+
+class EwmaLengthPredictor:
+    """EWMA over recent completions' output lengths (in tokens).
+
+    Before the first observation, predicts the request's own
+    ``max_new_tokens`` (the only information available); afterwards the
+    prediction is the EWMA clamped to ``[1, max_new_tokens]`` — a request
+    can never emit more than its cap, and always emits at least one token.
+    """
+
+    name = "ewma"
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = float(alpha)
+        self.value: float | None = None
+        self.n_obs = 0
+
+    def observe(self, n_tokens: int) -> None:
+        n = float(n_tokens)
+        self.value = n if self.value is None else (
+            (1.0 - self.alpha) * self.value + self.alpha * n)
+        self.n_obs += 1
+
+    def predict(self, max_new_tokens: int) -> int:
+        if self.value is None:
+            return int(max_new_tokens)
+        return int(np.clip(round(self.value), 1, max_new_tokens))
+
+
+class MaxLengthPredictor:
+    """Predict the cap: every request is assumed to decode
+    ``max_new_tokens`` (the exact-lifetime behavior when stop tokens are
+    off, kept selectable for ablation against EWMA)."""
+
+    name = "max"
+
+    def observe(self, n_tokens: int) -> None:
+        pass
+
+    def predict(self, max_new_tokens: int) -> int:
+        return int(max_new_tokens)
+
+
+_PREDICTORS = {"ewma": EwmaLengthPredictor, "max": MaxLengthPredictor}
+
+
+def make_length_predictor(name: str):
+    if name not in _PREDICTORS:
+        raise ValueError(f"unknown length predictor {name!r}; "
+                         f"supported: {tuple(_PREDICTORS)}")
+    return _PREDICTORS[name]()
+
+
+def choose_preempt_victims(k: int, *, recompute: np.ndarray,
+                           freeable: np.ndarray,
+                           remaining: np.ndarray) -> np.ndarray:
+    """Indices (into the candidate arrays) of up to ``k`` sequences to
+    preempt, cheapest declining-cost first — a thin alias over
+    :func:`repro.core.policies.select_preempt` so the engine's scheduler
+    and the simulator's cleaner share one priority-key source of truth."""
+    return P.select_preempt(k, recompute=recompute, freeable=freeable,
+                            remaining=remaining)

@@ -8,6 +8,7 @@ accounting, auto-release, and the frames/bytes StoreStats unification.
 
 import numpy as np
 import pytest
+from _hyp import given, settings, st  # degrades to skips without hypothesis
 
 from repro.core.logstructure import (FREE, IN_FLIGHT, OPEN, USED, ByteLog,
                                      Clock, FrameLog, StoreStats)
@@ -61,6 +62,43 @@ def test_framelog_kill_slots_updates_up2_sum():
     assert log.seg_up2[s] == pytest.approx(15.0)
     assert log.seg_live[s] == 2
     assert log.stats.deaths == 1
+
+
+def test_kill_slots_rejects_duplicate_pairs():
+    """ISSUE 5 regression: a duplicated (seg, slot) pair silently
+    under-decrements via the fancy-index write, so ``kill_slots`` must
+    assert pair uniqueness exactly like ``incref_slots`` already does —
+    and refuse before mutating anything."""
+    log = FrameLog(2, 4)
+    s = log.alloc()
+    log.append(s, np.array([1, 2]), np.array([1.0, 2.0]), kind="user")
+    with pytest.raises(AssertionError, match="duplicate"):
+        log.kill_slots(np.array([s, s]), np.array([0, 0]))
+    assert log.seg_live[s] == 2 and log.stats.deaths == 0
+    assert (log.slot_ref[s, :2] == 1).all()
+    log.check_invariants()
+
+
+@given(st.lists(st.integers(0, 5), min_size=2, max_size=10))
+@settings(max_examples=30, deadline=None)
+def test_kill_slots_uniqueness_property(slots):
+    """Property: any slot list with a duplicate pair raises (before any
+    mutation); any unique list kills exactly its length in frames."""
+    log = FrameLog(2, 6)
+    s = log.alloc()
+    log.append(s, np.arange(6) + 10, np.arange(6, dtype=np.float64),
+               kind="user")
+    segs = np.full(len(slots), s, dtype=np.int64)
+    arr = np.asarray(slots, dtype=np.int64)
+    if len(set(slots)) != len(slots):
+        with pytest.raises(AssertionError, match="duplicate"):
+            log.kill_slots(segs, arr)
+        assert log.seg_live[s] == 6 and log.stats.deaths == 0
+    else:
+        log.kill_slots(segs, arr)
+        assert log.seg_live[s] == 6 - len(slots)
+        assert log.stats.deaths == len(slots)
+    log.check_invariants()
 
 
 def test_framelog_evacuate_accounting_and_order():

@@ -1,0 +1,221 @@
+"""Sequence preemption under pool pressure (DESIGN.md §8).
+
+The scheduler contracts pinned here:
+
+* preempt → compact → resume keeps every pool/core invariant at each step;
+* a preempted-then-resumed request's tokens are bit-identical to an
+  uninterrupted run at ``pool_dtype=float32`` (ref and pallas-interpret
+  paths) — preemption, like compaction, is pure space management;
+* pressure-driven preemption in a tiny pool emits exactly the tokens an
+  over-provisioned pool emits for the same request stream;
+* prefix-cache pages held by the tree survive the preempting sequence's
+  decref and splice back into the resume's continuation prefill;
+* a 2-device tensor-parallel engine preempts and resumes identically to
+  the 1-device engine (runs in CI's multidevice job).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.models import transformer as tfm
+from repro.serving import PagedServingEngine
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    return Model(get_config("qwen3-1.7b").smoke())
+
+
+@pytest.fixture(scope="module")
+def smoke_params(smoke_model):
+    return smoke_model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, *, n_slabs, use_pallas=False, mesh=None,
+            max_batch=3, chunk=4, **kw):
+    return PagedServingEngine(
+        model, n_slabs=n_slabs, blocks_per_slab=2, page_T=8,
+        max_batch=max_batch, max_seq=96, policy="mdc", params=params,
+        compact_trigger=1, compact_batch=2, use_pallas=use_pallas,
+        mesh=mesh, max_decode_chunk=chunk, preemption=True,
+        pool_dtype=jnp.float32, **kw)
+
+
+def _mixed_reqs(vocab, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, vocab, size=int(rng.integers(4, 40))),
+             int(rng.integers(4, 30))) for _ in range(n)]
+
+
+# --------------------------------------------------- forced preempt/resume
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_preempt_compact_resume_bit_identical(smoke_model, smoke_params,
+                                              use_pallas):
+    """Preempt mid-decode, force a compaction while the sequence is off the
+    pool, resume: tokens must match the uninterrupted dense reference and
+    the invariants must hold at every step."""
+    prompt = np.arange(1, 21) % smoke_model.cfg.vocab_size
+    want = tfm.greedy_decode(smoke_params, prompt, smoke_model.cfg, 12)
+    eng = _engine(smoke_model, smoke_params, n_slabs=14,
+                  use_pallas=use_pallas)
+    rid = eng.submit(prompt, 12)
+    eng.step()
+    i = int(np.flatnonzero(eng.rid == rid)[0])
+    assert 1 <= eng._out_n[i] < 12, "must preempt mid-decode"
+    eng._preempt(i)
+    eng.pool.check_invariants()
+    assert not eng.slot_active(i) and eng.has_work()
+    eng.pool.compact()                 # clean while the sequence is evicted
+    eng.pool.check_invariants()
+    for _ in range(10_000):
+        eng.step()
+        eng.pool.check_invariants()
+        if not eng.has_work():
+            break
+    assert eng.finished[rid] == want
+    assert eng.preemptions == 1 and eng.resumes == 1
+    assert eng.metrics()["free_blocks"] == eng.pool.n_slabs * eng.pool.S
+
+
+def test_repeated_preemption_still_bit_identical(smoke_model, smoke_params):
+    """A sequence preempted several times (each resume re-prefills a longer
+    effective prompt) still finishes with the uninterrupted tokens."""
+    prompt = (np.arange(3, 30) * 5) % smoke_model.cfg.vocab_size
+    want = tfm.greedy_decode(smoke_params, prompt, smoke_model.cfg, 14)
+    eng = _engine(smoke_model, smoke_params, n_slabs=14, chunk=2)
+    rid = eng.submit(prompt, 14)
+    preempted = 0
+    for step in range(10_000):
+        eng.step()
+        slots = np.flatnonzero(eng.rid == rid)
+        if step % 2 == 1 and slots.size and preempted < 3:
+            eng._preempt(int(slots[0]))
+            preempted += 1
+            eng.pool.check_invariants()
+        if not eng.has_work():
+            break
+    assert preempted >= 2 and eng.resumes == preempted
+    assert eng.finished[rid] == want
+
+
+# ------------------------------------------------ pressure-driven preempt
+
+def test_pressure_preemption_matches_big_pool(smoke_model, smoke_params):
+    """Tiny pool + preemption serves the same tokens as a pool large enough
+    to never stall: the scheduler's evict/resume is invisible to results,
+    it only trades recompute for admission latency."""
+    reqs = _mixed_reqs(smoke_model.cfg.vocab_size)
+    small = _engine(smoke_model, smoke_params, n_slabs=8, chunk=32)
+    big = _engine(smoke_model, smoke_params, n_slabs=40, chunk=32)
+    rids_s = [small.submit(p, n) for p, n in reqs]
+    rids_b = [big.submit(p, n) for p, n in reqs]
+    small.run_to_completion()
+    big.run_to_completion()
+    small.pool.check_invariants()
+    assert big.preemptions == 0, "big pool must not need preemption"
+    assert small.preemptions >= 1, "tiny pool must preempt (else the test " \
+                                   "exercises nothing)"
+    assert small.resumes == small.preemptions
+    for rs, rb, (_, n) in zip(rids_s, rids_b, reqs):
+        assert len(small.finished[rs]) == n
+        assert small.finished[rs] == big.finished[rb]
+    assert small.metrics()["free_blocks"] == small.pool.n_slabs * small.pool.S
+    assert small.metrics()["recomputed_tokens"] > 0
+
+
+def test_pressure_preemption_with_stop_tokens(smoke_model, smoke_params):
+    """Stop tokens + preemption together (the full uncertain-lifetime
+    regime): early exits shorten lifetimes under the EWMA estimate while
+    preemption covers the mispredictions — results still match the
+    unconstrained pool."""
+    reqs = _mixed_reqs(smoke_model.cfg.vocab_size, seed=1)
+    stop = 70  # appears in this stream's outputs for the smoke params
+    small = _engine(smoke_model, smoke_params, n_slabs=8, chunk=32,
+                    stop_token=stop)
+    big = _engine(smoke_model, smoke_params, n_slabs=40, chunk=32,
+                  stop_token=stop)
+    rids_s = [small.submit(p, n) for p, n in reqs]
+    rids_b = [big.submit(p, n) for p, n in reqs]
+    small.run_to_completion()
+    big.run_to_completion()
+    small.pool.check_invariants()
+    for rs, rb in zip(rids_s, rids_b):
+        assert small.finished[rs] == big.finished[rb]
+    assert any(f and f[-1] == stop for f in small.finished.values()), \
+        "stream must contain at least one early exit"
+
+
+# -------------------------------------------------- prefix-cache interplay
+
+def test_resume_splices_surviving_prefix_pages(smoke_model, smoke_params):
+    """The tree's references keep the shared prefix alive through the
+    preempting sequence's decref; the resume's continuation prefill splices
+    those pages back instead of recomputing them."""
+    sysp = np.random.default_rng(42).integers(
+        1, smoke_model.cfg.vocab_size, size=24)
+
+    def run(preempt_after):
+        eng = _engine(smoke_model, smoke_params, n_slabs=12, max_batch=2,
+                      chunk=2, prefix_cache=True)
+        eng.submit(np.concatenate([sysp, [5, 9]]), 6)  # donor seeds the tree
+        eng.run_to_completion()
+        rid = eng.submit(np.concatenate([sysp, [7, 11, 13]]), 14)
+        saved0 = eng._prefill_tokens_saved
+        for _ in range(preempt_after):
+            eng.step()
+        if preempt_after:
+            eng._preempt(int(np.flatnonzero(eng.rid == rid)[0]))
+        eng.run_to_completion()
+        eng.pool.check_invariants()
+        eng.prefix_cache.check_invariants()
+        return eng.finished[rid], eng._prefill_tokens_saved - saved0
+
+    toks_cold, saved_cold = run(0)
+    toks_pre, saved_pre = run(3)
+    assert toks_pre == toks_cold          # bit-identical through preemption
+    assert saved_pre > saved_cold, \
+        "resume must splice the surviving prefix pages (more tokens saved)"
+
+
+# --------------------------------------------------------------- mesh = 2
+
+NDEV = len(jax.devices())
+needs2 = pytest.mark.skipif(
+    NDEV < 2, reason="needs 2 (virtual) devices: run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=2 "
+    "(CI multidevice job)")
+
+
+@needs2
+def test_preemption_bit_identical_under_mesh2():
+    """Preemption decisions are host-side and mesh-oblivious: the 2-way
+    tensor-parallel engine preempts/resumes identically to the 1-device
+    engine — same tokens, same (shard-invariant) pool metrics including
+    the preemption counters.  Uses the TP smoke model so the pools
+    actually shard."""
+    from repro.launch.mesh import make_serving_mesh
+    model = Model(get_config("qwen3-1.7b").tp_smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _mixed_reqs(model.cfg.vocab_size)
+
+    def run(mesh):
+        eng = _engine(model, params, n_slabs=8, chunk=32, mesh=mesh)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        eng.run_to_completion()
+        eng.pool.check_invariants()
+        return eng, rids
+
+    e1, r1 = run(None)
+    e2, r2 = run(make_serving_mesh(2))
+    assert e1.preemptions >= 1, "scenario must preempt"
+    assert [e2.finished[b] for b in r2] == [e1.finished[a] for a in r1]
+    assert e2.metrics() == e1.metrics()   # incl. preemptions/resumes
+    spec = tuple(e2.k_pools.sharding.spec)
+    assert "model" in spec, "pools must actually shard"

@@ -325,9 +325,11 @@ def test_prefix_hit_decode_bit_identical_to_cold(smoke_model, use_pallas):
     assert m["prefill_tokens_saved"] >= m["prefill_tokens_computed"], \
         "prefix caching must at least halve the prefill tokens computed"
     assert m["frames_shared"] > 0
-    # both engines clean under this pool size: the equivalence holds across
-    # compaction remaps of shared pages, not just in the easy no-move case
-    assert cold.metrics()["compactions"] >= 1
+    # the cached engine cleans under this pool size: the equivalence holds
+    # across compaction remaps of shared pages, not just the easy no-move
+    # case.  (The cold engine no longer cleans here — the slab-unit
+    # admission reserve (ISSUE 5) keeps admission out of the cleaner's
+    # headroom, so the uncached run stays checkerboard-free.)
     assert m["compactions"] >= 1
 
 

@@ -118,17 +118,10 @@ def smoke_model():
 def _dense_reference_decode(model, prompt, n_new):
     """Dense-cache greedy decode (the model's own serve path)."""
     import jax
-    import jax.numpy as jnp
+
+    from repro.models import transformer as tfm
     params = model.init(jax.random.PRNGKey(0))
-    toks = jnp.asarray(prompt, jnp.int32)[None]
-    max_len = len(prompt) + n_new + 1
-    logits, cache = model.prefill(params, toks, max_len)
-    out = [int(jnp.argmax(logits[0]))]
-    for _ in range(n_new - 1):
-        logits, cache = model.decode_step(
-            params, cache, jnp.asarray([out[-1]], jnp.int32))
-        out.append(int(jnp.argmax(logits[0])))
-    return params, out
+    return params, tfm.greedy_decode(params, prompt, model.cfg, n_new)
 
 
 def test_paged_engine_matches_dense_decode(smoke_model):
@@ -317,6 +310,154 @@ def test_non_pow2_page_size(smoke_model):
     eng.run_to_completion()
     assert len(eng.finished[rid]) == 6
     eng.pool.check_invariants()
+
+
+# ------------------------------------------------- stop-token decode (§8)
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_stop_token_early_exit_matches_dense(smoke_model, use_pallas):
+    """Stop-token decode is detected on device inside the multi-token
+    dispatch: the request must truncate at (and include) the first stop
+    token, exactly like the dense stop-aware reference, and free its pool
+    pages early."""
+    from repro.models import transformer as tfm
+    import jax
+
+    prompt = np.arange(1, 21) % smoke_model.cfg.vocab_size
+    params = smoke_model.init(jax.random.PRNGKey(0))
+    full = tfm.greedy_decode(params, prompt, smoke_model.cfg, 12)
+    stop = full[5]  # a token the stream actually emits, mid-output
+    want = tfm.greedy_decode(params, prompt, smoke_model.cfg, 12,
+                             stop_token=stop)
+    assert want == full[:full.index(stop) + 1] and len(want) < len(full)
+    eng = PagedServingEngine(smoke_model, n_slabs=12, blocks_per_slab=2,
+                             page_T=8, max_batch=2, max_seq=64,
+                             policy="mdc", params=params, compact_trigger=2,
+                             compact_batch=3, use_pallas=use_pallas,
+                             stop_token=stop)
+    rid = eng.submit(prompt, 12)
+    eng.run_to_completion()
+    assert eng.finished[rid] == want
+    eng.pool.check_invariants()
+    assert eng.metrics()["free_blocks"] == eng.pool.n_slabs * eng.pool.S
+
+
+def test_stop_token_chunked_equals_singlestep(smoke_model):
+    """Mid-dispatch stops must be invisible to the tokens: a multi-token
+    dispatch engine truncates exactly where the single-token engine does.
+    (Pool counters may differ — data-dependent completion shifts admission
+    events between dispatch boundaries — but tokens may not.)"""
+    import jax
+
+    params = smoke_model.init(jax.random.PRNGKey(0))
+    results = []
+    for chunk in (1, 8):
+        eng = PagedServingEngine(smoke_model, n_slabs=14, blocks_per_slab=2,
+                                 page_T=8, max_batch=3, max_seq=96,
+                                 policy="mdc", params=params,
+                                 compact_trigger=2, compact_batch=3,
+                                 max_decode_chunk=chunk, stop_token=509)
+        rids, _ = _mixed_stream(eng, smoke_model.cfg.vocab_size, seed=1)
+        eng.run_to_completion()
+        eng.pool.check_invariants()
+        results.append({r: eng.finished[r] for r in rids})
+    assert results[0] == results[1]
+    assert any(out and out[-1] == 509 for out in results[0].values()), \
+        "stream must contain at least one early exit"
+
+
+def test_stop_token_on_prefill_token_finishes_at_admission(smoke_model):
+    """If the prefill's first emitted token is the stop token, the request
+    completes during admission and step() must still report it."""
+    from repro.models import transformer as tfm
+    import jax
+
+    prompt = np.arange(1, 6)
+    params = smoke_model.init(jax.random.PRNGKey(0))
+    first = tfm.greedy_decode(params, prompt, smoke_model.cfg, 1)[0]
+    eng = PagedServingEngine(smoke_model, n_slabs=8, blocks_per_slab=2,
+                             page_T=8, max_batch=2, max_seq=64, policy="mdc",
+                             params=params, stop_token=first)
+    rid = eng.submit(prompt, 10)
+    done = eng.step()
+    assert done == [rid]
+    assert eng.finished[rid] == [first]
+    assert not eng.has_work()
+    eng.pool.check_invariants()
+
+
+# ------------------------------------------- admission accounting (fixes)
+
+def test_admission_reserve_is_in_slab_units(smoke_model):
+    """Regression (ISSUE 5): ``compact_trigger`` is a *slab* count, so the
+    admission reserve is ``compact_trigger * blocks_per_slab`` blocks — the
+    old code added the raw trigger to a block count, understating the
+    reserve by blocks_per_slab× and admitting into the cleaner's headroom.
+    At the boundary, admission must neither OOM nor starve."""
+    import jax
+
+    params = smoke_model.init(jax.random.PRNGKey(0))
+    eng = PagedServingEngine(smoke_model, n_slabs=5, blocks_per_slab=4,
+                             page_T=8, max_batch=2, max_seq=96,
+                             policy="mdc", params=params, compact_trigger=2,
+                             compact_batch=2, max_decode_chunk=2)
+    assert eng.pool.admission_reserve() == 2 * 4  # slabs -> blocks
+    ra = eng.submit(np.arange(1, 49), 16)   # needs 8 of the 20 blocks
+    rb = eng.submit(np.arange(1, 9), 56)    # needs 8 more
+    eng.step()
+    # A admitted; B must wait: 20 - 6 held = 14 free < need 8 + reserve 8.
+    # (The old block-unit reserve, 8 + 2 <= 14, would admit B here.)
+    assert eng.rid[0] == ra and rb not in eng.rid
+    assert len(eng.queue) == 1
+    while eng.queue:           # B admitted only once A's death frees blocks
+        assert rb not in eng.rid
+        eng.step()
+    eng.run_to_completion()
+    assert len(eng.finished[ra]) == 16 and len(eng.finished[rb]) == 56
+    eng.pool.check_invariants()
+    # no starvation at the exact boundary: a request sized need + reserve
+    # == pool admits as soon as the pool is idle (reserve waived when
+    # nothing is active, so whole-pool requests can still run)
+    rc = eng.submit(np.arange(1, 9), 88)    # needs 12 = 20 - reserve
+    eng.run_to_completion()
+    assert len(eng.finished[rc]) == 88
+    eng.pool.check_invariants()
+
+
+def test_admission_need_is_net_of_cached_prefix(smoke_model):
+    """Regression (ISSUE 5): a request whose prefix is cached only
+    allocates the tail, so admission must charge it the *net* page need —
+    the gross-need gate rejected admissible requests under pressure (the
+    cached pages are spliced, not allocated, and while referenced by an
+    active sequence they are not evictable either)."""
+    import jax
+    import jax.numpy as jnp
+
+    params = smoke_model.init(jax.random.PRNGKey(0))
+    eng = PagedServingEngine(smoke_model, n_slabs=6, blocks_per_slab=2,
+                             page_T=8, max_batch=2, max_seq=96,
+                             policy="mdc", params=params, compact_trigger=1,
+                             compact_batch=2, max_decode_chunk=2,
+                             prefix_cache=True, pool_dtype=jnp.float32)
+    sysp = np.random.default_rng(42).integers(
+        1, smoke_model.cfg.vocab_size, size=40)  # 5 full pages
+    rd = eng.submit(np.concatenate([sysp, [3] * 8]), 8)   # donor seeds tree
+    eng.run_to_completion()
+    assert eng.prefix_cache.n_pages >= 5
+    rh = eng.submit(np.concatenate([sysp, [5] * 8]), 16)  # holder: active ref
+    eng.step()
+    assert rh in eng.rid
+    # follower: gross need 8 pages won't fit (holder + referenced prefix
+    # leave ~5 free), net-of-prefix need is 3 — must be admitted NOW
+    rf = eng.submit(np.concatenate([sysp, [7] * 8]), 16)
+    eng.step()
+    assert rf in eng.rid and rh in eng.rid, \
+        "net-of-prefix admission must run the follower alongside the holder"
+    eng.run_to_completion()
+    assert len(eng.finished[rh]) == 16 and len(eng.finished[rf]) == 16
+    eng.pool.check_invariants()
+    eng.prefix_cache.check_invariants()
 
 
 @pytest.mark.parametrize("policy", ["mdc", "greedy", "age"])
