@@ -23,7 +23,10 @@ def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
     not slow down just because the pool is full.  Returns (dispatches,
     latency metrics): wall-clock TTFT (first token after *scheduled*
     arrival, so queueing and preemption delays are priced in) and TPOT
-    (per-token decode latency after the first) percentiles in ms."""
+    (per-token decode latency after the first) percentiles in ms, plus the
+    TTFT *queue-wait* component (scheduled arrival → first admission, read
+    off the engine's ``admit_wall`` stamps) — separating "the scheduler sat
+    on it" from "the prefill took that long to compute"."""
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(reqs)))
     arr_t, first_t, done_t, n_tok = {}, {}, {}, {}
     dispatches = 0
@@ -51,13 +54,16 @@ def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
     ttft = np.array([first_t[r] - arr_t[r] for r in done_t])
     tpot = np.array([(done_t[r] - first_t[r]) / max(n_tok[r] - 1, 1)
                      for r in done_t])
+    queue = np.array([eng.admit_wall[r] - t0 - arr_t[r] for r in done_t
+                      if r in eng.admit_wall])
 
     def pct(a, q):
-        return round(float(np.percentile(a, q)) * 1e3, 1)
+        return round(float(np.percentile(a, q)) * 1e3, 1) if len(a) else 0.0
 
     return dispatches, dict(
         arrival_rate=rate,
         ttft_p50_ms=pct(ttft, 50), ttft_p99_ms=pct(ttft, 99),
+        queue_ms_p50=pct(queue, 50), queue_ms_p99=pct(queue, 99),
         tpot_p50_ms=pct(tpot, 50), tpot_p99_ms=pct(tpot, 99))
 
 
@@ -69,7 +75,9 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               mesh=None, prefix_cache: bool = False,
               prefix_cache_pages: int = 0, shared_prefix_len: int = 0,
               stop_token: int | None = None, preemption: bool = False,
-              arrival_rate: float = 0.0, verbose: bool = True) -> dict:
+              arrival_rate: float = 0.0, prefill_chunk: int = 0,
+              admit_every_dispatch: bool = True,
+              verbose: bool = True) -> dict:
     """One engine run over a request stream; returns metrics.
 
     ``prefix_cache`` turns on shared-prefix KV reuse; ``shared_prefix_len``
@@ -78,7 +86,12 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
     data-dependent early termination (output lifetimes become estimates);
     ``preemption`` lets the scheduler evict + resume sequences under pool
     pressure; ``arrival_rate`` > 0 switches to the open-loop Poisson
-    driver and adds TTFT/TPOT latency percentiles to the row."""
+    driver and adds TTFT/TPOT latency percentiles to the row.
+    ``prefill_chunk`` > 0 co-schedules prompt prefill with decode in the
+    fused dispatch (that many prompt tokens per dispatch — DESIGN.md §9);
+    ``admit_every_dispatch`` shrinks dispatches to per-token scheduling
+    while work waits under stop-token decode (mid-dispatch exits become
+    visible immediately)."""
     if model is None:
         model = Model(get_config(arch).smoke())
     rng = np.random.default_rng(seed)
@@ -92,6 +105,8 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              prefix_cache=prefix_cache,
                              prefix_cache_pages=prefix_cache_pages,
                              stop_token=stop_token, preemption=preemption,
+                             prefill_chunk=prefill_chunk,
+                             admit_every_dispatch=admit_every_dispatch,
                              warmup=True)  # AOT-compile outside the timed loop
     # mixed short/long request stream (the checkerboarding driver); with
     # shared_prefix_len, every prompt opens with the same system prompt
@@ -130,6 +145,7 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                       f"recomputed={m['recomputed_tokens']}")
         if lat:
             extra += (f"  ttft_p99={lat['ttft_p99_ms']:.0f}ms "
+                      f"(queue {lat['queue_ms_p99']:.0f}ms) "
                       f"tpot_p50={lat['tpot_p50_ms']:.1f}ms")
         print(f"[serve] {policy:12s} {toks:5d} tok in {dt:6.2f}s "
               f"({out['tok_per_s']:7.1f} tok/s, {dispatches} dispatches)  "
@@ -176,6 +192,20 @@ def main() -> None:
                          "(declining-cost victim key), free their pages and "
                          "resume them later via recompute — admission stays "
                          "live instead of stalling until natural deaths")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="C",
+                    help="chunked prefill co-scheduled with decode: prefill "
+                         "C prompt tokens per dispatch inside the fused "
+                         "prefill+decode step (rounded up to whole pages) so "
+                         "running decodes never stall behind a long prompt; "
+                         "0 = monolithic one-dispatch prefill")
+    ap.add_argument("--admit-every-dispatch",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="with work waiting under stop-token decode, shrink "
+                         "dispatches to per-token scheduling so a "
+                         "mid-dispatch stop-token exit frees its slot at "
+                         "the next token instead of the end of the dispatch "
+                         "(--no-admit-every-dispatch keeps full "
+                         "horizon-length dispatches)")
     ap.add_argument("--arrival-rate", type=float, default=0.0, metavar="R",
                     help="open-loop mode: submit requests by a Poisson "
                          "process at R req/s (independent of completions) "
@@ -202,7 +232,9 @@ def main() -> None:
                          shared_prefix_len=args.shared_prefix_len,
                          stop_token=args.stop_token,
                          preemption=args.preemption,
-                         arrival_rate=args.arrival_rate)
+                         arrival_rate=args.arrival_rate,
+                         prefill_chunk=args.prefill_chunk,
+                         admit_every_dispatch=args.admit_every_dispatch)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

@@ -226,6 +226,50 @@ def gqa_prefill_cont(x, p, cfg, k_pre, v_pre, *, kv_len: int | None = None,
     return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (k, v)
 
 
+def gqa_prefill_chunk(x, p, cfg, k_ext, v_ext, pos0, *,
+                      gather_heads: bool = False):
+    """Prefill continuation at an *arbitrary* chunk boundary ``pos0`` —
+    the chunked-prefill generalization of :func:`gqa_prefill_cont` (which
+    only handles a continuation at a cached-prefix boundary, position 0 of
+    the tail).  ``x`` holds positions ``[pos0, pos0 + S)`` of a prompt whose
+    earlier chunks' K/V already sit in the serving pool; ``k_ext``/``v_ext``
+    (B, kv_len, Kh, hd) is the prompt's *full padded key extent* gathered
+    from the pool pages — rows ``< pos0`` are the exact earlier-chunk
+    values, rows ``>= pos0`` are stale pool content.
+
+    The fresh chunk K/V is spliced into the extent at ``pos0`` (a traced
+    scalar, so one executable serves every chunk index) *before* the pool
+    round-trip — the current chunk attends its own unrounded activations,
+    exactly like a monolithic prefill.  Everything at or beyond the causal
+    frontier — stale rows, right-padding — is masked to ``NEG_INF``, whose
+    ``exp`` underflows to exactly 0, so any *finite* stale content
+    contributes nothing (bit-identity argument, DESIGN.md §9).  Because
+    ``kv_len`` equals the full prompt's pow2 bucket, the key-dim tiling of
+    ``chunked_attention`` matches the monolithic prefill's, and the per-row
+    online softmax makes the q-dim chunking invisible — so each chunk row
+    reproduces the monolithic prefill's row to the last ulp (f32 pool).
+
+    Returns (attn out, (k_chunk, v_chunk)) — the fresh chunk K/V for the
+    engine to scatter into this chunk's pages."""
+    B, S, _ = x.shape
+    kv_len = k_ext.shape[1]
+    positions = pos0 + jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    # splice the fresh chunk at pos0: extend by S so the update always fits
+    # (pos0 <= kv_len), then cut back to the attended extent
+    grow = ((0, 0), (0, S), (0, 0), (0, 0))
+    k_cat = jax.lax.dynamic_update_slice(
+        jnp.pad(k_ext.astype(k.dtype), grow), k, (0, pos0, 0, 0))[:, :kv_len]
+    v_cat = jax.lax.dynamic_update_slice(
+        jnp.pad(v_ext.astype(v.dtype), grow), v, (0, pos0, 0, 0))[:, :kv_len]
+    out = chunked_attention(q, k_cat, v_cat, causal=True, q_offset=pos0,
+                            q_block=cfg.q_block, kv_block=cfg.kv_block)
+    if gather_heads:
+        from ..distributed.sharding import logical_constraint
+        out = logical_constraint(out, ("batch", None, None, None))
+    return jnp.einsum("bshe,hed->bsd", out, p["wo"]), (k, v)
+
+
 def gqa_decode(x, p, cfg, cache_k, cache_v, cur_len):
     """One-token decode. x: (B,1,d). cache_[kv]: (B,T,Kh,hd) updated in place
     at position cur_len (B,). Returns (out, new_k, new_v)."""

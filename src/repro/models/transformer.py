@@ -541,6 +541,46 @@ def prefill(params, tokens, cfg, max_len, extras=None, cache_dtype=jnp.bfloat16,
     return logits, cache
 
 
+def prefill_chunk(params, tokens, cfg, ext_k, ext_v, pos0, last_idx,
+                  gather_heads=False):
+    """One fixed-size chunk of a prompt prefill (the chunked / co-scheduled
+    prefill path, DESIGN.md §9) — :func:`prefill_with_prefix` generalized
+    from "continuation at a cached-prefix boundary" to "continuation at any
+    chunk boundary".
+
+    ``tokens`` (B, S) is one chunk of the prompt, starting at absolute
+    position ``pos0`` (traced — one executable serves every chunk; the last
+    chunk is right-padded past the prompt end).  ``ext_k``/``ext_v``
+    (L, B, kv_len, Kh, hd) carry the prompt's full padded key extent
+    gathered from the serving pool's pages: rows ``< pos0`` hold the
+    earlier chunks' exact K/V, later rows are stale and causally masked
+    (see :func:`repro.models.attention.gqa_prefill_chunk` for the
+    bit-identity argument).  ``last_idx`` (traced) is the prompt's last
+    token's index *within this chunk*; the returned logits are that row's —
+    on the final chunk they equal a monolithic prefill's last-position
+    logits bit-for-bit, row-wise ops being position-local.
+
+    Returns (last-row logits, k_chunk (L, B, S, Kh, hd), v_chunk) — only
+    this chunk's K/V, for the engine to scatter into the chunk's pages.
+    Attention families only (dense/moe: the paged engine's families)."""
+    assert cfg.family in ("dense", "moe"), cfg.family
+    x = _embed(params, tokens, cfg, None)
+
+    def step(h, xs):
+        lp, kp, vp = xs
+        a, (k, v) = att.gqa_prefill_chunk(rmsnorm(h, lp["ln1"]), lp["attn"],
+                                          cfg, kp, vp, pos0,
+                                          gather_heads=gather_heads)
+        h = h + a
+        h = h + _block_mlp(rmsnorm(h, lp["ln2"]), lp["mlp"], cfg)
+        return h, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(step, x, (params["blocks"], ext_k, ext_v))
+    last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    logits = _unembed(params, last, cfg)[:, 0]
+    return logits, ks, vs
+
+
 def greedy_decode(params, prompt, cfg, max_new_tokens, *, stop_token=None,
                   extras=None, cache_dtype=jnp.bfloat16):
     """Stop-aware dense-cache greedy decode: the serving reference path.

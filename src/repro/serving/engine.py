@@ -39,6 +39,7 @@ import collections
 import contextlib
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +56,8 @@ from ..models.layers import rmsnorm
 from .. import kernels
 from .kvcache import LogStructuredKVPool
 from .prefix_cache import PrefixCache
-from .scheduler import choose_preempt_victims, make_length_predictor
+from .scheduler import (choose_preempt_victims, make_length_predictor,
+                        normalize_prefill_chunk)
 
 
 @dataclasses.dataclass
@@ -146,6 +148,17 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
     contraction so the epilogue — and therefore every decoded token — is
     computed bit-identically to the 1-device engine (DESIGN.md §6).
     """
+    step = _build_decode_step(cfg, page_T, use_pallas, max_chunk, mesh,
+                              kv_shard, rep_shard, stop_token, trash_page)
+    return jax.jit(step, donate_argnums=(1, 2, 4, 5))
+
+
+def _build_decode_step(cfg, page_T, use_pallas, max_chunk, mesh, kv_shard,
+                       rep_shard, stop_token, trash_page):
+    """The raw (unjitted) multi-step decode body — shared between the plain
+    decode dispatch (make_paged_decode_step) and the fused chunked-prefill
+    + decode dispatch (make_fused_prefill_decode_step), so there is exactly
+    one source of truth for the decode arithmetic."""
     assert cfg.family in ("dense", "moe"), cfg.family
     assert max_chunk >= 1
 
@@ -207,7 +220,73 @@ def make_paged_decode_step(cfg: ModelConfig, page_T: int, use_pallas: bool,
             v_pools = jax.lax.with_sharding_constraint(v_pools, kv_shard)
         return out, k_pools, v_pools, seq_lens, tokens
 
-    return jax.jit(step, donate_argnums=(1, 2, 4, 5))
+    return step
+
+
+def make_fused_prefill_decode_step(cfg: ModelConfig, page_T: int,
+                                   use_pallas: bool, chunk: int,
+                                   max_chunk: int = 32, mesh=None,
+                                   kv_shard=None, rep_shard=None,
+                                   stop_token: int | None = None,
+                                   trash_page: int | None = None):
+    """One fused dispatch = one prefill chunk + ``n`` decode tokens
+    (DESIGN.md §9: chunked prefill co-scheduled with decode).
+
+    The returned function has signature
+
+        out, first, k_pools, v_pools, seq_lens, tokens = fused(
+            params, k_pools, v_pools, bt, seq_lens, tokens, active, n,
+            pf_pages, pf_chunk_pages, pf_toks, pf_pos, pf_last, kv_len=...)
+
+    and runs, in one jitted executable over the *donated* pools:
+
+      1. the prefill chunk — gather the prefilling slot's full key extent
+         from ``pf_pages`` (its block-table row, trash-padded to
+         ``ceil(kv_len / page_T)`` entries), run ``tfm.prefill_chunk`` on
+         the ``chunk`` tokens ``pf_toks`` at traced position ``pf_pos``,
+         scatter the fresh chunk K/V into ``pf_chunk_pages`` (the chunk's
+         own pages, trash-padded), and read the ``pf_last`` row's argmax
+         (``first`` — the request's first output token, meaningful on the
+         final chunk);
+      2. the unchanged multi-token decode ``fori_loop`` for every
+         decode-active slot (the prefilling slot is masked out of
+         ``active`` by the engine until its final chunk lands).
+
+    The two halves are independent by construction — the prefilling slot's
+    pages are disjoint from every decode write, and its extent gather reads
+    the pre-decode pool — so fusing them costs no ordering constraint; it
+    removes the monolithic prefill's full-dispatch decode stall.
+
+    ``kv_len`` (static) is the prompt's pow2 token bucket, the same compile
+    key the monolithic prefill buckets by — one fused executable per prompt
+    bucket, reused by every chunk index (``pf_pos``/``pf_last`` are
+    traced)."""
+    decode = _build_decode_step(cfg, page_T, use_pallas, max_chunk, mesh,
+                                kv_shard, rep_shard, stop_token, trash_page)
+
+    def fused(params, k_pools, v_pools, bt, seq_lens, tokens, active, n,
+              pf_pages, pf_chunk_pages, pf_toks, pf_pos, pf_last, kv_len):
+        L, _, T, Kh, hd = k_pools.shape
+        nb = pf_pages.shape[0]
+        # gather the extent BEFORE scattering the chunk: the current chunk
+        # attends its own unrounded K/V (spliced in at pf_pos inside
+        # gqa_prefill_chunk), not the pool-dtype round trip
+        ext_k = k_pools[:, pf_pages].reshape(L, 1, nb * T, Kh, hd)[:, :, :kv_len]
+        ext_v = v_pools[:, pf_pages].reshape(L, 1, nb * T, Kh, hd)[:, :, :kv_len]
+        logits, ks, vs = tfm.prefill_chunk(params, pf_toks, cfg, ext_k,
+                                           ext_v, pf_pos, pf_last,
+                                           gather_heads=True)
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        kp = ks[:, 0].reshape(L, chunk // T, T, Kh, hd)
+        vp = vs[:, 0].reshape(L, chunk // T, T, Kh, hd)
+        k_pools = k_pools.at[:, pf_chunk_pages].set(kp.astype(k_pools.dtype))
+        v_pools = v_pools.at[:, pf_chunk_pages].set(vp.astype(v_pools.dtype))
+        out, k_pools, v_pools, seq_lens, tokens = decode(
+            params, k_pools, v_pools, bt, seq_lens, tokens, active, n)
+        return out, first, k_pools, v_pools, seq_lens, tokens
+
+    return jax.jit(fused, donate_argnums=(1, 2, 4, 5),
+                   static_argnames=("kv_len",))
 
 
 def _scatter_prefill_fn(k_pools, v_pools, kp, vp, pages, shard=None):
@@ -278,7 +357,8 @@ class PagedServingEngine:
                  warmup: bool = False, mesh=None,
                  prefix_cache: bool = False, prefix_cache_pages: int = 0,
                  pool_dtype=jnp.bfloat16, stop_token: int | None = None,
-                 preemption: bool = False, predictor: str = "ewma"):
+                 preemption: bool = False, predictor: str = "ewma",
+                 prefill_chunk: int = 0, admit_every_dispatch: bool = True):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
@@ -288,6 +368,17 @@ class PagedServingEngine:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = use_pallas
         self.max_decode_chunk = max_decode_chunk
+        # --- chunked prefill co-scheduled with decode (DESIGN.md §9) ------
+        # prefill_chunk > 0: prompts prefill ``prefill_chunk`` tokens per
+        # dispatch inside the *fused* prefill+decode step instead of one
+        # monolithic dispatch, so running decodes never stall behind a long
+        # prompt.  0 (default) keeps the monolithic prefill.
+        # admit_every_dispatch: with work waiting under stop-token decode
+        # (where a slot's exit is invisible to the event horizon), shrink
+        # dispatches to per-token scheduling so a queued arrival never
+        # sits out the rest of a dispatch behind an already-exited slot.
+        self.prefill_chunk = normalize_prefill_chunk(prefill_chunk, page_T)
+        self.admit_every_dispatch = admit_every_dispatch
         # Pool payload dtype.  Reuse note (DESIGN.md §7): with a reduced
         # dtype, a prefix-hit tail prefill attends the *rounded* prefix K/V
         # where a cold full prefill attends full-precision activations, so
@@ -349,13 +440,21 @@ class PagedServingEngine:
         self.bt = np.full((B, P), self.trash_page, np.int32)
         self._out = [None] * B                    # per-slot output buffers
         self._out_n = np.zeros(B, np.int32)
+        # chunked-prefill slot state: the (single) in-flight prefill.  A
+        # prefilling slot owns its rid/pages/prompt like a decoding one —
+        # so preemption and release go through the same decref paths — but
+        # is masked out of the decode active set until its final chunk.
+        self._prefilling = np.zeros(B, bool)
+        self._pf: dict | None = None
+        # rid -> wall-clock of first admission (TTFT queue-wait split)
+        self.admit_wall: dict[int, float] = {}
 
         # --- device-resident mirrors (uploaded only when an event dirties
         # them; the decode dispatch itself keeps seq_lens/tokens on device) --
         self._bt_dev = self._put_rep(self.bt)
         self._lens_dev = self._put_rep(self.lens)
         self._tok_dev = self._put_rep(self.tokens)
-        self._act_dev = self._put_rep(self.rid >= 0)
+        self._act_dev = self._put_rep((self.rid >= 0) & ~self._prefilling)
         self._bt_dirty = False
         self._state_dirty = False
 
@@ -379,6 +478,7 @@ class PagedServingEngine:
         self.preemptions = 0
         self.resumes = 0
         self.recomputed_tokens = 0  # prefill tokens replayed by resumes
+        self.prefill_chunks_dispatched = 0  # fused prefill+decode dispatches
         # pass the mesh / pool sharding to the jitted paths only when the
         # pools actually shard; with replicated fallback pools everything
         # runs the plain (pallas-capable) kernels identically on every device
@@ -388,6 +488,14 @@ class PagedServingEngine:
             mesh=mesh if self._pool_sharded else None,
             kv_shard=self._kv_shard, rep_shard=self._rep_shard,
             stop_token=stop_token, trash_page=self.trash_page)
+        self._fused = None
+        if self.prefill_chunk:
+            self._fused = make_fused_prefill_decode_step(
+                cfg, page_T, use_pallas, self.prefill_chunk,
+                max_chunk=max_decode_chunk,
+                mesh=mesh if self._pool_sharded else None,
+                kv_shard=self._kv_shard, rep_shard=self._rep_shard,
+                stop_token=stop_token, trash_page=self.trash_page)
         # prefill K/V leave the model at the pool dtype: with an f32 pool
         # the cached prefix is the *unrounded* activation value, which is
         # what makes prefix-hit tail prefills bit-exact (DESIGN.md §7)
@@ -448,6 +556,29 @@ class PagedServingEngine:
         out.block_until_ready()
         T = self.page_T
         max_prompt_bucket = _pow2(self.max_pages_per_seq * T)
+        if self.prefill_chunk:
+            # chunked mode replaces the monolithic prefill family entirely:
+            # warm one fused executable per prompt bucket (its compile key).
+            # All inputs are inert — trash extent/chunk pages, inactive
+            # decode slots — so warming writes only the trash page.
+            C = self.prefill_chunk
+            tb = _pow2(T)
+            while tb <= max_prompt_bucket:
+                nb = -(-tb // T)
+                ext = np.full(nb, self.trash_page, np.int32)
+                cpages = np.full(C // T, self.trash_page, np.int32)
+                with self._mesh_ctx():
+                    (out, _, self.k_pools, self.v_pools, self._lens_dev,
+                     self._tok_dev) = self._fused(
+                        self.params, self.k_pools, self.v_pools,
+                        self._bt_dev, self._lens_dev, self._tok_dev,
+                        self._act_dev, np.int32(1), self._put_rep(ext),
+                        self._put_rep(cpages),
+                        self._put_rep(np.zeros((1, C), np.int32)),
+                        np.int32(0), np.int32(0), kv_len=tb)
+                out.block_until_ready()
+                tb *= 2
+            return
         tb = _pow2(T)
         while tb <= max_prompt_bucket:
             n_pages = -(-tb // T)
@@ -548,6 +679,12 @@ class PagedServingEngine:
         started: list[int] = []
         free = np.flatnonzero(self.rid < 0)
         for i in free:
+            if self._pf is not None:
+                # chunked mode admits one prefill at a time: the next
+                # request starts the dispatch after this one's final chunk
+                # lands (admission runs every step(), so nothing waits
+                # longer than the chunk cadence)
+                break
             # preempted requests resume first — they were admitted once and
             # already carry emitted tokens the caller is waiting on
             q = self._resume if self._resume else self.queue
@@ -579,7 +716,7 @@ class PagedServingEngine:
             if avail < need + reserve:
                 break  # admission control: wait for deaths/compaction
             q.popleft()
-            self._start(int(i), req)
+            self._start(int(i), req, from_resume=q is self._resume)
             started.append(int(i))
 
     def _preempt_for(self, deficit: int, *, keep=(),
@@ -632,7 +769,7 @@ class PagedServingEngine:
             self._preempt(int(cand[v[0]]))
         return max(avail() - start, 0)
 
-    def _start(self, i: int, req: Request) -> None:
+    def _start(self, i: int, req: Request, from_resume: bool = False) -> None:
         # A resume (req.out is not None) restarts a preempted sequence: the
         # effective prompt is the original prompt plus the already-consumed
         # output tokens, whose K/V is recomputed by the same (continuation)
@@ -692,6 +829,26 @@ class PagedServingEngine:
         self.bt[i, n_shared:n_pages] = pages_new
         self.npages[i] = n_pages
 
+        # admission bookkeeping shared by both prefill modes.  ``resumes``
+        # counts resume-queue restarts (not just emitted-token carriers):
+        # a chunked prefill can be preempted before its first token, and
+        # its restart is a resume too — which is what keeps the
+        # ``resumes == preemptions`` ledger exact at drain.
+        self.admit_wall.setdefault(req.rid, time.time())
+        if from_resume:
+            self.resumes += 1
+        if resume:
+            self.recomputed_tokens += plen
+        self._prefill_tokens_total += plen
+        if n_shared:
+            self._prefill_tokens_saved += n_shared * T
+
+        if self.prefill_chunk:
+            # chunked mode: park the slot in the *prefilling* state; step()
+            # feeds one chunk per fused dispatch until _pf_complete
+            self._start_chunked(i, req, prompt, plen, n_pages, n_shared, est)
+            return
+
         # dense prefill -> scatter K/V into the allocated pages.  Prompt and
         # cache lengths are bucketed to powers of two so distinct prompt
         # lengths reuse one compiled prefill per bucket; the true length is
@@ -716,7 +873,6 @@ class PagedServingEngine:
                     self.params, self.k_pools, self.v_pools,
                     self._put_rep(prefix_pages), jnp.asarray(toks)[None],
                     np.int32(tlen), max_len=max_len, kv_len=kv_len)
-            self._prefill_tokens_saved += n_shared * T
         else:
             tok_bucket, max_len = self._prefill_bucket(plen, n_pages)
             toks = np.zeros(tok_bucket, np.int32)
@@ -725,7 +881,6 @@ class PagedServingEngine:
                 first_tok, ks, vs = self._prefill(
                     self.params, jnp.asarray(toks)[None], np.int32(plen),
                     max_len=max_len)
-        self._prefill_tokens_total += plen
         L, _, _, Kh, hd = ks.shape
         nb = max_len // T
         kp = ks[:, 0].reshape(L, nb, T, Kh, hd)
@@ -755,8 +910,6 @@ class PagedServingEngine:
             self.to_gen[i] = req.max_new_tokens - req.out_n
             self._out[i] = req.out
             self._out_n[i] = req.out_n
-            self.resumes += 1
-            self.recomputed_tokens += plen
         else:
             self.tokens[i] = int(first_tok[0])
             self.to_gen[i] = req.max_new_tokens - 1
@@ -772,9 +925,83 @@ class PagedServingEngine:
             self._admit_done.append(req.rid)
             self._finish(i)
 
+    def _start_chunked(self, i: int, req: Request, prompt: np.ndarray,
+                       plen: int, n_pages: int, n_shared: int,
+                       est: float) -> None:
+        """Park slot ``i`` in the *prefilling* state (DESIGN.md §9): its
+        pages are allocated (and a cached prefix spliced) exactly like a
+        monolithic start, but instead of one dense prefill, ``step()``
+        feeds one ``prefill_chunk``-token chunk per fused dispatch until
+        the final chunk lands and :meth:`_pf_complete` graduates the slot
+        into decode.  The slot owns its rid/pages/prompt from the first
+        chunk — so preemption mid-prefill and the OOM unwind go through
+        the same decref paths as a decoding slot — but stays masked out of
+        the decode active set."""
+        T = self.page_T
+        self.rid[i] = req.rid
+        self._prompt[i] = req.prompt
+        self._out[i] = req.out
+        self._out_n[i] = req.out_n
+        self.tokens[i] = 0
+        self.to_gen[i] = req.max_new_tokens - req.out_n
+        # lens tracks prefill progress (chunk boundary = page boundary, so
+        # a cached prefix starts the clock at n_shared * T); the slot is
+        # decode-masked, so the device-side value is never consumed
+        self.lens[i] = n_shared * T
+        self._prefilling[i] = True
+        self._pf = dict(slot=i, prompt=prompt, plen=plen,
+                        pos=n_shared * T,
+                        # the full prompt's pow2 token bucket — the fused
+                        # dispatch's compile key AND the key extent every
+                        # chunk attends over, matching the monolithic
+                        # prefill's tiling exactly (bit-identity)
+                        kv_len=self._prefill_bucket(plen, n_pages)[0],
+                        est=est, resume=req.out is not None,
+                        max_new=req.max_new_tokens)
+        self._bt_dirty = self._state_dirty = True
+
+    def _pf_complete(self, first_tok: int) -> int | None:
+        """The final chunk landed: graduate the prefilling slot into the
+        decode active set.  Returns the request id if the prefill token
+        already completed the request (cap reached / stop token), else
+        None.  The prefix-cache insert is deferred to here — an in-flight
+        prefill's later pages hold garbage another request must not
+        splice."""
+        pf = self._pf
+        i = pf["slot"]
+        self._pf = None
+        self._prefilling[i] = False
+        self.lens[i] = pf["plen"]
+        if self.prefix_cache is not None and pf["plen"] // self.page_T:
+            self.prefix_cache.insert(
+                pf["prompt"], self.bt[i, :pf["plen"] // self.page_T].copy(),
+                pf["est"])
+        if pf["resume"]:
+            # the first output token was emitted before the preemption:
+            # feed the last emitted token back into decode instead
+            self.tokens[i] = int(self._out[i][self._out_n[i] - 1])
+        else:
+            self.tokens[i] = int(first_tok)
+            self.to_gen[i] = pf["max_new"] - 1
+            out = np.empty(pf["max_new"], np.int32)
+            out[0] = first_tok
+            self._out[i] = out
+            self._out_n[i] = 1
+        self._state_dirty = True
+        if self.to_gen[i] <= 0 or (not pf["resume"]
+                                   and self.stop_token is not None
+                                   and self.tokens[i] == self.stop_token):
+            rid = int(self.rid[i])
+            self._finish(i)
+            return rid
+        return None
+
     def _release_slot(self, i: int) -> None:
         """Free slot i's pages (one decref each — shared prefix pages
         survive for their other referencers) and reset its state."""
+        if self._pf is not None and self._pf["slot"] == i:
+            self._pf = None          # abandon the in-flight prefill
+        self._prefilling[i] = False
         self.pool.free_pages(self.slot_pages(i).astype(np.int64))
         self.bt[i, :] = self.trash_page
         self.rid[i] = -1
@@ -814,23 +1041,47 @@ class PagedServingEngine:
         if self._state_dirty:
             self._lens_dev = self._put_rep(self.lens)
             self._tok_dev = self._put_rep(self.tokens)
-            self._act_dev = self._put_rep(self.rid >= 0)
+            # a prefilling slot is NOT decode-active: the fused dispatch
+            # writes its chunk K/V while decode skips it until the final
+            # chunk graduates it (_pf_complete)
+            self._act_dev = self._put_rep((self.rid >= 0) & ~self._prefilling)
             self._state_dirty = False
 
     def _event_horizon(self, active: np.ndarray) -> int:
         """Tokens until the earliest host event: a slot crossing into an
-        unallocated page (computed from ``seq_len % page_T``) or finishing."""
-        room = self.npages * self.page_T - self.lens
-        until = np.minimum(room, self.to_gen)[active]
-        return int(max(min(int(until.min()), self.max_decode_chunk), 1))
+        unallocated page (computed from ``seq_len % page_T``) or finishing.
+
+        The horizon is *exact* without stop tokens: nothing can finish or
+        free pages before it, so a waiting arrival is admitted at the
+        earliest possible dispatch already.  With stop-token decode an
+        active slot can exit mid-dispatch invisibly — the device freezes
+        it but the host only learns at dispatch end, so a queued arrival
+        sits out the rest of the dispatch with a slot (and its pages)
+        effectively free.  ``admit_every_dispatch`` (default) closes that
+        window: with work waiting under stop-token decode, dispatches
+        shrink to per-token scheduling (n=1, the continuous-batching
+        iteration grain) so every exit is seen — and admission re-run —
+        at the next token.  The flag is the dial between admission latency
+        and the multi-token dispatch's host-overhead amortization."""
+        if active.any():
+            room = self.npages * self.page_T - self.lens
+            until = np.minimum(room, self.to_gen)[active]
+            n = min(int(until.min()), self.max_decode_chunk)
+        else:
+            n = 1
+        if (self.admit_every_dispatch and self.stop_token is not None
+                and (self.queue or self._resume)):
+            n = 1
+        return max(n, 1)
 
     def step(self) -> list[int]:
         """Admit, then decode up to ``max_decode_chunk`` tokens for every
         active slot in one device dispatch.  Returns finished request ids."""
         self._admit()
         done, self._admit_done = self._admit_done, []
-        active = self.rid >= 0
-        if not active.any():
+        active = (self.rid >= 0) & ~self._prefilling
+        pf = self._pf
+        if not active.any() and pf is None:
             return done
 
         # pages for the incoming tokens must exist before the dispatch writes
@@ -848,10 +1099,11 @@ class PagedServingEngine:
                 avail += self.prefix_cache.evictable()
             if avail < growing.size:
                 self._preempt_for(growing.size - avail, min_active=1)
-                active = self.rid >= 0
+                active = (self.rid >= 0) & ~self._prefilling
+                pf = self._pf  # the in-flight prefill may have been evicted
                 growing = np.flatnonzero(
                     active & (self.lens >= self.npages * self.page_T))
-                if not active.any():
+                if not active.any() and pf is None:
                     return done
         if growing.size:
             rem = np.array([self._predict_remaining(
@@ -867,10 +1119,47 @@ class PagedServingEngine:
 
         n = self._event_horizon(active)
         self._sync_device()
-        out, self.k_pools, self.v_pools, self._lens_dev, self._tok_dev = (
-            self._decode(self.params, self.k_pools, self.v_pools,
-                         self._bt_dev, self._lens_dev, self._tok_dev,
-                         self._act_dev, np.int32(n)))
+        if pf is not None:
+            # ---- fused dispatch: one prefill chunk + n decode tokens ----
+            C, T = self.prefill_chunk, self.page_T
+            pi, pos = pf["slot"], pf["pos"]
+            seg = pf["prompt"][pos:pos + C]
+            ptoks = np.zeros(C, np.int32)
+            ptoks[:len(seg)] = seg
+            is_last = pos + C >= pf["plen"]
+            last_idx = min(pf["plen"] - 1 - pos, C - 1) if is_last else 0
+            # full key extent = the slot's block-table row, trash-padded to
+            # the kv_len bucket (rows past the allocation are never read)
+            nb = -(-pf["kv_len"] // T)
+            ext = np.full(nb, self.trash_page, np.int32)
+            m = min(nb, self.max_pages_per_seq)
+            ext[:m] = self.bt[pi, :m]
+            # the chunk's own pages; a final chunk's tail past the
+            # allocation scatters into the trash page
+            cpages = np.full(C // T, self.trash_page, np.int32)
+            p0 = pos // T
+            for j in range(C // T):
+                if p0 + j < self.npages[pi]:
+                    cpages[j] = self.bt[pi, p0 + j]
+            with self._mesh_ctx():
+                (out, first, self.k_pools, self.v_pools, self._lens_dev,
+                 self._tok_dev) = self._fused(
+                    self.params, self.k_pools, self.v_pools, self._bt_dev,
+                    self._lens_dev, self._tok_dev, self._act_dev,
+                    np.int32(n), self._put_rep(ext), self._put_rep(cpages),
+                    self._put_rep(ptoks[None]), np.int32(pos),
+                    np.int32(last_idx), kv_len=pf["kv_len"])
+            pf["pos"] = pos + C
+            # host-only progress marker (the slot is decode-masked, so the
+            # stale device-side value is never consumed — no upload)
+            self.lens[pi] = min(pf["pos"], pf["plen"])
+            self.prefill_chunks_dispatched += 1
+        else:
+            is_last = False
+            out, self.k_pools, self.v_pools, self._lens_dev, self._tok_dev = (
+                self._decode(self.params, self.k_pools, self.v_pools,
+                             self._bt_dev, self._lens_dev, self._tok_dev,
+                             self._act_dev, np.int32(n)))
         toks = np.asarray(out)[:n]  # ONE host sync per dispatch, not per token
 
         # host bookkeeping: O(active slots) per dispatch.  With stop tokens
@@ -898,6 +1187,11 @@ class PagedServingEngine:
             if stopped[i] or self.to_gen[i] <= 0:
                 done.append(int(self.rid[i]))
                 self._finish(int(i))
+
+        if pf is not None and is_last:
+            fin = self._pf_complete(int(np.asarray(first)[0]))
+            if fin is not None:
+                done.append(fin)
         return done
 
     def run_to_completion(self, max_steps: int = 100_000) -> dict:
@@ -941,6 +1235,8 @@ class PagedServingEngine:
             "resumes": self.resumes,
             "recomputed_tokens": self.recomputed_tokens,
         }
+        if self.prefill_chunk:
+            m["prefill_chunks_dispatched"] = self.prefill_chunks_dispatched
         if self.prefix_cache is not None:
             total = self._prefill_tokens_total
             saved = self._prefill_tokens_saved

@@ -19,6 +19,13 @@ estimation) targets.  This module owns the two scheduler-side pieces
   :func:`repro.core.policies.key_preempt`, the MDC declining-cost shape
   applied to sequences (recompute cost vs. freed space-time), through the
   same ``_take_smallest`` top-k machinery segment cleaning uses.
+* **Chunked-prefill budget** — the per-dispatch prompt-token budget the
+  fused prefill+decode dispatch consumes (DESIGN.md §9).  The budget is the
+  scheduler's foreground/background dial: a small chunk keeps decode TPOT
+  smooth and admission latency low (Sarathi-style stall-free batching, the
+  slack-metering idea of arXiv:1807.09313 applied to prefill instead of
+  GC), a large chunk amortizes dispatch overhead toward the monolithic
+  prefill's throughput.
 """
 
 from __future__ import annotations
@@ -26,6 +33,25 @@ from __future__ import annotations
 import numpy as np
 
 from ..core import policies as P
+
+# default fused-dispatch prefill budget (tokens) when chunking is enabled
+# without an explicit size: one page at the engine's default page_T=8.
+# Single-page chunks pair best with per-token admission scheduling
+# (``admit_every_dispatch``): the prefill work amortizes the short decode
+# dispatch, and measured overload TTFT p99 is lowest at this grain
+DEFAULT_PREFILL_CHUNK = 8
+
+
+def normalize_prefill_chunk(chunk: int, page_T: int) -> int:
+    """Round the chunked-prefill budget up to a whole number of pages
+    (``0`` keeps monolithic prefill).  Chunk boundaries must be page
+    boundaries: each chunk's K/V scatters into whole pool pages, and a
+    cached-prefix hit starts the first chunk at a full-page offset, so a
+    page-multiple budget makes every chunk's scatter a fixed-size
+    whole-page write (one executable per prompt bucket)."""
+    if chunk <= 0:
+        return 0
+    return -(-int(chunk) // page_T) * page_T
 
 
 class EwmaLengthPredictor:

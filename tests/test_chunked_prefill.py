@@ -1,0 +1,330 @@
+"""Chunked prefill co-scheduled with decode (DESIGN.md §9).
+
+The contracts pinned here:
+
+* chunked prefill is *bit-identical* to monolithic at pool_dtype=float32:
+  chunks tile the key extent exactly like the monolithic prefill's pow2
+  bucket, so splitting a prompt across fused dispatches changes scheduling,
+  never arithmetic — same tokens for any chunk size (ref and
+  pallas-interpret paths), and on a serialized stream the same Wamp /
+  compaction counts too;
+* a prefix-cache hit starts the first chunk at the cached-page boundary
+  (mid-chunk-grid) and still reproduces the cold tokens;
+* an in-flight prefill is preemptable: its pages release through the same
+  decref path as a decoding slot, and the restarted request completes
+  bit-identically;
+* an admission-time pool OOM after the prefix incref gives the shared
+  references back (no leaked refcounts) in chunked mode exactly like
+  monolithic;
+* ``admit_every_dispatch`` shrinks dispatches to per-token scheduling
+  while work waits under stop-token decode (and stays out of the way
+  otherwise);
+* a 2-device tensor-parallel chunked engine matches the 1-device engine
+  token-for-token and metric-for-metric (CI multidevice job).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.models import transformer as tfm
+from repro.serving import PagedServingEngine
+from repro.serving.scheduler import normalize_prefill_chunk
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    return Model(get_config("qwen3-1.7b").smoke())
+
+
+@pytest.fixture(scope="module")
+def smoke_params(smoke_model):
+    return smoke_model.init(jax.random.PRNGKey(0))
+
+
+def _engine(model, params, *, prefill_chunk, n_slabs=8, use_pallas=False,
+            mesh=None, max_batch=3, **kw):
+    return PagedServingEngine(
+        model, n_slabs=n_slabs, blocks_per_slab=4, page_T=8,
+        max_batch=max_batch, max_seq=96, policy="mdc", params=params,
+        compact_trigger=1, compact_batch=2, use_pallas=use_pallas,
+        mesh=mesh, pool_dtype=jnp.float32, prefill_chunk=prefill_chunk, **kw)
+
+
+def _mixed_reqs(vocab, n=8, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, vocab, size=int(rng.integers(4, 60))),
+             int(rng.integers(4, 25))) for _ in range(n)]
+
+
+def _drain(eng):
+    for _ in range(10_000):
+        eng.step()
+        if not eng.has_work():
+            return
+    raise AssertionError("engine did not drain")
+
+
+def _drain_prefill(eng):
+    """Step until no prefill is in flight (but work may remain)."""
+    for _ in range(1_000):
+        if eng._pf is None:
+            return
+        eng.step()
+    raise AssertionError("prefill did not complete")
+
+
+def test_normalize_prefill_chunk_rounds_to_pages():
+    assert normalize_prefill_chunk(0, 8) == 0
+    assert normalize_prefill_chunk(-1, 8) == 0
+    assert normalize_prefill_chunk(1, 8) == 8
+    assert normalize_prefill_chunk(10, 8) == 16
+    assert normalize_prefill_chunk(16, 8) == 16
+    assert normalize_prefill_chunk(16, 6) == 18
+
+
+# ------------------------------------------------ chunked == monolithic
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_chunked_matches_oracle(smoke_model, smoke_params, use_pallas):
+    """One long prompt through the fused chunked path reproduces the dense
+    greedy_decode reference exactly."""
+    prompt = (np.arange(1, 45) * 11) % smoke_model.cfg.vocab_size
+    want = tfm.greedy_decode(smoke_params, prompt, smoke_model.cfg, 12)
+    eng = _engine(smoke_model, smoke_params, prefill_chunk=16, n_slabs=10,
+                  use_pallas=use_pallas)
+    rid = eng.submit(prompt, 12)
+    _drain(eng)
+    assert eng.finished[rid] == want
+    assert eng.metrics()["prefill_chunks_dispatched"] >= 3  # 44 toks, C=16
+
+
+def test_chunked_matches_monolithic_serialized(smoke_model, smoke_params):
+    """Serialized stream (one request at a time): every chunk size —
+    including monolithic — produces the same tokens AND the same pool
+    metrics (Wamp, compactions, blocks written/moved), because with no
+    concurrent interleaving the pool sees the identical event sequence."""
+    reqs = _mixed_reqs(smoke_model.cfg.vocab_size, n=6)
+
+    def run(chunk):
+        eng = _engine(smoke_model, smoke_params, prefill_chunk=chunk,
+                      n_slabs=6, max_batch=1)
+        for p, n in reqs:
+            eng.submit(p, n)
+            _drain(eng)
+        eng.pool.check_invariants()
+        m = eng.metrics()
+        m.pop("prefill_chunks_dispatched", None)
+        return eng.finished, m
+
+    fin0, m0 = run(0)
+    for chunk in (8, 16, 32):
+        fin, m = run(chunk)
+        assert fin == fin0, f"tokens diverged at C={chunk}"
+        assert m == m0, f"pool metrics diverged at C={chunk}"
+
+
+def test_chunked_matches_monolithic_concurrent(smoke_model, smoke_params):
+    """Concurrent closed loop under real compaction pressure: decoded
+    tokens stay bit-identical for every chunk size (each token depends
+    only on its own prompt + params, not on pool layout)."""
+    reqs = _mixed_reqs(smoke_model.cfg.vocab_size, n=10)
+
+    def run(chunk):
+        eng = _engine(smoke_model, smoke_params, prefill_chunk=chunk,
+                      n_slabs=6)
+        for p, n in reqs:
+            eng.submit(p, n)
+        _drain(eng)
+        eng.pool.check_invariants()
+        return eng.finished, eng.metrics()
+
+    fin0, _ = run(0)
+    for chunk in (8, 16, 32):
+        fin, m = run(chunk)
+        assert fin == fin0, f"tokens diverged at C={chunk}"
+        assert m["free_blocks"] == 6 * 4  # everything released at drain
+    assert m["compactions"] >= 1, \
+        "scenario must exercise compaction under chunked prefill"
+
+
+# --------------------------------------------------- prefix-cache interplay
+
+def test_prefix_hit_starts_chunk_mid_grid(smoke_model, smoke_params):
+    """A cached 5-page prefix (40 tokens) starts the first chunk at
+    pos0=40 — not a multiple of C=16, i.e. the continuation boundary falls
+    mid-chunk-grid — and the hit still reproduces the cold-engine tokens
+    while saving prefill work."""
+    vocab = smoke_model.cfg.vocab_size
+    sysp = np.random.default_rng(42).integers(1, vocab, size=40)  # 5 pages
+    rng = np.random.default_rng(7)
+    reqs = [(np.concatenate([sysp, rng.integers(1, vocab,
+                                                size=int(rng.integers(5, 14)))]),
+             int(rng.integers(6, 12))) for _ in range(4)]
+
+    def run(cache):
+        eng = _engine(smoke_model, smoke_params, prefill_chunk=16,
+                      n_slabs=12, prefix_cache=cache)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        _drain(eng)
+        eng.pool.check_invariants()
+        if cache:
+            eng.prefix_cache.check_invariants()
+        return [eng.finished[r] for r in rids], eng
+
+    cold, _ = run(False)
+    hot, eng = run(True)
+    assert hot == cold, "prefix hits must not change chunked-prefill tokens"
+    assert eng._prefill_tokens_saved > 0, "scenario must actually hit"
+
+
+# ----------------------------------------------- preempting an in-flight pf
+
+def test_preempt_in_flight_prefill_resumes_bit_identical(smoke_model,
+                                                         smoke_params):
+    """Preempt the prefilling slot mid-prefill (before its first token):
+    the in-flight state is abandoned, every page decrefs through the
+    normal release path, and the restarted request — a *fresh* start, it
+    never emitted — finishes with the uninterrupted tokens."""
+    prompt = (np.arange(2, 60) * 7) % smoke_model.cfg.vocab_size
+    want = tfm.greedy_decode(smoke_params, prompt, smoke_model.cfg, 10)
+    eng = _engine(smoke_model, smoke_params, prefill_chunk=16, n_slabs=10,
+                  preemption=True)
+    rid = eng.submit(prompt, 10)
+    eng.step()                       # first chunk dispatched
+    assert eng._pf is not None and eng._pf["pos"] < eng._pf["plen"], \
+        "prefill must still be in flight after one step"
+    i = eng._pf["slot"]
+    assert eng._out[i] is None       # no token emitted yet
+    eng._preempt(i)
+    assert eng._pf is None and not eng._prefilling.any()
+    eng.pool.check_invariants()
+    assert eng.has_work()            # the request is on the resume queue
+    _drain(eng)
+    eng.pool.check_invariants()
+    assert eng.finished[rid] == want
+    assert eng.preemptions == 1 and eng.resumes == 1
+    assert eng.metrics()["free_blocks"] == eng.pool.n_slabs * eng.pool.S
+
+
+def test_admission_oom_returns_prefix_refs(smoke_model, smoke_params):
+    """If the tail alloc OOMs *after* the prefix incref, the chunked start
+    unwinds exactly like the monolithic one: shared references are given
+    back (no refcount leak) and the engine keeps serving."""
+    vocab = smoke_model.cfg.vocab_size
+    sysp = np.random.default_rng(9).integers(1, vocab, size=24)
+    eng = _engine(smoke_model, smoke_params, prefill_chunk=16, n_slabs=12,
+                  prefix_cache=True)
+    rid0 = eng.submit(np.concatenate([sysp, [3, 5]]), 4)  # seeds the tree
+    _drain(eng)
+    assert rid0 in eng.finished
+    ref_before = eng.pool.block_ref.copy()
+
+    orig = eng.pool.alloc_blocks
+
+    def boom(*a, **k):
+        raise RuntimeError("KV pool out of slabs (forced)")
+
+    eng.pool.alloc_blocks = boom
+    eng.submit(np.concatenate([sysp, [7, 11]]), 4)
+    with pytest.raises(RuntimeError, match="forced"):
+        eng.step()
+    eng.pool.alloc_blocks = orig
+    np.testing.assert_array_equal(eng.pool.block_ref, ref_before)
+    assert not (eng.rid >= 0).any() and eng._pf is None
+    eng.pool.check_invariants()
+    # the engine still serves fresh work after the failed admission
+    rid2 = eng.submit(np.concatenate([sysp, [13, 17]]), 4)
+    _drain(eng)
+    assert rid2 in eng.finished
+
+
+# ------------------------------------------------ event-horizon clamping
+
+def test_event_horizon_shrinks_while_work_waits_under_stop(smoke_model,
+                                                           smoke_params):
+    """Stop-token decode makes mid-dispatch exits invisible to the event
+    horizon; with a request waiting, admit_every_dispatch shrinks the
+    dispatch to per-token scheduling (n=1) so an exit frees its slot at
+    the next token.  Without stop tokens the horizon is exact and the
+    clamp must stay out of the way; with the flag off, full
+    horizon-length dispatches return."""
+    vocab = smoke_model.cfg.vocab_size
+    eng = _engine(smoke_model, smoke_params, prefill_chunk=0, n_slabs=4,
+                  max_batch=2, stop_token=70)
+    eng.submit(np.arange(1, 9) % vocab, 40)
+    eng.step()                               # slot 0 decoding
+    # a second arrival the 4-slab pool cannot admit yet: queued
+    eng.submit((np.arange(1, 60) * 3) % vocab, 30)
+    eng._admit()
+    assert eng.queue and eng._pf is None
+    # give the slot mid-page room so the unclamped horizon is > 1 (the
+    # horizon is a pure host function of lens/npages/to_gen — no dispatch
+    # follows, so mutating the host mirror is safe)
+    i = int(np.flatnonzero(eng.rid >= 0)[0])
+    eng.lens[i] = int(eng.npages[i]) * eng.page_T - 5
+    active = (eng.rid >= 0) & ~eng._prefilling
+    assert eng._event_horizon(active) == 1   # clamped: exit must be seen
+    eng.admit_every_dispatch = False
+    assert eng._event_horizon(active) == 5   # full horizon restored
+    eng.admit_every_dispatch = True
+    eng.queue.clear()
+    assert eng._event_horizon(active) == 5   # nothing waiting -> no clamp
+
+    # without stop tokens the horizon already predicts every event
+    # (finishes/page crossings), so the clamp must not fire
+    eng2 = _engine(smoke_model, smoke_params, prefill_chunk=16, n_slabs=4,
+                   max_batch=2)
+    eng2.submit(np.arange(1, 9) % vocab, 40)
+    eng2.step()
+    _drain_prefill(eng2)
+    eng2.submit((np.arange(1, 60) * 3) % vocab, 30)
+    eng2._admit()
+    assert eng2.queue and eng2._pf is None   # pool-blocked, not admitted
+    j = int(np.flatnonzero(eng2.rid >= 0)[0])
+    eng2.lens[j] = int(eng2.npages[j]) * eng2.page_T - 6
+    active2 = (eng2.rid >= 0) & ~eng2._prefilling
+    assert eng2._event_horizon(active2) == 6  # exact horizon, unclamped
+
+
+# --------------------------------------------------------------- mesh = 2
+
+NDEV = len(jax.devices())
+needs2 = pytest.mark.skipif(
+    NDEV < 2, reason="needs 2 (virtual) devices: run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=2 "
+    "(CI multidevice job)")
+
+
+@needs2
+def test_chunked_prefill_bit_identical_under_mesh2():
+    """The fused prefill+decode dispatch is mesh-oblivious like every
+    other pool plan: a 2-way tensor-parallel chunked engine serves the
+    identical tokens and (shard-invariant) metrics as the 1-device
+    chunked engine.  Uses the TP smoke model so the pools actually
+    shard."""
+    from repro.launch.mesh import make_serving_mesh
+    model = Model(get_config("qwen3-1.7b").tp_smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _mixed_reqs(model.cfg.vocab_size, n=6)
+
+    def run(mesh):
+        eng = _engine(model, params, prefill_chunk=16, n_slabs=8, mesh=mesh,
+                      preemption=True)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        _drain(eng)
+        eng.pool.check_invariants()
+        return eng, rids
+
+    e1, r1 = run(None)
+    e2, r2 = run(make_serving_mesh(2))
+    assert e1.metrics()["prefill_chunks_dispatched"] >= 1
+    assert [e2.finished[b] for b in r2] == [e1.finished[a] for a in r1]
+    assert e2.metrics() == e1.metrics()
+    spec = tuple(e2.k_pools.sharding.spec)
+    assert "model" in spec, "pools must actually shard"
