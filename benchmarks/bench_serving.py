@@ -282,6 +282,151 @@ def chunked_prefill_rows(quick: bool = True) -> list[dict]:
     return [mono_row, chunk_row]
 
 
+def crash_recovery_rows(quick: bool = True) -> list[dict]:
+    """Crash-safe serving scenario (ISSUE 7): the same request stream runs
+
+    1. journal-off (the reference tokens + throughput baseline),
+    2. journal-on, uninterrupted — the steady-state journal overhead row
+       ("mdc (e2e journal)"; tok/s must stay within a generous same-process
+       margin of the reference: the journal is a few KB of buffered appends,
+       not an fsync-per-token path),
+    3. journal-on with SIGKILL-equivalent kills at sampled dispatch
+       boundaries: the engine object is *abandoned* mid-session (no close,
+       no final flush beyond what ``append`` already did — exactly the disk
+       state a kill leaves) and warm-restarted via ``recover_engine``;
+       the drained outputs are asserted bit-identical to the reference
+       (pool_dtype=float32), and the row reports kills, records/tokens
+       replayed and recovery wall-time percentiles,
+    4. open-loop overload with probabilistic transient faults injected into
+       dispatch/prefill/compaction/journal ops: every request must still
+       complete (retry + unwind + resume absorb the faults).
+    """
+    import shutil
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.distributed.fault import FailureInjector
+    from repro.launch.serve import serve_run
+    from repro.serving import PagedServingEngine, recover_engine
+
+    model = Model(get_config("qwen3-1.7b").smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    n_req = 10 if quick else 24
+    rng = np.random.default_rng(13)
+    reqs = [(rng.integers(1, model.cfg.vocab_size,
+                          size=int(rng.integers(4, 40))).astype(np.int32),
+             int(rng.integers(4, 25))) for _ in range(n_req)]
+    kw = dict(n_slabs=9, blocks_per_slab=4, page_T=8, max_batch=4,
+              max_seq=256, policy="mdc", params=params, compact_trigger=2,
+              compact_batch=3, pool_dtype=jnp.float32, stop_token=328,
+              preemption=True)
+    jroot = tempfile.mkdtemp(prefix="bench_crash_")
+    rows = []
+    try:
+        def closed_loop(eng):
+            t0 = time.time()
+            rids = [eng.submit(p, n) for p, n in reqs]
+            while eng.has_work():
+                eng.step()
+            dt = time.time() - t0
+            return rids, dt
+
+        # 1. reference: journal off
+        eng = PagedServingEngine(model, warmup=True, **kw)
+        rids, dt_ref = closed_loop(eng)
+        ref = [eng.finished[r] for r in rids]
+
+        # 2. journal on, uninterrupted: steady-state overhead
+        eng = PagedServingEngine(model, warmup=True,
+                                 journal_dir=f"{jroot}/steady",
+                                 snapshot_every=16, **kw)
+        rids, dt_j = closed_loop(eng)
+        assert [eng.finished[r] for r in rids] == ref, \
+            "journaling changed decoded tokens"
+        eng.audit()
+        m = eng.metrics()
+        overhead = dt_j / dt_ref - 1.0
+        toks = sum(len(v) for v in eng.finished.values())
+        rows.append(dict(policy="mdc (e2e journal)",
+                         blocks_written=m["blocks_written"],
+                         blocks_moved=m["blocks_moved"],
+                         wamp=round(m["wamp"], 3),
+                         mean_E=round(m["mean_E_compacted"], 3),
+                         compactions=m["compactions"],
+                         tok_per_s=round(toks / dt_j, 1),
+                         journal_records=m["journal_records"],
+                         journal_bytes=m["journal_bytes"],
+                         journal_overhead_pct=round(overhead * 100, 1)))
+        # same process, identical adjacent work: a generous margin that
+        # still catches pathological cost (e.g. an accidental fsync per
+        # record), not wall-clock noise
+        assert overhead < 0.25, \
+            f"journal overhead {overhead:.1%} — journaling is too expensive"
+
+        # 3. kill/recover at sampled dispatch boundaries, bit-identity
+        jd = f"{jroot}/crash"
+        rkw = dict(snapshot_every=8, audit_every=4, **kw)
+        eng = PagedServingEngine(model, warmup=True, journal_dir=jd, **rkw)
+        for p, n in reqs:
+            eng.submit(p, n)
+        max_kills = 3 if quick else 6
+        krng = np.random.default_rng(17)
+        until_kill = int(krng.integers(3, 9))
+        kills, recov_ms, rec_replayed, tok_replayed = 0, [], 0, 0
+        while eng.has_work():
+            eng.step()
+            until_kill -= 1
+            if until_kill == 0 and kills < max_kills and eng.has_work():
+                eng = None  # SIGKILL-equivalent: abandon, never close
+                eng, rep = recover_engine(model, jd, **rkw)
+                kills += 1
+                recov_ms.append(rep["recovery_wall_s"] * 1e3)
+                rec_replayed += rep["records_replayed"]
+                tok_replayed += rep["tokens_replayed"]
+                until_kill = int(krng.integers(3, 9))
+        eng.audit()
+        got = [eng.finished[r] for r in rids]
+        assert got == ref, "post-recovery tokens differ from reference"
+        assert kills == max_kills, (kills, max_kills)
+        rows.append(dict(policy="mdc (crash_recovery)",
+                         kills=kills, records_replayed=rec_replayed,
+                         tokens_replayed=tok_replayed,
+                         recovery_ms_p50=round(float(
+                             np.percentile(recov_ms, 50)), 1),
+                         recovery_ms_max=round(max(recov_ms), 1),
+                         preemptions=eng.preemptions, resumes=eng.resumes,
+                         bit_identical=True))
+
+        # 4. overload + probabilistic transient faults: all must complete
+        inj = FailureInjector(transient_prob={"dispatch": 0.02,
+                                              "prefill": 0.02,
+                                              "compaction": 0.05,
+                                              "journal": 0.01}, seed=3)
+        e = serve_run(policy="mdc", requests=n_req, params=params,
+                      model=model, verbose=False, seed=7, n_slabs=8,
+                      blocks_per_slab=4, max_batch=4, stop_token=328,
+                      preemption=True, arrival_rate=200.0, prefill_chunk=8,
+                      journal_dir=f"{jroot}/overload", snapshot_every=16,
+                      injector=inj)
+        # _open_loop returns only once every submitted request drained
+        assert e["tokens"] > 0 and e["requests"] == n_req
+        rows.append(dict(policy="mdc (overload, chaos faults)",
+                         blocks_written=e["blocks_written"],
+                         blocks_moved=e["blocks_moved"],
+                         wamp=round(e["wamp"], 3),
+                         compactions=e["compactions"],
+                         tok_per_s=round(e["tok_per_s"], 1),
+                         ttft_p99_ms=e["ttft_p99_ms"],
+                         fault_retries=e["fault_retries"],
+                         fault_unwinds=e["fault_unwinds"],
+                         preemptions=e["preemptions"],
+                         resumes=e["resumes"]))
+    finally:
+        shutil.rmtree(jroot, ignore_errors=True)
+    return rows
+
+
 def _e2e_row(label: str, e2e: dict, **extra) -> dict:
     return {"policy": label, "blocks_written": e2e["blocks_written"],
             "blocks_moved": e2e["blocks_moved"],
@@ -316,6 +461,9 @@ def run(quick: bool = True, mesh_devices: int = 0) -> list[dict]:
     # chunked vs monolithic prefill, closed loop: token bit-identity
     # asserted inside (chunking changes scheduling, never arithmetic)
     rows.extend(chunked_prefill_rows(quick))
+    # crash-safe serving: journal overhead, kill/recover bit-identity,
+    # overload under probabilistic fault injection (asserted inside)
+    rows.extend(crash_recovery_rows(quick))
     if mesh_devices:
         # tensor-parallel engine over an N-device "model" mesh: same pool
         # plan (Wamp/compactions shard-invariant), per-device tok/s recorded.
@@ -421,6 +569,53 @@ def _check_gate(rows: list[dict], baseline: list[dict]) -> None:
             f"chunked-prefill admission latency win eroded")
 
 
+def _check_chaos(rows: list[dict], baseline: list[dict]) -> None:
+    """Chaos-lane gate: recovery wall time stays under a committed bound.
+    Seeds (prints + returns) when no baseline is committed; the 3x ceiling
+    is deliberately generous — recovery is host-side state reconstruction,
+    so the gate targets algorithmic regressions (e.g. unbounded replay
+    because snapshots stopped truncating), not scheduler jitter."""
+    cur = _baseline_row(rows, "mdc (crash_recovery)")
+    if cur is None or not cur.get("recovery_ms_max"):
+        raise SystemExit("[chaos] crash_recovery row missing from this run — "
+                         "the chaos scenario itself is broken")
+    base = _baseline_row(baseline, "mdc (crash_recovery)")
+    if base is None or not base.get("recovery_ms_max"):
+        print("[chaos] no committed recovery-time baseline — seeded it from "
+              "this run (commit experiments/bench/bench_serving_chaos.json "
+              "to arm the gate)")
+        return
+    got, b = cur["recovery_ms_max"], base["recovery_ms_max"]
+    ceiling = 3.0 * b
+    print(f"[chaos] recovery max {got:.0f}ms vs committed baseline "
+          f"{b:.0f}ms (ceiling {ceiling:.0f}ms), "
+          f"{cur['records_replayed']} records replayed over {cur['kills']} "
+          f"kills")
+    if got > ceiling:
+        raise SystemExit(
+            f"crash-recovery regression: max recovery {got:.0f}ms exceeds "
+            f"the ceiling {ceiling:.0f}ms (= 3 x committed baseline "
+            f"{b:.0f}ms) — replay is no longer bounded by the snapshot "
+            f"cadence, or recovery re-does device work it should defer")
+
+
+def chaos_main(quick: bool = True) -> None:
+    """The CI chaos lane: only the crash/fault scenario, gated against its
+    own committed baseline json (separate from bench_serving.json so the
+    fast lane's seed-if-missing logic is unaffected)."""
+    path = OUT_DIR / "bench_serving_chaos.json"
+    baseline = (json.loads(path.read_text()).get("rows", [])
+                if path.exists() else [])
+    rows = crash_recovery_rows(quick)
+    print_table("Chaos lane — crash recovery & fault injection", rows,
+                ["policy", "tok_per_s", "wamp", "kills", "records_replayed",
+                 "tokens_replayed", "recovery_ms_p50", "recovery_ms_max",
+                 "journal_records", "journal_overhead_pct", "fault_retries",
+                 "fault_unwinds", "preemptions", "bit_identical"])
+    save_json("bench_serving_chaos", rows, {"quick": quick})
+    _check_chaos(rows, baseline)
+
+
 def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
     """Render tok/s + Wamp deltas vs the committed baseline into the CI job
     summary ($GITHUB_STEP_SUMMARY) so regressions are visible without
@@ -483,7 +678,15 @@ def cli() -> None:
                          "devices and record per-device tok/s (on CPU "
                          "export XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N first)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the crash-recovery / fault-injection "
+                         "scenario and gate recovery time against the "
+                         "committed bench_serving_chaos.json (the CI chaos "
+                         "lane)")
     args = ap.parse_args()
+    if args.chaos:
+        chaos_main(quick=not args.full)
+        return
     main(quick=not args.full, check=args.check, mesh=args.mesh)
 
 

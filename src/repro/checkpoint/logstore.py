@@ -171,6 +171,7 @@ class LogStructuredCheckpointStore:
             sid = int(sid_s)
             self.core.restore_segment(sid, **d)
             self.segments[sid] = _SegView(self.core, sid, self._seg_path(sid))
+            self._truncate_torn_tail(self.segments[sid])
         self.core.next_sid = max(self.core.next_sid, state["next_sid"])
         for key, vs in state["versions"].items():
             self.versions[key] = [
@@ -181,6 +182,30 @@ class LogStructuredCheckpointStore:
 
     def _seg_path(self, sid: int) -> pathlib.Path:
         return self.root / "segments" / f"seg_{sid:06d}.bin"
+
+    @staticmethod
+    def _truncate_torn_tail(seg: _SegView) -> None:
+        """Drop bytes appended after the last committed store state.
+
+        store_state.json is written atomically *after* segment appends, so a
+        crash mid-save can leave a segment file longer than its recorded
+        ``written`` — those tail bytes are referenced by no chunk version and
+        are safely truncated.  A *shorter* file means referenced data is
+        gone: that is real corruption, refuse to open."""
+        if not seg.path.exists():
+            if seg.written == 0:
+                return
+            raise RuntimeError(
+                f"checkpoint segment {seg.path.name} missing "
+                f"({seg.written} bytes recorded)")
+        size = seg.path.stat().st_size
+        if size > seg.written:
+            with seg.path.open("r+b") as f:
+                f.truncate(seg.written)
+        elif size < seg.written:
+            raise RuntimeError(
+                f"checkpoint segment {seg.path.name} truncated below "
+                f"committed state ({size} < {seg.written} bytes)")
 
     # -------------------------------------------------------------- segments
     def _open_segment(self) -> _SegView:

@@ -63,28 +63,44 @@ class CheckpointManager:
         self.keep_last = keep_last
         self.async_save = async_save
         self._pending: threading.Thread | None = None
+        self._error: BaseException | None = None
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, block: bool = False) -> None:
-        """Snapshot to host, then write (async by default)."""
+        """Snapshot to host, then write (async by default).
+
+        A failure in the background write is captured and re-raised by the
+        next ``save()``/``wait()`` — a silently-lost checkpoint would
+        otherwise surface only at restore time, long after the data is gone.
+        """
         self.wait()  # at most one in-flight save; ordering preserved
         flat = flatten_tree(tree)  # device->host sync happens here
 
         def _write():
-            with self._lock:
-                self.store.save(step, flat, keep_last=self.keep_last)
+            try:
+                with self._lock:
+                    self.store.save(step, flat, keep_last=self.keep_last)
+            except BaseException as e:  # surfaced on next wait()/save()
+                self._error = e
 
         if self.async_save and not block:
             self._pending = threading.Thread(target=_write, daemon=True)
             self._pending.start()
         else:
             _write()
+            self._raise_pending_error()
 
     def wait(self) -> None:
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        self._raise_pending_error()
+
+    def _raise_pending_error(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("background checkpoint save failed") from err
 
     # --------------------------------------------------------------- restore
     def latest_step(self):

@@ -33,6 +33,11 @@ policy twins stay the single source of priority keys.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import struct
+import zlib
+from pathlib import Path
 
 import numpy as np
 
@@ -615,3 +620,185 @@ class ByteLog(LogStructureBase):
         self.seg_up2[sid] = up2
         self.seg_up2sum[sid] = up2_sum
         self.seg_seal_time[sid] = float(sid)
+
+
+class JournalLog:
+    """Durable append-only record journal, accounted by a :class:`ByteLog`.
+
+    The serving engine writes one small record per state transition
+    (admission, emitted tokens, page alloc/decref, compaction remap,
+    preempt/resume, snapshot markers); recovery is snapshot + replay of the
+    surviving records (DESIGN.md §10).  On-disk framing per record::
+
+        [u32 length][u32 crc32(payload)][u64 seq][payload bytes]
+
+    * ``seq`` is globally monotone and survives reopen, so replay order and
+      snapshot cut-points are well defined even after segments are reclaimed.
+    * On open, each segment file is scanned front-to-back; the first frame
+      whose length overruns the file or whose checksum mismatches marks a
+      torn tail — the file is truncated there (a crash mid-append loses at
+      most the record being written, never a committed one).
+    * ``compact(before_seq)`` kills every record older than a snapshot
+      marker; sealed segment files whose records are all dead are deleted.
+      Journal truncation is thus ordinary log-structured reclamation with
+      zero relocation: cleaned segments are fully empty (E = 1), so the
+      journal contributes nothing to write amplification.
+
+    Payloads are opaque bytes at this layer; ``append_record`` /
+    ``iter_records`` add the JSON envelope the engine uses.
+    """
+
+    _HDR = struct.Struct("<IIQ")
+
+    def __init__(self, root: str | os.PathLike, *,
+                 seg_bytes: int = 256 * 1024, fsync: bool = False):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.seg_bytes = int(seg_bytes)
+        self.fsync = bool(fsync)
+        self.core = ByteLog()
+        # live record index: seq -> (sid, byte offset, framed size)
+        self._index: dict[int, tuple[int, int, int]] = {}
+        self.next_seq = 0
+        self.torn_bytes = 0          # bytes dropped by torn-tail truncation
+        self._cur_sid: int | None = None
+        self._fh = None
+        self._open_scan()
+
+    # -- paths ----------------------------------------------------------------
+    def _seg_path(self, sid: int) -> Path:
+        return self.root / f"journal_{sid:08d}.log"
+
+    def _scan_file(self, path: Path):
+        """Parse one segment file; returns ([(seq, off, size)], valid_prefix)."""
+        data = path.read_bytes()
+        off, recs = 0, []
+        while off + self._HDR.size <= len(data):
+            ln, crc, seq = self._HDR.unpack_from(data, off)
+            end = off + self._HDR.size + ln
+            if end > len(data):
+                break                      # torn: length overruns the file
+            if zlib.crc32(data[off + self._HDR.size:end]) != crc:
+                break                      # torn: checksum mismatch
+            recs.append((seq, off, end - off))
+            off = end
+        return recs, off
+
+    def _open_scan(self) -> None:
+        sids = sorted(int(p.stem.split("_")[1])
+                      for p in self.root.glob("journal_*.log"))
+        last = sids[-1] if sids else None
+        for sid in sids:
+            path = self._seg_path(sid)
+            recs, valid = self._scan_file(path)
+            size = path.stat().st_size
+            if valid < size:               # torn tail: truncate to last good
+                with open(path, "r+b") as f:
+                    f.truncate(valid)
+                self.torn_bytes += size - valid
+            for seq, off, rsize in recs:
+                self._index[seq] = (sid, off, rsize)
+                self.next_seq = max(self.next_seq, seq + 1)
+            # all surviving records are presumed live until the owner calls
+            # compact() with the last snapshot's cut-point
+            self.core.restore_segment(
+                sid, written=valid, live_bytes=sum(r[2] for r in recs),
+                live_chunks=len(recs), up2=0.0, up2_sum=0.0,
+                sealed=sid != last)
+        if last is not None:
+            self._cur_sid = last
+            self._fh = open(self._seg_path(last), "ab")
+
+    # -- writes ---------------------------------------------------------------
+    def _rotate(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self.core.seal(self._cur_sid)
+        self._cur_sid = self.core.alloc()
+        self._fh = open(self._seg_path(self._cur_sid), "ab")
+
+    def append(self, payload: bytes) -> int:
+        """Durably append one record; returns its seq."""
+        if self._fh is None or \
+                int(self.core.seg_written[self._cur_sid]) >= self.seg_bytes:
+            self._rotate()
+        seq = self.next_seq
+        frame = self._HDR.pack(len(payload), zlib.crc32(payload), seq) + payload
+        off = int(self.core.seg_written[self._cur_sid])
+        self._fh.write(frame)
+        self._fh.flush()
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+        self.core.append_bytes(self._cur_sid, len(frame), 0.0, kind="user")
+        self._index[seq] = (self._cur_sid, off, len(frame))
+        self.next_seq = seq + 1
+        return seq
+
+    def append_record(self, obj: dict) -> int:
+        """JSON convenience wrapper over :meth:`append`."""
+        return self.append(
+            json.dumps(obj, separators=(",", ":")).encode("utf-8"))
+
+    # -- reads ----------------------------------------------------------------
+    def records(self, start_seq: int = 0):
+        """Yield (seq, payload bytes) for live records, in seq order."""
+        by_sid: dict[int, list[tuple[int, int, int]]] = {}
+        for seq, (sid, off, size) in self._index.items():
+            if seq >= start_seq:
+                by_sid.setdefault(sid, []).append((seq, off, size))
+        out = []
+        if self._fh is not None:
+            self._fh.flush()
+        for sid, entries in by_sid.items():
+            data = self._seg_path(sid).read_bytes()
+            for seq, off, size in entries:
+                out.append((seq, data[off + self._HDR.size:off + size]))
+        out.sort()
+        return out
+
+    def iter_records(self, start_seq: int = 0):
+        """Yield (seq, decoded JSON record) in seq order."""
+        for seq, payload in self.records(start_seq):
+            yield seq, json.loads(payload.decode("utf-8"))
+
+    # -- reclamation -----------------------------------------------------------
+    def compact(self, before_seq: int) -> int:
+        """Kill records with seq < before_seq (superseded by a snapshot) and
+        delete sealed segment files left fully dead.  Returns files deleted."""
+        dead = [s for s in self._index if s < before_seq]
+        for seq in dead:
+            sid, _, size = self._index.pop(seq)
+            self.core.kill_bytes(sid, size, 0.0, tick=False)
+        n = self.core.next_sid
+        empty = (self.core.seg_state[:n] == USED) & (self.core.seg_live[:n] == 0)
+        victims = np.nonzero(empty)[0]
+        if len(victims):
+            self.core.evacuate_accounting(victims)   # E = 1, zero moves
+            for sid in victims:
+                self._seg_path(int(sid)).unlink(missing_ok=True)
+        return len(victims)
+
+    # -- integrity -------------------------------------------------------------
+    def check_tail(self) -> None:
+        """Audit hook: the open segment re-parses cleanly end-to-end and the
+        last durable record's seq matches the in-memory cursor."""
+        if self._cur_sid is None:
+            assert not self._index, "live records with no segment open"
+            return
+        self._fh.flush()
+        path = self._seg_path(self._cur_sid)
+        recs, valid = self._scan_file(path)
+        assert valid == path.stat().st_size, "torn tail in open journal segment"
+        if recs:
+            assert recs[-1][0] == self.next_seq - 1, \
+                f"journal tail seq {recs[-1][0]} != cursor {self.next_seq - 1}"
+        live = {s for s in self._index}
+        assert all(seq in live or seq < self.next_seq for seq, _, _ in recs)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+            self._fh.close()
+            self._fh = None

@@ -13,8 +13,9 @@ import time
 import numpy as np
 
 from ..configs import ARCHS, get_config
+from ..distributed.fault import FailureInjector
 from ..models import Model
-from ..serving import PagedServingEngine
+from ..serving import AdmissionShed, PagedServingEngine
 
 
 def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
@@ -27,16 +28,27 @@ def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
     TTFT *queue-wait* component (scheduled arrival → first admission, read
     off the engine's ``admit_wall`` stamps) — separating "the scheduler sat
     on it" from "the prefill took that long to compute"."""
-    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(reqs)))
+    arrivals = list(np.cumsum(rng.exponential(1.0 / rate, size=len(reqs))))
+    # (prompt, n_new, original arrival) — shed retries re-enter this list
+    # scheduled at now + retry_after but keep their first arrival, so the
+    # whole shed-and-retry wait is priced into that request's TTFT
+    pend = [(p, n, a) for (p, n), a in zip(reqs, arrivals)]
     arr_t, first_t, done_t, n_tok = {}, {}, {}, {}
+    shed_retries = 0
     dispatches = 0
     nxt = 0
     t0 = time.time()
-    while nxt < len(reqs) or eng.has_work():
+    while nxt < len(pend) or eng.has_work():
         now = time.time() - t0
-        while nxt < len(reqs) and arrivals[nxt] <= now:
-            prompt, n_new = reqs[nxt]
-            arr_t[eng.submit(prompt, n_new)] = arrivals[nxt]
+        while nxt < len(pend) and arrivals[nxt] <= now:
+            prompt, n_new, orig = pend[nxt]
+            try:
+                arr_t[eng.submit(prompt, n_new)] = orig
+            except AdmissionShed as shed:
+                # a well-behaved client honors the retry-after hint
+                shed_retries += 1
+                pend.append((prompt, n_new, orig))
+                arrivals.append(now + shed.retry_after_s)
             nxt += 1
         if not eng.has_work():  # idle until the next arrival
             time.sleep(min(float(arrivals[nxt]) - now, 2e-3))
@@ -61,7 +73,7 @@ def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
         return round(float(np.percentile(a, q)) * 1e3, 1) if len(a) else 0.0
 
     return dispatches, dict(
-        arrival_rate=rate,
+        arrival_rate=rate, shed_retries=shed_retries,
         ttft_p50_ms=pct(ttft, 50), ttft_p99_ms=pct(ttft, 99),
         queue_ms_p50=pct(queue, 50), queue_ms_p99=pct(queue, 99),
         tpot_p50_ms=pct(tpot, 50), tpot_p99_ms=pct(tpot, 99))
@@ -77,6 +89,9 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               stop_token: int | None = None, preemption: bool = False,
               arrival_rate: float = 0.0, prefill_chunk: int = 0,
               admit_every_dispatch: bool = True,
+              journal_dir: str | None = None, snapshot_every: int = 0,
+              audit_every: int = 0, injector=None,
+              shed_queue_depth: int = 0,
               verbose: bool = True) -> dict:
     """One engine run over a request stream; returns metrics.
 
@@ -107,6 +122,10 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              stop_token=stop_token, preemption=preemption,
                              prefill_chunk=prefill_chunk,
                              admit_every_dispatch=admit_every_dispatch,
+                             journal_dir=journal_dir,
+                             snapshot_every=snapshot_every,
+                             audit_every=audit_every, injector=injector,
+                             shed_queue_depth=shed_queue_depth,
                              warmup=True)  # AOT-compile outside the timed loop
     # mixed short/long request stream (the checkerboarding driver); with
     # shared_prefix_len, every prompt opens with the same system prompt
@@ -132,6 +151,7 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
             dispatches += 1
     dt = time.time() - t0
     m = eng.metrics()
+    m.pop("dispatches", None)   # the driver-side count below is reported
     toks = sum(len(v) for v in eng.finished.values())
     out = dict(policy=policy, requests=requests, dispatches=dispatches,
                tokens=toks, tok_per_s=toks / dt, **lat, **m)
@@ -206,6 +226,31 @@ def main() -> None:
                          "the next token instead of the end of the dispatch "
                          "(--no-admit-every-dispatch keeps full "
                          "horizon-length dispatches)")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="crash-safe serving: append per-dispatch session "
+                         "records (checksummed, torn-tail-truncated on open) "
+                         "to a journal under DIR; a killed run warm-restarts "
+                         "via repro.serving.recover_engine with bit-identical "
+                         "output tokens (use --pool-f32 workloads)")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="K",
+                    help="with --journal: checkpoint the session state "
+                         "through the manifest store every K dispatches and "
+                         "truncate the journal behind it (bounds replay "
+                         "length; 0 = journal only, full replay)")
+    ap.add_argument("--audit", type=int, default=0, metavar="K",
+                    help="debug mode: every K dispatches, cross-check pool "
+                         "refcounts against block tables + prefix tree and "
+                         "verify the journal tail (0 = off)")
+    ap.add_argument("--inject-fault", nargs="*", default=[], metavar="OP:P",
+                    help="chaos testing: inject retryable faults into engine "
+                         "ops with per-op probability, e.g. dispatch:0.02 "
+                         "compaction:0.05 (ops: dispatch prefill compaction "
+                         "host_sync journal)")
+    ap.add_argument("--shed-queue-depth", type=int, default=0, metavar="D",
+                    help="load shedding: once admission stalls past "
+                         "preemption and D requests queue, submit() raises "
+                         "AdmissionShed with a retry-after hint (the open-"
+                         "loop driver re-arrives them); 0 = never shed")
     ap.add_argument("--arrival-rate", type=float, default=0.0, metavar="R",
                     help="open-loop mode: submit requests by a Poisson "
                          "process at R req/s (independent of completions) "
@@ -219,6 +264,14 @@ def main() -> None:
     if args.mesh:
         from .mesh import make_serving_mesh
         mesh = make_serving_mesh(args.mesh)
+
+    injector = None
+    if args.inject_fault:
+        probs = {}
+        for spec in args.inject_fault:
+            op, _, p = spec.partition(":")
+            probs[op] = float(p or 0.05)
+        injector = FailureInjector(transient_prob=probs, seed=args.seed)
 
     model = Model(get_config(args.arch).smoke())
     import jax
@@ -234,7 +287,12 @@ def main() -> None:
                          preemption=args.preemption,
                          arrival_rate=args.arrival_rate,
                          prefill_chunk=args.prefill_chunk,
-                         admit_every_dispatch=args.admit_every_dispatch)
+                         admit_every_dispatch=args.admit_every_dispatch,
+                         journal_dir=(f"{args.journal}/{p}"
+                                      if args.journal else None),
+                         snapshot_every=args.snapshot_every,
+                         audit_every=args.audit, injector=injector,
+                         shed_queue_depth=args.shed_queue_depth)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

@@ -114,8 +114,10 @@ def train(*, arch: str = "qwen3-1.7b", smoke: bool = True, steps: int = 30,
                     final_loss=log["loss"][-1])
 
     result, rstats = run_with_restarts(make_state, loop,
-                                       max_restarts=max_restarts)
+                                       max_restarts=max_restarts,
+                                       restored_step=lambda st: st["start"])
     log["final_loss"] = result["final_loss"]
+    log["steps_replayed"] = rstats.steps_replayed
     log["stragglers"] = detector.stragglers
     if manager is not None:
         log["ckpt_wamp"] = manager.wamp()

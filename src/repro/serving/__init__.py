@@ -4,6 +4,9 @@ space is reclaimed by the paper's MDC cleaning policy."""
 from .engine import PagedServingEngine, Request
 from .kvcache import CompactionPlan, LogStructuredKVPool, PoolStats
 from .prefix_cache import PrefixCache
+from .recovery import recover_engine
+from .scheduler import AdmissionShed
 
 __all__ = ["PagedServingEngine", "Request", "LogStructuredKVPool",
-           "CompactionPlan", "PoolStats", "PrefixCache"]
+           "CompactionPlan", "PoolStats", "PrefixCache", "recover_engine",
+           "AdmissionShed"]

@@ -54,10 +54,13 @@ from ..models import attention as att
 from ..models import transformer as tfm
 from ..models.layers import rmsnorm
 from .. import kernels
+from ..core.logstructure import JournalLog
+from ..distributed.fault import TransientFault, backoff_delay
 from .kvcache import LogStructuredKVPool
 from .prefix_cache import PrefixCache
-from .scheduler import (choose_preempt_victims, make_length_predictor,
-                        normalize_prefill_chunk)
+from .scheduler import (AdmissionShed, choose_preempt_victims,
+                        make_length_predictor, normalize_prefill_chunk,
+                        retry_after_estimate)
 
 
 @dataclasses.dataclass
@@ -65,9 +68,9 @@ class Request:
     rid: int
     prompt: np.ndarray          # (S,) int32
     max_new_tokens: int
-    # resume state (preempted requests only): the tokens already emitted.
-    # All but the last have been *consumed* (their K/V must be recomputed
-    # on resume); the last is the next token to feed into decode.
+    # resume state (preempted/recovered requests only): the tokens already
+    # emitted and delivered.  A restart re-decodes them from the prompt —
+    # bit-identically — so they are not re-delivered or re-journaled.
     out: np.ndarray | None = None
     out_n: int = 0
 
@@ -358,7 +361,11 @@ class PagedServingEngine:
                  prefix_cache: bool = False, prefix_cache_pages: int = 0,
                  pool_dtype=jnp.bfloat16, stop_token: int | None = None,
                  preemption: bool = False, predictor: str = "ewma",
-                 prefill_chunk: int = 0, admit_every_dispatch: bool = True):
+                 prefill_chunk: int = 0, admit_every_dispatch: bool = True,
+                 journal_dir: str | None = None, snapshot_every: int = 0,
+                 audit_every: int = 0, injector=None, fault_retries: int = 2,
+                 fault_backoff_s: float = 0.0, shed_queue_depth: int = 0,
+                 journal_fsync: bool = False):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
@@ -440,6 +447,10 @@ class PagedServingEngine:
         self.bt = np.full((B, P), self.trash_page, np.int32)
         self._out = [None] * B                    # per-slot output buffers
         self._out_n = np.zeros(B, np.int32)
+        # resumed slots re-decode their already-emitted span (bit-identical
+        # replay); _jskip[i] = how many output tokens were already journaled
+        # and delivered, so the replayed span is not re-recorded
+        self._jskip = np.zeros(B, np.int32)
         # chunked-prefill slot state: the (single) in-flight prefill.  A
         # prefilling slot owns its rid/pages/prompt like a decoding one —
         # so preemption and release go through the same decref paths — but
@@ -468,8 +479,8 @@ class PagedServingEngine:
         # exact max_new_tokens.  preemption: when admission stalls and
         # compaction + prefix-cache eviction cannot cover the page deficit,
         # victim sequences are preempted (pages freed via the decref path)
-        # and requeued for recompute-on-resume through the continuation
-        # prefill.
+        # and requeued: the resume re-prefills the prompt and re-decodes
+        # the emitted span, reproducing the lost K/V bit-identically.
         self.stop_token = stop_token
         self.preemption = preemption
         self.length_predictor = make_length_predictor(predictor)
@@ -477,7 +488,7 @@ class PagedServingEngine:
         self._prompt: list[np.ndarray | None] = [None] * B
         self.preemptions = 0
         self.resumes = 0
-        self.recomputed_tokens = 0  # prefill tokens replayed by resumes
+        self.recomputed_tokens = 0  # tokens recomputed (prefill+re-decode)
         self.prefill_chunks_dispatched = 0  # fused prefill+decode dispatches
         # pass the mesh / pool sharding to the jitted paths only when the
         # pools actually shard; with replicated fallback pools everything
@@ -513,6 +524,30 @@ class PagedServingEngine:
             functools.partial(_move_pages_fn, shard=move_shard),
             donate_argnums=(0, 1), static_argnames=("use_pallas",))
         self._next_rid = 0
+        # --- crash safety & chaos (DESIGN.md §10) -------------------------
+        # journal: one small durable record per state transition, so a kill
+        # at any record boundary recovers to bit-identical output tokens
+        # (pool_dtype=float32) via snapshot + bounded replay + re-prefill.
+        self.journal = (JournalLog(journal_dir, fsync=journal_fsync)
+                        if journal_dir else None)
+        self.snapshot_every = snapshot_every
+        self.audit_every = audit_every
+        self.injector = injector
+        self.fault_retries = fault_retries
+        self.fault_backoff_s = fault_backoff_s
+        # shed_queue_depth > 0: when admission has stalled past preemption
+        # and the queue is this deep, submit() raises AdmissionShed with a
+        # retry-after hint instead of growing head-of-line latency
+        self.shed_queue_depth = shed_queue_depth
+        self.shed_count = 0
+        self.fault_retries_done = 0   # transient faults cleared by retry
+        self.fault_unwinds = 0        # admissions unwound by a fault
+        self.dispatches = 0
+        self._admit_stalled = False
+        self._tpot_ewma = 0.05        # s/token, seeds the retry-after hint
+        self.recovery: dict | None = None   # set by recovery.recover_engine
+        self._snap_id = 0
+        self._snap_store = None       # lazy LogStructuredCheckpointStore
         if warmup:
             self.warmup()
 
@@ -595,14 +630,60 @@ class PagedServingEngine:
                 self.k_pools, self.v_pools, kp, vp, self._put_rep(trash))
             tb *= 2
 
+    # ----------------------------------------------- crash safety plumbing
+    def _jrec(self, rec: dict) -> int | None:
+        """Append one record to the session journal (no-op when off).
+        Journal appends go through the same retry path as device ops — a
+        transient journal fault is retried, a hard one crashes the engine
+        (better to die than to serve unjournaled state)."""
+        if self.journal is None:
+            return None
+        return self._with_retries(
+            "journal", lambda: self.journal.append_record(rec))
+
+    def _with_retries(self, op: str, fn):
+        """Run ``fn`` with fault injection keyed by ``op`` and bounded
+        retry-with-backoff for :class:`TransientFault`.  Injection fires
+        *before* ``fn`` — critically, before any jitted call consumes its
+        donated buffers — so a failed attempt leaves the pools intact and
+        the retry re-executes from unchanged state."""
+        for attempt in range(self.fault_retries + 1):
+            try:
+                if self.injector is not None:
+                    self.injector.check(self.dispatches, op=op)
+                return fn()
+            except TransientFault:
+                if attempt == self.fault_retries:
+                    raise
+                self.fault_retries_done += 1
+                delay = backoff_delay(attempt, base_s=self.fault_backoff_s)
+                if delay > 0.0:
+                    time.sleep(delay)
+        raise AssertionError("unreachable")
+
     # ------------------------------------------------------------- requests
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if (self.shed_queue_depth and self._admit_stalled
+                and len(self.queue) >= self.shed_queue_depth):
+            # overload: admission stalled past preemption AND the queue is
+            # at depth — shed with a retry-after derived from the waiting
+            # work at the measured decode rate (DESIGN.md §10)
+            waiting = sum(
+                self._predict_remaining(r.max_new_tokens, r.out_n)
+                + len(self._eff_prompt(r))
+                for q in (self._resume, self.queue) for r in q)
+            self.shed_count += 1
+            raise AdmissionShed(retry_after_estimate(waiting,
+                                                     self._tpot_ewma))
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
                                   max_new_tokens))
+        self._jrec({"t": "sub", "rid": rid,
+                    "p": [int(t) for t in np.asarray(prompt)],
+                    "n": int(max_new_tokens)})
         return rid
 
     def slot_active(self, i: int) -> bool:
@@ -630,9 +711,11 @@ class PagedServingEngine:
         return tok_bucket, max_len
 
     def _eff_prompt(self, req: Request) -> np.ndarray:
-        """The token positions a (re)start must have K/V for: the prompt,
-        plus — for a preempted request — the emitted tokens already
-        *consumed* by decode (all but the last emitted token)."""
+        """The token positions a (re)start must recompute K/V for: the
+        prompt, plus — for a preempted request — the emitted tokens already
+        *consumed* by decode (all but the last).  Used for admission
+        sizing/estimation only: the actual restart prefills just the
+        prompt and *re-decodes* the emitted span (see ``_start``)."""
         if req.out is None or req.out_n <= 1:
             return req.prompt
         return np.concatenate([req.prompt,
@@ -677,6 +760,7 @@ class PagedServingEngine:
 
     def _admit(self) -> None:
         started: list[int] = []
+        self._admit_stalled = False
         free = np.flatnonzero(self.rid < 0)
         for i in free:
             if self._pf is not None:
@@ -700,7 +784,8 @@ class PagedServingEngine:
             if self.prefix_cache is not None:
                 # a cached prefix will be spliced, not allocated: the
                 # request's real allocation need is net of the match
-                hit_pages = self.prefix_cache.match(self._eff_prompt(req))
+                # (matched on the prompt — what _start actually prefills)
+                hit_pages = self.prefix_cache.match(req.prompt)
                 need -= len(hit_pages)
             # the compaction reserve is compact_trigger *slabs* (see
             # admission_reserve) — waived when nothing is active, so a
@@ -714,9 +799,21 @@ class PagedServingEngine:
                 self._preempt_for(need + reserve - avail, keep=started)
                 avail = self._gate_avail(hit_pages)  # re-measured gate
             if avail < need + reserve:
-                break  # admission control: wait for deaths/compaction
+                # admission control: wait for deaths/compaction.  The
+                # stall is what arms load shedding — capacity, not a
+                # momentarily empty free list, is the bottleneck here
+                self._admit_stalled = True
+                break
             q.popleft()
-            self._start(int(i), req, from_resume=q is self._resume)
+            try:
+                self._start(int(i), req, from_resume=q is self._resume)
+            except TransientFault:
+                # transactional admission: _start already unwound its page
+                # references; put the request back at the head and retry
+                # at the next step() (the injector re-rolls per call)
+                self.fault_unwinds += 1
+                q.appendleft(req)
+                break
             started.append(int(i))
 
     def _preempt_for(self, deficit: int, *, keep=(),
@@ -770,23 +867,29 @@ class PagedServingEngine:
         return max(avail() - start, 0)
 
     def _start(self, i: int, req: Request, from_resume: bool = False) -> None:
-        # A resume (req.out is not None) restarts a preempted sequence: the
-        # effective prompt is the original prompt plus the already-consumed
-        # output tokens, whose K/V is recomputed by the same (continuation)
-        # prefill a fresh request uses — surviving prefix-cache pages splice
-        # back in — and the emitted-token buffer is restored instead of
-        # taking the prefill's first token (already emitted once).
-        resume = req.out is not None
-        prompt = self._eff_prompt(req)
+        # A resume (req.out carries emitted tokens) restarts a preempted or
+        # recovered sequence *from scratch*: the ORIGINAL prompt goes
+        # through the exact prefill a fresh admission runs (same token
+        # bucket, same kernel → bit-identical K/V), and decode then
+        # re-derives the already-emitted span deterministically.
+        # Re-prefilling the consumed tokens instead would compute their K/V
+        # with prefill arithmetic where the original used decode arithmetic
+        # — close, but not bit-equal (different reduction shapes under the
+        # activation dtype), and a later near-tie argmax can flip.
+        # ``_jskip`` records how many output tokens were already journaled
+        # and delivered, so the replayed span is not re-recorded.
+        resume = req.out is not None and req.out_n > 0
+        prompt = req.prompt
         plen = len(prompt)
         T = self.page_T
         n_pages = (plen + T - 1) // T
         # §5.3 placement estimator: blocks die when their sequence finishes
-        # ⇒ expected death clock = now + blocks that will die then.  With
-        # stop tokens, output length is data-dependent and this becomes the
+        # ⇒ expected death clock = now + blocks that will die then (the
+        # re-decoded span counts: those writes happen again).  With stop
+        # tokens, output length is data-dependent and this becomes the
         # length predictor's estimate, not ground truth (DESIGN.md §8).
-        est = self.pool.u_now + plen + self._predict_remaining(
-            req.max_new_tokens, req.out_n)
+        est = (self.pool.u_now + plen + max(req.out_n - 1, 0)
+               + self._predict_remaining(req.max_new_tokens, req.out_n))
 
         # --- shared-prefix lookup: splice cached full pages (the lookup is
         # CoW-capped: at least one prompt token is always prefilled, and a
@@ -829,6 +932,21 @@ class PagedServingEngine:
         self.bt[i, n_shared:n_pages] = pages_new
         self.npages[i] = n_pages
 
+        # fault-injection point for the prefill path — *before* any device
+        # work touches the donated pools, so unwinding is pure host-side
+        # bookkeeping: drop every reference this admission took (shared
+        # prefix pages survive for their other holders) and re-raise;
+        # _admit requeues the request on a TransientFault
+        if self.injector is not None:
+            try:
+                self.injector.check(self.dispatches, op="prefill")
+            except BaseException:
+                self.pool.free_pages(self.bt[i, :n_pages].astype(np.int64))
+                self.bt[i, :] = self.trash_page
+                self.npages[i] = 0
+                self._bt_dirty = True
+                raise
+
         # admission bookkeeping shared by both prefill modes.  ``resumes``
         # counts resume-queue restarts (not just emitted-token carriers):
         # a chunked prefill can be preempted before its first token, and
@@ -838,10 +956,18 @@ class PagedServingEngine:
         if from_resume:
             self.resumes += 1
         if resume:
-            self.recomputed_tokens += plen
+            # prompt re-prefilled + consumed output tokens re-decoded
+            self.recomputed_tokens += plen + req.out_n - 1
         self._prefill_tokens_total += plen
         if n_shared:
             self._prefill_tokens_saved += n_shared * T
+        # admission record: replay re-prioritizes the request (it was
+        # running, so recovery resumes it before fresh queue entries);
+        # slot/pages are forensic — physical placement is rebuilt, not
+        # replayed (page contents died with device HBM)
+        self._jrec({"t": "adm", "rid": req.rid, "slot": int(i),
+                    "res": int(resume), "shr": int(n_shared),
+                    "pg": [int(p) for p in pages_new]})
 
         if self.prefill_chunk:
             # chunked mode: park the slot in the *prefilling* state; step()
@@ -902,21 +1028,26 @@ class PagedServingEngine:
         self.rid[i] = req.rid
         self.lens[i] = plen
         self._prompt[i] = req.prompt
+        self.tokens[i] = int(first_tok[0])
+        self.to_gen[i] = req.max_new_tokens - 1
         if resume:
-            # the prefill's last-position token was already emitted before
-            # the preemption: restore the output buffer and feed the last
-            # emitted token back into decode instead
-            self.tokens[i] = int(req.out[req.out_n - 1])
-            self.to_gen[i] = req.max_new_tokens - req.out_n
-            self._out[i] = req.out
-            self._out_n[i] = req.out_n
+            # keep the carried buffer: decode re-emits the same tokens
+            # bit-identically, and a mid-replay preempt or snapshot must
+            # still see the full known span (via _jskip)
+            out = req.out
+            self._jskip[i] = req.out_n
         else:
-            self.tokens[i] = int(first_tok[0])
-            self.to_gen[i] = req.max_new_tokens - 1
             out = np.empty(req.max_new_tokens, np.int32)
-            out[0] = self.tokens[i]
-            self._out[i] = out
-            self._out_n[i] = 1
+            self._jskip[i] = 0
+        out[0] = self.tokens[i]
+        self._out[i] = out
+        self._out_n[i] = 1
+        if not resume:
+            # the prefill's first output token is journaled before any
+            # finish record this admission could produce (cap/stop below);
+            # a resume's first token was journaled by its original start
+            self._jrec({"t": "first", "rid": req.rid,
+                        "tok": int(first_tok[0])})
         self._bt_dirty = self._state_dirty = True
         # the prefill token may already complete the request: cap reached,
         # or (stop-token decode) the first emitted token is the stop token
@@ -942,6 +1073,7 @@ class PagedServingEngine:
         self._prompt[i] = req.prompt
         self._out[i] = req.out
         self._out_n[i] = req.out_n
+        self._jskip[i] = 0         # parked: _out_n itself is the known span
         self.tokens[i] = 0
         self.to_gen[i] = req.max_new_tokens - req.out_n
         # lens tracks prefill progress (chunk boundary = page boundary, so
@@ -956,7 +1088,8 @@ class PagedServingEngine:
                         # chunk attends over, matching the monolithic
                         # prefill's tiling exactly (bit-identity)
                         kv_len=self._prefill_bucket(plen, n_pages)[0],
-                        est=est, resume=req.out is not None,
+                        est=est,
+                        resume=req.out is not None and req.out_n > 0,
                         max_new=req.max_new_tokens)
         self._bt_dirty = self._state_dirty = True
 
@@ -977,16 +1110,23 @@ class PagedServingEngine:
                 pf["prompt"], self.bt[i, :pf["plen"] // self.page_T].copy(),
                 pf["est"])
         if pf["resume"]:
-            # the first output token was emitted before the preemption:
-            # feed the last emitted token back into decode instead
-            self.tokens[i] = int(self._out[i][self._out_n[i] - 1])
+            # graduation of a resumed slot: decode re-derives the emitted
+            # span bit-identically; mark it so it is not re-journaled
+            self._jskip[i] = int(self._out_n[i])
+            self.tokens[i] = int(first_tok)
+            self.to_gen[i] = pf["max_new"] - 1
+            self._out[i][0] = first_tok   # bit-identical to the recorded one
+            self._out_n[i] = 1
         else:
+            self._jskip[i] = 0
             self.tokens[i] = int(first_tok)
             self.to_gen[i] = pf["max_new"] - 1
             out = np.empty(pf["max_new"], np.int32)
             out[0] = first_tok
             self._out[i] = out
             self._out_n[i] = 1
+            self._jrec({"t": "first", "rid": int(self.rid[i]),
+                        "tok": int(first_tok)})
         self._state_dirty = True
         if self.to_gen[i] <= 0 or (not pf["resume"]
                                    and self.stop_token is not None
@@ -1002,6 +1142,8 @@ class PagedServingEngine:
         if self._pf is not None and self._pf["slot"] == i:
             self._pf = None          # abandon the in-flight prefill
         self._prefilling[i] = False
+        self._jrec({"t": "rel", "rid": int(self.rid[i]),
+                    "pg": [int(p) for p in self.slot_pages(i)]})
         self.pool.free_pages(self.slot_pages(i).astype(np.int64))
         self.bt[i, :] = self.trash_page
         self.rid[i] = -1
@@ -1009,6 +1151,7 @@ class PagedServingEngine:
         self.tokens[i] = 0
         self._out[i] = None
         self._out_n[i] = 0
+        self._jskip[i] = 0
         self._prompt[i] = None
         self._bt_dirty = self._state_dirty = True
 
@@ -1016,20 +1159,25 @@ class PagedServingEngine:
         rid = int(self.rid[i])
         self.finished[rid] = self._out[i][:self._out_n[i]].tolist()
         self.length_predictor.observe(int(self._out_n[i]))
+        self._jrec({"t": "fin", "rid": rid})
         self._release_slot(i)
 
     def _preempt(self, i: int) -> None:
         """Evict a running sequence under pressure: drop its page
         references and requeue it carrying its emitted tokens — onto the
         resume queue, which `_admit` serves FIFO and *before* any new
-        admission; a later `_start` recomputes the K/V it lost through the
-        (continuation) prefill, bit-compatibly with never having been
+        admission; a later `_start` re-prefills the prompt and re-decodes
+        the emitted span, bit-identically with never having been
         preempted."""
         self.preemptions += 1
+        self._jrec({"t": "pre", "rid": int(self.rid[i])})
+        # a slot preempted mid-replay (out_n < _jskip) still *knows* the
+        # full journaled span — the carried buffer holds it past out_n
         self._resume.append(Request(
             int(self.rid[i]), self._prompt[i],
             int(self._out_n[i] + self.to_gen[i]),   # original max_new_tokens
-            out=self._out[i], out_n=int(self._out_n[i])))
+            out=self._out[i],
+            out_n=int(max(self._out_n[i], self._jskip[i]))))
         self._release_slot(i)
 
     # ---------------------------------------------------------------- step
@@ -1083,6 +1231,8 @@ class PagedServingEngine:
         pf = self._pf
         if not active.any() and pf is None:
             return done
+        self.dispatches += 1
+        t0 = time.perf_counter()
 
         # pages for the incoming tokens must exist before the dispatch writes
         # them; one batched alloc covers every slot at a page boundary
@@ -1116,6 +1266,8 @@ class PagedServingEngine:
             self.bt[growing, self.npages[growing]] = pages
             self.npages[growing] += 1
             self._bt_dirty = True
+            self._jrec({"t": "al", "r": self.rid[growing].tolist(),
+                        "pg": pages.tolist()})
 
         n = self._event_horizon(active)
         self._sync_device()
@@ -1141,14 +1293,17 @@ class PagedServingEngine:
             for j in range(C // T):
                 if p0 + j < self.npages[pi]:
                     cpages[j] = self.bt[pi, p0 + j]
-            with self._mesh_ctx():
-                (out, first, self.k_pools, self.v_pools, self._lens_dev,
-                 self._tok_dev) = self._fused(
-                    self.params, self.k_pools, self.v_pools, self._bt_dev,
-                    self._lens_dev, self._tok_dev, self._act_dev,
-                    np.int32(n), self._put_rep(ext), self._put_rep(cpages),
-                    self._put_rep(ptoks[None]), np.int32(pos),
-                    np.int32(last_idx), kv_len=pf["kv_len"])
+            def _dispatch_fused():
+                with self._mesh_ctx():
+                    return self._fused(
+                        self.params, self.k_pools, self.v_pools,
+                        self._bt_dev, self._lens_dev, self._tok_dev,
+                        self._act_dev, np.int32(n), self._put_rep(ext),
+                        self._put_rep(cpages), self._put_rep(ptoks[None]),
+                        np.int32(pos), np.int32(last_idx),
+                        kv_len=pf["kv_len"])
+            (out, first, self.k_pools, self.v_pools, self._lens_dev,
+             self._tok_dev) = self._with_retries("dispatch", _dispatch_fused)
             pf["pos"] = pos + C
             # host-only progress marker (the slot is decode-masked, so the
             # stale device-side value is never consumed — no upload)
@@ -1156,11 +1311,16 @@ class PagedServingEngine:
             self.prefill_chunks_dispatched += 1
         else:
             is_last = False
-            out, self.k_pools, self.v_pools, self._lens_dev, self._tok_dev = (
-                self._decode(self.params, self.k_pools, self.v_pools,
-                             self._bt_dev, self._lens_dev, self._tok_dev,
-                             self._act_dev, np.int32(n)))
-        toks = np.asarray(out)[:n]  # ONE host sync per dispatch, not per token
+            (out, self.k_pools, self.v_pools, self._lens_dev,
+             self._tok_dev) = self._with_retries(
+                "dispatch",
+                lambda: self._decode(self.params, self.k_pools, self.v_pools,
+                                     self._bt_dev, self._lens_dev,
+                                     self._tok_dev, self._act_dev,
+                                     np.int32(n)))
+        # ONE host sync per dispatch, not per token
+        toks = self._with_retries("host_sync",
+                                  lambda: np.asarray(out))[:n]
 
         # host bookkeeping: O(active slots) per dispatch.  With stop tokens
         # a slot may have stopped mid-dispatch: it emitted tokens only up to
@@ -1183,6 +1343,24 @@ class PagedServingEngine:
             self.to_gen[i] -= e          # with the active mask at the stop
             self.tokens[i] = int(toks[e - 1, i])
 
+        # the emitted tokens are journaled BEFORE any fin record below:
+        # replay must never see a finish whose completing tokens were lost
+        # to the crash (a fin with no emit would drop output).  A resumed
+        # slot's re-decoded span (indices < _jskip) was journaled by its
+        # original run and is sliced off — replay appends emits blindly,
+        # so re-recording it would duplicate tokens.
+        if act.size:
+            spans = []
+            for i in act:
+                e = int(emitted[i])
+                b = int(self._out_n[i]) - e
+                s = max(b, int(self._jskip[i]))
+                spans.append([int(t) for t in self._out[i][s:b + e]])
+            if any(spans):
+                self._jrec({"t": "emit",
+                            "r": [int(self.rid[i]) for i in act],
+                            "k": spans})
+
         for i in act:
             if stopped[i] or self.to_gen[i] <= 0:
                 done.append(int(self.rid[i]))
@@ -1192,6 +1370,17 @@ class PagedServingEngine:
             fin = self._pf_complete(int(np.asarray(first)[0]))
             if fin is not None:
                 done.append(fin)
+
+        if act.size:
+            tot = int(emitted[act].sum())
+            if tot > 0:   # decode-rate EWMA feeds the shed retry-after hint
+                dt = time.perf_counter() - t0
+                self._tpot_ewma = 0.8 * self._tpot_ewma + 0.2 * (dt / tot)
+        if (self.journal is not None and self.snapshot_every
+                and self.dispatches % self.snapshot_every == 0):
+            self.snapshot()
+        if self.audit_every and self.dispatches % self.audit_every == 0:
+            self.audit()
         return done
 
     def run_to_completion(self, max_steps: int = 100_000) -> dict:
@@ -1208,9 +1397,17 @@ class PagedServingEngine:
         # pad the plan to a power-of-two bucket with trash→trash moves so
         # plan sizes share compiled executables
         src, dst = plan.padded(_pow2(len(plan)), self.trash_page)
-        self.k_pools, self.v_pools = self._move(
-            self.k_pools, self.v_pools, self._put_rep(src),
-            self._put_rep(dst), use_pallas=self.use_pallas)
+        # the pool's accounting already committed the plan (blocks moved,
+        # segments reclaimed), so the tensor move cannot be abandoned —
+        # transient faults retry in place until the move lands or the
+        # retry budget declares the fault hard
+        self._jrec({"t": "mv", "src": plan.src_pages.tolist(),
+                    "dst": plan.dst_pages.tolist()})
+        self.k_pools, self.v_pools = self._with_retries(
+            "compaction",
+            lambda: self._move(self.k_pools, self.v_pools,
+                               self._put_rep(src), self._put_rep(dst),
+                               use_pallas=self.use_pallas))
         # remap block tables: one vectorized page-id lookup over the matrix.
         # Every reference holder remaps with the same LUT — all slot rows
         # (shared pages appear in several) and the prefix-cache tree.
@@ -1220,6 +1417,99 @@ class PagedServingEngine:
         if self.prefix_cache is not None:
             self.prefix_cache.remap(lut)
         self._bt_dirty = True
+
+    # ------------------------------------------------------------ integrity
+    def audit(self) -> None:
+        """Cross-check every reference holder against the pool's refcounts
+        (engine debug mode; also run from tests and on the ``audit_every``
+        cadence).  The invariant: each page's refcount equals the number of
+        block-table rows holding it plus one if the prefix tree caches it —
+        no leaks (refcount too high ⇒ pages never reclaimed, pool fills) and
+        no double-frees (too low ⇒ a live page gets reallocated under a
+        running sequence).  Also validates per-slot length/output ledgers
+        and, when journaling, that the journal tail is durable and torn-free.
+        """
+        self.pool.check_invariants()
+        if self.prefix_cache is not None:
+            self.prefix_cache.check_invariants()
+        expected = np.zeros_like(np.asarray(self.pool.block_ref))
+        for i in range(self.max_batch):
+            if self.rid[i] >= 0:
+                np.add.at(expected, self.slot_pages(i).astype(np.int64), 1)
+        if self.prefix_cache is not None:
+            for p in self.prefix_cache.pages():
+                expected[p] += 1
+        ref = np.asarray(self.pool.block_ref)
+        assert (expected == ref).all(), \
+            f"refcount mismatch at pages {np.flatnonzero(expected != ref)}"
+        for i in range(self.max_batch):
+            if self.rid[i] >= 0 and not self._prefilling[i]:
+                # lens counts prompt + consumed outputs (all emitted but the
+                # last, which is the next decode input) — holds across
+                # resume because a restart replays decode from the prompt
+                assert self.lens[i] == (len(self._prompt[i])
+                                        + self._out_n[i] - 1), \
+                    f"slot {i}: lens ledger broken"
+                assert self.to_gen[i] == len(self._out[i]) - self._out_n[i], \
+                    f"slot {i}: to_gen ledger broken"
+        if self.journal is not None:
+            self.journal.check_tail()
+
+    def session_state(self) -> dict:
+        """JSON-able snapshot of the *request-level* session state — what
+        recovery restores (DESIGN.md §10).  Device state (K/V pages) is
+        deliberately absent: decoded tokens are per-sequence deterministic,
+        so live sequences re-prefill their prompt and re-decode their
+        emitted span through the resume path instead of persisting pool
+        tensors."""
+        def entry(rid, prompt, max_new, out, out_n):
+            return {"rid": int(rid), "prompt": [int(t) for t in prompt],
+                    "max_new": int(max_new),
+                    "out": ([int(t) for t in out[:out_n]]
+                            if out is not None else [])}
+
+        # a slot mid-replay (out_n < _jskip) knows more tokens than it has
+        # re-decoded — snapshot the full journaled span, or a recovery from
+        # this snapshot would lose the gap (post-snapshot emit records only
+        # cover indices ≥ _jskip)
+        live = sorted(
+            (entry(self.rid[i], self._prompt[i],
+                   int(self._out_n[i]) + int(self.to_gen[i]),
+                   self._out[i],
+                   int(max(self._out_n[i], self._jskip[i])))
+             for i in np.flatnonzero(self.rid >= 0)),
+            key=lambda e: e["rid"])
+        return {
+            "live": live,
+            "resume": [entry(r.rid, r.prompt, r.max_new_tokens, r.out,
+                             r.out_n) for r in self._resume],
+            "queue": [entry(r.rid, r.prompt, r.max_new_tokens, r.out,
+                            r.out_n) for r in self.queue],
+            "finished": {str(k): v for k, v in self.finished.items()},
+            "next_rid": self._next_rid,
+            "predictor": {
+                "kind": self.length_predictor.name,
+                "value": getattr(self.length_predictor, "value", None),
+                "n_obs": int(getattr(self.length_predictor, "n_obs", 0))},
+            "counters": {
+                "preemptions": self.preemptions, "resumes": self.resumes,
+                "recomputed_tokens": self.recomputed_tokens,
+                "dispatches": self.dispatches,
+                "shed_count": self.shed_count,
+                "prefill_chunks_dispatched": self.prefill_chunks_dispatched,
+                "prefill_tokens_total": self._prefill_tokens_total,
+                "prefill_tokens_saved": self._prefill_tokens_saved},
+            "pool_stats": dataclasses.asdict(self.pool.stats),
+            "u_now": float(self.pool.u_now),
+            "prefix_tree": (self.prefix_cache.tree_state()
+                            if self.prefix_cache is not None else []),
+        }
+
+    def snapshot(self) -> int:
+        """Checkpoint the session through the manifest store and truncate
+        the journal behind it (recovery = snapshot + bounded replay)."""
+        from . import recovery  # deferred: recovery imports this module
+        return recovery.snapshot(self)
 
     # ------------------------------------------------------------- metrics
     def metrics(self) -> dict:
@@ -1234,7 +1524,20 @@ class PagedServingEngine:
             "preemptions": self.preemptions,
             "resumes": self.resumes,
             "recomputed_tokens": self.recomputed_tokens,
+            "dispatches": self.dispatches,
         }
+        if self.shed_queue_depth:
+            m["shed_count"] = self.shed_count
+        if self.injector is not None:
+            m["fault_retries"] = self.fault_retries_done
+            m["fault_unwinds"] = self.fault_unwinds
+        if self.journal is not None:
+            js = self.journal.core.stats
+            m["journal_records"] = self.journal.next_seq
+            m["journal_bytes"] = js.user_bytes
+            m["journal_wamp"] = js.wamp()   # stays 0: truncation moves nothing
+        if self.recovery is not None:
+            m["recovery"] = dict(self.recovery)
         if self.prefill_chunk:
             m["prefill_chunks_dispatched"] = self.prefill_chunks_dispatched
         if self.prefix_cache is not None:

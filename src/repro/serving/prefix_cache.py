@@ -225,6 +225,31 @@ class PrefixCache:
             if n is not self.root:
                 n.page = int(lut[n.page])
 
+    # ----------------------------------------------------------- persistence
+    def pages(self) -> list[int]:
+        """Every physical page the tree currently references."""
+        return [n.page for n in self.root.depth_first() if n is not self.root]
+
+    def tree_state(self) -> list[dict]:
+        """Serializable view of the radix tree, one entry per cached page
+        with its full token path — checkpointed through the session-snapshot
+        manifest (DESIGN.md §10).  Page *contents* live in device HBM and
+        are not persisted, so recovery starts with an empty tree and
+        re-warms it as recovered sequences re-prefill; the persisted view
+        records which prefixes were warm (forensics + warm-set metrics)."""
+        out: list[dict] = []
+
+        def rec(node, prefix):
+            for key, c in node.children.items():
+                path = prefix + list(key)
+                out.append({"tokens": [int(t) for t in path],
+                            "page": int(c.page),
+                            "last_use": int(c.last_use)})
+                rec(c, path)
+
+        rec(self.root, [])
+        return out
+
     # -------------------------------------------------------------- metrics
     def hit_rate(self) -> float:
         return self.hits / max(self.lookups, 1)

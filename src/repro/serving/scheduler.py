@@ -106,6 +106,27 @@ def make_length_predictor(name: str):
     return _PREDICTORS[name]()
 
 
+class AdmissionShed(RuntimeError):
+    """Raised by ``submit`` when the engine sheds load: admission has been
+    stalled past preemption and the queue is at its configured depth, so
+    accepting the request would only grow head-of-line latency.  Carries a
+    ``retry_after_s`` hint (DESIGN.md §10) derived from the waiting work and
+    the measured per-token decode time, the serving analogue of HTTP 503 +
+    Retry-After."""
+
+    def __init__(self, retry_after_s: float):
+        super().__init__(f"admission shed; retry after {retry_after_s:.3f}s")
+        self.retry_after_s = float(retry_after_s)
+
+
+def retry_after_estimate(n_waiting_tokens: int, tpot_s: float) -> float:
+    """Retry-after hint for a shed request: the time to decode the tokens
+    already waiting ahead of it at the measured time-per-output-token.
+    Crude by design — it only has to be the right order of magnitude for
+    the client's backoff to desynchronize retries from the overload peak."""
+    return max(float(n_waiting_tokens) * max(float(tpot_s), 1e-4), 1e-3)
+
+
 def choose_preempt_victims(k: int, *, recompute: np.ndarray,
                            freeable: np.ndarray,
                            remaining: np.ndarray) -> np.ndarray:

@@ -48,6 +48,9 @@ except ImportError:  # bare env: collect everything, skip property tests
                 pytest.importorskip("hypothesis")
             skipper.__name__ = fn.__name__
             skipper.__doc__ = fn.__doc__
+            # NOT __wrapped__: pytest would unwrap it and re-see the
+            # strategy parameters as fixtures
+            skipper._inner = fn   # reachable for manual example runs
             return skipper
         return deco
 

@@ -1,0 +1,512 @@
+"""Crash-safe serving (DESIGN.md §10): journaled session state, warm
+restart, fault injection.
+
+Contracts pinned here:
+
+* a SIGKILL-equivalent at *any* journal-record boundary recovers to
+  bit-identical output tokens (pool_dtype=float32) — ref and
+  pallas-interpret paths, and a 2-device mesh smoke;
+* the journal survives torn tails: reopening truncates the partial record
+  and replays the longest complete prefix (hypothesis property);
+* replay is a pure function and snapshot cuts commute: replaying a prefix
+  into a snapshot then replaying the tail equals replaying everything
+  (hypothesis property);
+* injected faults are handled at the engine layer: transients retry with
+  backoff, hard faults propagate, a prefill fault unwinds the admission
+  without leaking pages, and a deep queue sheds with a retry-after hint;
+* the checkpoint manager re-raises background-write errors instead of
+  losing checkpoints silently, and the restart driver accounts replayed
+  steps and exponential backoff.
+"""
+
+import json
+import shutil
+import struct
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+from repro.configs import get_config
+from repro.core.logstructure import JournalLog
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.fault import (FailureInjector, SimulatedFailure,
+                                     backoff_delay, run_with_restarts)
+from repro.models import Model
+from repro.serving import AdmissionShed, PagedServingEngine, recover_engine
+from repro.serving.recovery import replay
+
+_HDR = struct.Struct("<IIQ")   # [u32 len][u32 crc32][u64 seq] — JournalLog
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    return Model(get_config("qwen3-1.7b").smoke())
+
+
+@pytest.fixture(scope="module")
+def smoke_params(smoke_model):
+    return smoke_model.init(jax.random.PRNGKey(0))
+
+
+def _ekw(params, **kw):
+    base = dict(n_slabs=8, blocks_per_slab=2, page_T=8, max_batch=2,
+                max_seq=96, policy="mdc", params=params, compact_trigger=2,
+                compact_batch=2, pool_dtype=jnp.float32, stop_token=97,
+                preemption=True)
+    base.update(kw)
+    return base
+
+
+def _reqs(vocab, n=3, seed=11):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, vocab, size=int(rng.integers(5, 20))),
+             int(rng.integers(4, 7))) for _ in range(n)]
+
+
+def _drain(eng, cap=10_000):
+    for _ in range(cap):
+        eng.step()
+        if not eng.has_work():
+            return
+    raise AssertionError("engine did not drain")
+
+
+def _boundaries(jdir):
+    """Every record boundary across the journal's segment files, in order:
+    [(path, end_offset, record_dict)]."""
+    out = []
+    for f in sorted(Path(jdir).glob("journal_*.log")):
+        data, off = f.read_bytes(), 0
+        while off + _HDR.size <= len(data):
+            ln, _, _ = _HDR.unpack_from(data, off)
+            if off + _HDR.size + ln > len(data):
+                break
+            rec = json.loads(data[off + _HDR.size:off + _HDR.size + ln])
+            off += _HDR.size + ln
+            out.append((f, off, rec))
+    return out
+
+
+def _truncate_to(src, dst, path, end):
+    """Clone journal dir ``src`` to ``dst``, cut ``path`` at ``end`` bytes
+    and drop every later segment — a kill at that record boundary."""
+    shutil.rmtree(dst, ignore_errors=True)
+    shutil.copytree(src, dst)
+    files = sorted(Path(dst).glob("journal_*.log"))
+    cut = Path(dst) / path.name
+    with open(cut, "r+b") as fh:
+        fh.truncate(end)
+    for f in files:
+        if f.name > cut.name:
+            f.unlink()
+
+
+# ---------------------------------------------- kill at every boundary
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_kill_at_every_record_boundary_bit_identical(
+        smoke_model, smoke_params, tmp_path, use_pallas):
+    """The tentpole contract: for EVERY record boundary in a full session
+    journal, a recovery from the truncated journal drains to bit-identical
+    tokens for every request whose submit survived the cut (snapshots off
+    ⇒ full replay; float32 pool).  Refcounts audit clean after drain."""
+    kw = _ekw(smoke_params, use_pallas=use_pallas)
+    reqs = _reqs(smoke_model.cfg.vocab_size, n=2 if use_pallas else 3)
+
+    ref_eng = PagedServingEngine(smoke_model, **kw)
+    rids = [ref_eng.submit(p, n) for p, n in reqs]
+    _drain(ref_eng)
+    ref = {r: ref_eng.finished[r] for r in rids}
+
+    jd = tmp_path / "journal"
+    eng = PagedServingEngine(smoke_model, journal_dir=jd, **kw)
+    assert [eng.submit(p, n) for p, n in reqs] == rids
+    _drain(eng)
+    eng.audit()
+    assert {r: eng.finished[r] for r in rids} == ref  # journal is passive
+
+    bounds = _boundaries(jd)
+    assert len(bounds) >= 8, "session must journal a real record stream"
+    step = 3 if use_pallas else 1           # interpret mode is slow
+    subs_seen = 0
+    for bi, (path, end, rec) in enumerate(bounds):
+        if rec["t"] == "sub":
+            subs_seen += 1
+        if bi % step:
+            continue
+        cut = tmp_path / f"cut{bi}"
+        _truncate_to(jd, cut, path, end)
+        reng, rep = recover_engine(smoke_model, cut, **kw)
+        assert rep["journal_torn_bytes"] == 0   # boundary cut, not torn
+        _drain(reng)
+        reng.audit()
+        got = {r: reng.finished.get(r) for r in rids[:subs_seen]}
+        assert got == {r: ref[r] for r in rids[:subs_seen]}, \
+            f"kill at record {bi} ({rec['t']}) lost bit-identity"
+        if bi == (len(bounds) // 2 // step) * step:
+            # recovery is deterministic: a second restart from the same
+            # cut reproduces the whole metrics surface — Wamp, block
+            # writes, dispatch counts — not just the tokens
+            cut2 = tmp_path / f"cut{bi}b"
+            _truncate_to(jd, cut2, path, end)
+            reng2, _ = recover_engine(smoke_model, cut2, **kw)
+            _drain(reng2)
+            reng2.audit()
+            m1, m2 = reng.metrics(), reng2.metrics()
+            for m in (m1, m2):     # wall time is the one nondeterminism
+                m.get("recovery", {}).pop("recovery_wall_s", None)
+            assert m2 == m1
+            assert reng2.finished == reng.finished
+
+
+def test_double_kill_mid_replay(smoke_model, smoke_params, tmp_path):
+    """A second kill while the first recovery is still re-decoding must not
+    lose the gap between re-decoded and journaled tokens (the _jskip
+    span): recover, step ONCE (mid-replay), kill again, recover, drain."""
+    kw = _ekw(smoke_params)
+    reqs = _reqs(smoke_model.cfg.vocab_size, n=3, seed=29)
+    ref_eng = PagedServingEngine(smoke_model, **kw)
+    rids = [ref_eng.submit(p, n) for p, n in reqs]
+    _drain(ref_eng)
+    ref = {r: ref_eng.finished[r] for r in rids}
+
+    jd = tmp_path / "j"
+    eng = PagedServingEngine(smoke_model, journal_dir=jd, **kw)
+    for p, n in reqs:
+        eng.submit(p, n)
+    for _ in range(4):
+        eng.step()
+    eng = None                      # kill 1
+    eng, _ = recover_engine(smoke_model, jd, **kw)
+    eng.step()                      # mid-replay: re-decode has not caught up
+    eng = None                      # kill 2
+    eng, _ = recover_engine(smoke_model, jd, **kw)
+    _drain(eng)
+    eng.audit()
+    assert {r: eng.finished[r] for r in rids} == ref
+
+
+NDEV = len(jax.devices())
+needs2 = pytest.mark.skipif(
+    NDEV < 2, reason="needs 2 (virtual) devices: run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=2 "
+    "(CI multidevice job)")
+
+
+@needs2
+def test_recovery_mesh2_smoke(tmp_path):
+    """Warm restart under a 2-way tensor-parallel mesh: recovery is
+    host-side request bookkeeping, so the sharded engine recovers to the
+    same tokens the unkilled sharded engine produces."""
+    from repro.launch.mesh import make_serving_mesh
+    model = Model(get_config("qwen3-1.7b").tp_smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_serving_mesh(2)
+    kw = _ekw(params, mesh=mesh)
+    reqs = _reqs(model.cfg.vocab_size, n=3, seed=5)
+
+    ref_eng = PagedServingEngine(model, **kw)
+    rids = [ref_eng.submit(p, n) for p, n in reqs]
+    _drain(ref_eng)
+    ref = {r: ref_eng.finished[r] for r in rids}
+
+    jd = tmp_path / "j"
+    eng = PagedServingEngine(model, journal_dir=jd, **kw)
+    for p, n in reqs:
+        eng.submit(p, n)
+    for _ in range(3):
+        eng.step()
+    eng = None
+    eng, rep = recover_engine(model, jd, **kw)
+    assert rep["sequences_resumed"] + rep["requests_requeued"] >= 1
+    _drain(eng)
+    eng.audit()
+    assert {r: eng.finished[r] for r in rids} == ref
+
+
+# ------------------------------------------------- journal properties
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 10_000), st.integers(0, 2**31))
+def test_journal_torn_tail_recovers_prefix(n_rec, cut_back, seed):
+    """Truncating the live segment at ANY byte offset loses at most the
+    torn record: reopening replays exactly the longest complete prefix."""
+    root = Path(tempfile.mkdtemp())
+    try:
+        rng = np.random.default_rng(seed)
+        j = JournalLog(root / "j")
+        recs = [{"t": "x", "i": i, "d": rng.integers(0, 99, 3).tolist()}
+                for i in range(n_rec)]
+        for r in recs:
+            j.append_record(r)
+        j.close()
+        f = sorted((root / "j").glob("journal_*.log"))[-1]
+        size = f.stat().st_size
+        cut = max(0, size - (cut_back % (size + 1)))
+        with open(f, "r+b") as fh:
+            fh.truncate(cut)
+        # expected: complete records fitting wholly under the cut
+        keep, off = 0, 0
+        data = f.read_bytes()
+        while off + _HDR.size <= len(data):
+            ln = _HDR.unpack_from(data, off)[0]
+            if off + _HDR.size + ln > len(data):
+                break
+            off += _HDR.size + ln
+            keep += 1
+        j2 = JournalLog(root / "j")
+        got = [r for _, r in j2.iter_records()]
+        prior = len(got) - keep            # records in earlier (uncut) files
+        assert got[prior:] == recs[:keep] if prior == 0 else True
+        assert got == recs[:len(got)]      # always a strict prefix
+        assert j2.torn_bytes == cut - off
+        j2.check_tail()
+        # the journal stays appendable after truncation
+        j2.append_record({"t": "y"})
+        j2.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _synth_records(rng, n_req=5):
+    """A realistic record stream: submits, admissions, first tokens, emit
+    chunks, finishes — the shapes the engine journals."""
+    recs, live, done = [], {}, set()
+    for rid in range(n_req):
+        recs.append({"t": "sub", "rid": rid,
+                     "p": rng.integers(1, 50, int(rng.integers(2, 6))).tolist(),
+                     "n": int(rng.integers(2, 7))})
+    pending = list(range(n_req))
+    while pending or live:
+        if pending and (not live or rng.random() < 0.4):
+            rid = pending.pop(0)
+            recs.append({"t": "adm", "rid": rid, "slot": 0, "res": 0,
+                         "shr": 0, "pg": []})
+            tok = int(rng.integers(1, 50))
+            recs.append({"t": "first", "rid": rid, "tok": tok})
+            live[rid] = [tok]
+        elif live:
+            rids = list(live)
+            ks = []
+            for rid in rids:
+                cap = next(r["n"] for r in recs
+                           if r["t"] == "sub" and r["rid"] == rid)
+                k = rng.integers(1, 50,
+                                 int(rng.integers(1, 3))).tolist()
+                k = k[:cap - len(live[rid])]
+                live[rid].extend(k)
+                ks.append(k)
+            recs.append({"t": "emit", "r": rids, "k": ks})
+            for rid in rids:
+                cap = next(r["n"] for r in recs
+                           if r["t"] == "sub" and r["rid"] == rid)
+                if len(live[rid]) >= cap or (live[rid][-1] == 9
+                                             and rng.random() < 0.5):
+                    recs.append({"t": "fin", "rid": rid})
+                    del live[rid]
+                    done.add(rid)
+    return recs
+
+
+def _state_as_meta(state):
+    """Re-encode a replay() result as the session snapshot replay consumes
+    — what snapshot() would have captured at that cut."""
+    def entry(rid, e):
+        return {"rid": rid, "prompt": e["prompt"], "max_new": e["max_new"],
+                "out": e["out"]}
+    return {
+        "live": [entry(r, e) for r, e in state["pending"] if e["prio"]],
+        "resume": [],
+        "queue": [entry(r, e) for r, e in state["pending"] if not e["prio"]],
+        "finished": {str(k): v for k, v in state["finished"].items()},
+        "next_rid": state["next_rid"],
+    }
+
+
+def _canon(state):
+    return (dict(state["finished"]), dict(state["pending"]),
+            state["next_rid"])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31), st.integers(0, 200))
+def test_replay_snapshot_cut_commutes(seed, k):
+    """replay(snapshot(prefix), tail) == replay(None, prefix + tail) for
+    every cut point — the invariant that makes snapshot cadence a pure
+    replay-bound knob, and replay itself idempotent."""
+    recs = _synth_records(np.random.default_rng(seed))
+    k = min(k, len(recs))
+    full = replay(None, recs, stop_token=9)
+    assert _canon(full) == _canon(replay(None, recs, stop_token=9))  # pure
+    head = replay(None, recs[:k], stop_token=9)
+    stitched = replay(_state_as_meta(head), recs[k:], stop_token=9)
+    assert _canon(stitched) == _canon(full)
+
+
+# ------------------------------------------------- fault injection
+
+def test_transient_dispatch_fault_retried(smoke_model, smoke_params):
+    inj = FailureInjector(transient_at=(("dispatch", 2),))
+    kw = _ekw(smoke_params)
+    ref_eng = PagedServingEngine(smoke_model, **kw)
+    reqs = _reqs(smoke_model.cfg.vocab_size, seed=3)
+    rids = [ref_eng.submit(p, n) for p, n in reqs]
+    _drain(ref_eng)
+
+    eng = PagedServingEngine(smoke_model, injector=inj, fault_retries=2,
+                             fault_backoff_s=0.0, **kw)
+    for p, n in reqs:
+        eng.submit(p, n)
+    _drain(eng)
+    eng.audit()
+    assert eng.fault_retries_done >= 1
+    assert {r: eng.finished[r] for r in rids} == \
+        {r: ref_eng.finished[r] for r in rids}
+
+
+def test_hard_fault_propagates(smoke_model, smoke_params):
+    inj = FailureInjector(fail_at=(("dispatch", 1),))
+    eng = PagedServingEngine(smoke_model, injector=inj,
+                             **_ekw(smoke_params))
+    for p, n in _reqs(smoke_model.cfg.vocab_size):
+        eng.submit(p, n)
+    with pytest.raises(SimulatedFailure):
+        _drain(eng)
+
+
+def test_exhausted_retries_escalate(smoke_model, smoke_params):
+    """Three transients in a row on the same op exceed fault_retries=1 and
+    the TransientFault escapes — bounded retry, not an infinite loop."""
+    inj = FailureInjector(transient_at=(("host_sync", 1), ("host_sync", 2),
+                                        ("host_sync", 3)))
+    eng = PagedServingEngine(smoke_model, injector=inj, fault_retries=1,
+                             fault_backoff_s=0.0, **_ekw(smoke_params))
+    for p, n in _reqs(smoke_model.cfg.vocab_size):
+        eng.submit(p, n)
+    from repro.distributed.fault import TransientFault
+    with pytest.raises(TransientFault):
+        _drain(eng)
+
+
+def test_prefill_fault_unwinds_admission(smoke_model, smoke_params):
+    """A transient during prefill admission unwinds the partial start (no
+    page leaks — audit proves it) and the request is requeued and served."""
+    inj = FailureInjector(transient_at=(("prefill", 0),))
+    kw = _ekw(smoke_params)
+    ref_eng = PagedServingEngine(smoke_model, **kw)
+    reqs = _reqs(smoke_model.cfg.vocab_size, seed=7)
+    rids = [ref_eng.submit(p, n) for p, n in reqs]
+    _drain(ref_eng)
+
+    eng = PagedServingEngine(smoke_model, injector=inj, fault_retries=0,
+                             **kw)
+    for p, n in reqs:
+        eng.submit(p, n)
+    _drain(eng)
+    eng.audit()
+    assert eng.fault_unwinds >= 1
+    assert {r: eng.finished[r] for r in rids} == \
+        {r: ref_eng.finished[r] for r in rids}
+    assert eng.metrics()["free_blocks"] == eng.pool.n_slabs * eng.pool.S
+
+
+def test_journal_fault_retried_and_recoverable(smoke_model, smoke_params,
+                                               tmp_path):
+    inj = FailureInjector(transient_at=(("journal", 1),))
+    kw = _ekw(smoke_params)
+    eng = PagedServingEngine(smoke_model, journal_dir=tmp_path / "j",
+                             injector=inj, fault_retries=2,
+                             fault_backoff_s=0.0, **kw)
+    reqs = _reqs(smoke_model.cfg.vocab_size, seed=13)
+    rids = [eng.submit(p, n) for p, n in reqs]
+    _drain(eng)
+    assert eng.fault_retries_done >= 1
+    ref = {r: eng.finished[r] for r in rids}
+    # the retried journal is complete: a recovery replays all finishes
+    reng, _ = recover_engine(smoke_model, tmp_path / "j", **kw)
+    assert {r: reng.finished[r] for r in rids} == ref
+
+
+def test_load_shedding_retry_after(smoke_model, smoke_params):
+    """Once admission stalls and the queue is at the shed depth, submit()
+    raises AdmissionShed with a positive retry-after estimate; after the
+    backlog drains, the same request is accepted."""
+    # pool of 6 pages (48 tokens): one 20-token request fits alongside the
+    # compaction reserve, two do not — a free slot with no pages is the
+    # capacity stall that arms shedding
+    eng = PagedServingEngine(smoke_model, shed_queue_depth=2,
+                             **_ekw(smoke_params, n_slabs=3, max_batch=2,
+                                    max_seq=48, compact_trigger=1,
+                                    preemption=False))
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        eng.submit(rng.integers(1, smoke_model.cfg.vocab_size, 20), 6)
+    for _ in range(3):
+        eng.step()              # stalls admission: pages exhausted, queue deep
+    assert eng._admit_stalled and len(eng.queue) >= 2
+    prompt = rng.integers(1, smoke_model.cfg.vocab_size, 20)
+    with pytest.raises(AdmissionShed) as ei:
+        eng.submit(prompt, 6)
+    assert ei.value.retry_after_s > 0
+    assert eng.shed_count == 1
+    _drain(eng)
+    rid = eng.submit(prompt, 6)    # backlog gone: accepted now
+    _drain(eng)
+    assert rid in eng.finished
+
+
+# ------------------------------------- checkpoint/restart satellites
+
+def test_manager_async_save_error_reraises(tmp_path, monkeypatch):
+    """A failed background checkpoint write surfaces on the next wait() or
+    save() instead of vanishing with the daemon thread."""
+    mgr = CheckpointManager(tmp_path / "m", keep_last=2,
+                            seg_bytes=16 << 10, chunk_bytes=4 << 10)
+    monkeypatch.setattr(mgr.store, "save",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            IOError("disk gone")))
+    mgr.save(1, {"w": np.ones(4, np.float32)})
+    with pytest.raises(RuntimeError, match="background checkpoint save"):
+        mgr.wait()
+    # the error is consumed: the manager is usable again
+    monkeypatch.undo()
+    mgr.save(2, {"w": np.ones(4, np.float32)})
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_backoff_delay_growth_and_jitter():
+    assert backoff_delay(5, base_s=0.0) == 0.0
+    bare = [backoff_delay(a, base_s=0.1, jitter=0.0) for a in range(4)]
+    assert bare == [pytest.approx(0.1 * 2 ** a) for a in range(4)]
+    rng = np.random.default_rng(0)
+    d = backoff_delay(2, base_s=0.1, factor=2.0, jitter=0.25, rng=rng)
+    assert 0.4 <= d <= 0.5 * 1.000001
+
+
+def test_run_with_restarts_accounts_replayed_steps():
+    """Each restart re-executes the span between the restored step and the
+    failure step; the driver books it in stats.steps_replayed."""
+    fails = {"left": 2}
+
+    def make_state(_attempt):
+        return {"step": 0}
+
+    def loop(state):
+        if fails["left"]:
+            fails["left"] -= 1
+            raise SimulatedFailure("node lost", step=5)
+        return "done"
+
+    out, stats = run_with_restarts(make_state, loop, backoff_s=0.0,
+                                   restored_step=lambda s: s["step"])
+    assert out == "done"
+    assert stats.restarts == 2
+    assert stats.steps_replayed == 10      # 2 × (failed_at=5 − restored=0)

@@ -139,6 +139,7 @@ def test_paged_engine_matches_dense_decode(smoke_model):
     got = eng.finished[rid]
     assert got == want, (got, want)
     eng.pool.check_invariants()
+    eng.audit()
 
 
 def test_engine_continuous_batching_many_requests(smoke_model):
@@ -156,6 +157,7 @@ def test_engine_continuous_batching_many_requests(smoke_model):
     for rid, n in zip(rids, news):
         assert len(eng.finished[rid]) == n
     eng.pool.check_invariants()
+    eng.audit()
     m = eng.metrics()
     assert m["blocks_written"] > 0
     assert m["free_blocks"] == eng.pool.n_slabs * eng.pool.S  # all freed
