@@ -436,7 +436,8 @@ def _e2e_row(label: str, e2e: dict, **extra) -> dict:
             "tok_per_s": round(e2e["tok_per_s"], 1), **extra}
 
 
-def run(quick: bool = True, mesh_devices: int = 0) -> list[dict]:
+def run(quick: bool = True, mesh_devices: int = 0,
+        streams: int | None = None) -> list[dict]:
     rows = [pool_traffic(p, quick=quick)
             for p in ("mdc", "greedy", "cost_benefit", "age")]
     # compaction-heavy stress row: the block-manager wall-clock tracker.
@@ -444,12 +445,14 @@ def run(quick: bool = True, mesh_devices: int = 0) -> list[dict]:
     # compaction cycles (a smaller stream never fills the 4096-block pool)
     rows.append(pool_traffic("mdc", n_slabs=256, bps=16, n_seqs=4000,
                              quick=False, label="mdc (heavy)"))
-    # one end-to-end engine run (model compute + pool), mdc only
+    # one end-to-end engine run (model compute + pool), mdc only.
+    # ``streams`` overrides the engine's death-stream count (default 4);
+    # Wamp deltas per stream count live in bench_streams, not here.
     from repro.launch.serve import serve_run
     model = Model(get_config("qwen3-1.7b").smoke())
     params = model.init(jax.random.PRNGKey(0))
     e2e = serve_run(policy="mdc", requests=8 if quick else 20, params=params,
-                    model=model, verbose=False)
+                    model=model, verbose=False, streams=streams)
     rows.append(_e2e_row("mdc (e2e engine)", e2e,
                          tok_per_s_pre_multistep=TOK_PER_S_PRE_MULTISTEP))
     # shared-prefix workload: cold vs prefix-cached engine, bit-identity
@@ -651,9 +654,10 @@ def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
         f.write("\n".join(lines) + "\n")
 
 
-def main(quick: bool = True, check: bool = False, mesh: int = 0) -> None:
+def main(quick: bool = True, check: bool = False, mesh: int = 0,
+         streams: int | None = None) -> None:
     baseline = _committed_baseline()  # read BEFORE save_json overwrites it
-    rows = run(quick, mesh_devices=mesh)
+    rows = run(quick, mesh_devices=mesh, streams=streams)
     print_table("Serving KV pool — block-move overhead per policy", rows,
                 ["policy", "blocks_written", "blocks_moved", "wamp",
                  "mean_E", "compactions", "blocks_per_s", "tok_per_s",
@@ -678,6 +682,10 @@ def cli() -> None:
                          "devices and record per-device tok/s (on CPU "
                          "export XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N first)")
+    ap.add_argument("--streams", type=int, default=None, metavar="K",
+                    help="death-stream count for the e2e engine row "
+                         "(default: engine default of 4; see "
+                         "bench_streams for the k=1 vs k=4 Wamp deltas)")
     ap.add_argument("--chaos", action="store_true",
                     help="run only the crash-recovery / fault-injection "
                          "scenario and gate recovery time against the "
@@ -687,7 +695,8 @@ def cli() -> None:
     if args.chaos:
         chaos_main(quick=not args.full)
         return
-    main(quick=not args.full, check=args.check, mesh=args.mesh)
+    main(quick=not args.full, check=args.check, mesh=args.mesh,
+         streams=args.streams)
 
 
 if __name__ == "__main__":

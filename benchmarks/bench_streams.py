@@ -1,0 +1,258 @@
+"""Death-stream separation (SepBIT) benchmark: Wamp with k placement streams
+vs the single-stream log, against the paper's §3 hot/cold analytic optimum.
+
+Simulator rows run the direct-append streams mode (``SimConfig.streams``) on
+the paper's hot/cold and TPC-C workloads; the hot/cold k=4 row reports
+``gap_closed`` — the fraction of the distance from the single-stream Wamp
+down to the §3 oracle (``min_wamp_hotcold``) that the streams close.
+
+Serving rows run the KV pool's death streams end to end, streams=1 vs 4:
+the closed-loop shared_prefix scenario (a cached system prompt — the KV
+pool's genuinely cold data) and the open-loop overload scenario over the
+same system-prompt mix.  Placement must move page ids and never logits, so
+the shared_prefix row asserts decoded tokens bit-identical across stream
+counts and the overload row asserts the token stream unchanged.
+
+``--check`` gates against the committed experiments/bench/bench_streams.json
+(seed-if-missing, like the serving tok/s gate): the hot/cold separation win
+and its oracle-gap closure must not erode.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.analysis import min_wamp_hotcold
+from repro.core.simulator import run_policy
+
+from ._util import OUT_DIR, _fmt, print_table, save_json
+
+# the paper's hot/cold mix: 80% of updates to 20% of the data
+HOT_UPD, HOT_DATA = 0.8, 0.2
+
+
+def sim_rows(quick: bool = True) -> list[dict]:
+    nseg, S, mult = (256, 512, 20) if not quick else (192, 256, 12)
+    oracle = min_wamp_hotcold(0.8, HOT_UPD, HOT_DATA)
+    rows = []
+    for wl in ("hot_cold", "tpcc"):
+        per_k = {}
+        for k in (1, 4):
+            t0 = time.time()
+            st = run_policy("mdc", wl, nseg=nseg, S=S, F=0.8,
+                            multiplier=mult, streams=k, seed=0)
+            per_k[k] = st
+            row = dict(scenario=f"sim {wl}", streams=k,
+                       wamp=round(st.wamp(), 4),
+                       gc_moves=st.gc_moves, cleanings=st.cleanings,
+                       mean_E=round(st.mean_E(), 3),
+                       stream_writes=list(st.stream_writes),
+                       stream_moves=list(st.stream_moves),
+                       wall_s=round(time.time() - t0, 1))
+            if wl == "hot_cold":
+                row["oracle"] = round(oracle, 4)
+                if k > 1:
+                    w1 = per_k[1].wamp()
+                    row["gap_closed"] = round(
+                        (w1 - st.wamp()) / max(w1 - oracle, 1e-9), 3)
+            rows.append(row)
+    return rows
+
+
+def serve_rows(quick: bool = True) -> list[dict]:
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.serve import serve_run
+    from repro.models import Model
+    from repro.serving import PagedServingEngine
+
+    model = Model(get_config("qwen3-1.7b").smoke())
+    params = model.init(jax.random.PRNGKey(0))
+    rows = []
+
+    # shared_prefix, closed loop: every prompt opens with the same system
+    # prompt (cached, refcounted pages — the genuinely cold data of a KV
+    # pool).  Wamp may move with the stream count; tokens may not
+    # (placement redirects page ids, never values), asserted on the full
+    # decoded lists, which serve_run does not expose — hence the direct
+    # engine loop.
+    import jax.numpy as jnp
+    n_req = 10 if quick else 24
+    rng = np.random.default_rng(11)
+    sys_prompt = np.random.default_rng(99).integers(
+        1, model.cfg.vocab_size, size=32)
+    reqs = [(np.concatenate([sys_prompt, rng.integers(
+                 1, model.cfg.vocab_size,
+                 size=int(rng.integers(4, 28)))]).astype(np.int32),
+             int(rng.integers(4, 25))) for _ in range(n_req)]
+    tokens_by_k = {}
+    for k in (1, 4):
+        eng = PagedServingEngine(
+            model, n_slabs=10, blocks_per_slab=4, page_T=8, max_batch=4,
+            max_seq=128, policy="mdc", params=params, compact_trigger=2,
+            compact_batch=3, pool_dtype=jnp.float32, prefix_cache=True,
+            streams=k, warmup=True)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        t0 = time.time()
+        while eng.has_work():
+            eng.step()
+        dt = time.time() - t0
+        m = eng.metrics()
+        eng.pool.check_invariants()
+        tokens_by_k[k] = [eng.finished[r] for r in rids]
+        toks = sum(len(v) for v in tokens_by_k[k])
+        rows.append(dict(scenario="serve shared_prefix", streams=k,
+                         wamp=round(m["wamp"], 3),
+                         blocks_written=m["blocks_written"],
+                         blocks_moved=m["blocks_moved"],
+                         compactions=m["compactions"],
+                         hit_rate=round(m.get("prefix_hit_rate", 0.0), 2),
+                         tok_per_s=round(toks / dt, 1),
+                         stream_writes=m["stream_writes"],
+                         stream_moves=m["stream_moves"]))
+    assert tokens_by_k[1] == tokens_by_k[4], \
+        "death streams changed decoded tokens (must be bit-identical)"
+    rows[-2]["bit_identical"] = rows[-1]["bit_identical"] = True
+
+    # overload, open loop: Poisson arrivals above pool capacity with the
+    # same 32-token system prompt — the overload mix where separation has
+    # signal (the pinned prefix slab must stop being dragged through
+    # every compaction).  The pool geometry is calibrated: tighter pools
+    # saturate at ~100% occupancy where no placement can help, looser
+    # ones never compact.  Same config under --full for that reason.
+    for k in (1, 4):
+        e = serve_run(policy="mdc", requests=24, params=params,
+                      model=model, verbose=False, seed=7, n_slabs=13,
+                      blocks_per_slab=4, max_batch=4, stop_token=328,
+                      preemption=True, arrival_rate=200.0, prefill_chunk=8,
+                      prefix_cache=True, shared_prefix_len=32, streams=k)
+        rows.append(dict(scenario="serve overload", streams=k,
+                         wamp=round(e["wamp"], 3),
+                         blocks_written=e["blocks_written"],
+                         blocks_moved=e["blocks_moved"],
+                         compactions=e["compactions"],
+                         tok_per_s=round(e["tok_per_s"], 1),
+                         tokens=e["tokens"],
+                         ttft_p99_ms=e["ttft_p99_ms"],
+                         preemptions=e["preemptions"]))
+    ov = [r for r in rows if r["scenario"] == "serve overload"]
+    assert ov[0]["tokens"] == ov[1]["tokens"], \
+        "death streams changed the overload token stream"
+    return rows
+
+
+def _row(rows: list[dict], scenario: str, streams: int) -> dict | None:
+    return next((r for r in rows if r.get("scenario") == scenario
+                 and r.get("streams") == streams), None)
+
+
+def _check_gate(rows: list[dict], baseline: list[dict]) -> None:
+    """Wamp regression gates vs the committed bench_streams.json.
+
+    Absolute invariants (assert on every run, no baseline needed): k=4
+    strictly beats the single stream on hot/cold AND closes at least half
+    the gap to the §3 oracle; the overload pool Wamp does not get worse
+    with streams on.  Relative gate (needs a committed baseline; seeds
+    otherwise): the k=4 hot/cold Wamp must not creep up more than 10%.
+    """
+    hc4 = _row(rows, "sim hot_cold", 4)
+    hc1 = _row(rows, "sim hot_cold", 1)
+    if hc4 is None or hc1 is None:
+        raise SystemExit("[check] sim hot_cold rows missing — "
+                         "the benchmark itself is broken")
+    print(f"[check] hot_cold wamp: k=1 {hc1['wamp']:.3f}, "
+          f"k=4 {hc4['wamp']:.3f}, oracle {hc4['oracle']:.3f}, "
+          f"gap closed {hc4['gap_closed']:.0%}")
+    if hc4["wamp"] >= hc1["wamp"]:
+        raise SystemExit("death streams no longer beat the single-stream "
+                         f"log on hot/cold ({hc4['wamp']} >= {hc1['wamp']})")
+    if hc4["gap_closed"] < 0.5:
+        raise SystemExit(
+            f"hot/cold separation win eroded: k=4 closes only "
+            f"{hc4['gap_closed']:.0%} of the single-stream→oracle gap "
+            f"(acceptance floor: 50%)")
+    ov1, ov4 = _row(rows, "serve overload", 1), _row(rows, "serve overload", 4)
+    if ov1 and ov4:
+        print(f"[check] overload wamp: streams=1 {ov1['wamp']:.3f}, "
+              f"streams=4 {ov4['wamp']:.3f}")
+        if ov4["wamp"] >= ov1["wamp"]:
+            raise SystemExit(
+                f"serving overload Wamp no longer improves with streams "
+                f"({ov4['wamp']} >= {ov1['wamp']}): the pinned-prefix "
+                f"slab is being dragged through compactions again")
+    base4 = _row(baseline, "sim hot_cold", 4)
+    if base4 is None or not base4.get("wamp"):
+        print("[check] no committed baseline in experiments/bench/"
+              "bench_streams.json — seeded it from this run (commit that "
+              "file to arm the Wamp regression gate)")
+        return
+    ceiling = 1.10 * base4["wamp"]
+    print(f"[check] hot_cold k=4 wamp {hc4['wamp']:.3f} vs committed "
+          f"{base4['wamp']:.3f} (ceiling {ceiling:.3f})")
+    if hc4["wamp"] > ceiling:
+        raise SystemExit(
+            f"stream-placement Wamp regression: hot_cold k=4 measured "
+            f"{hc4['wamp']:.3f} exceeds {ceiling:.3f} "
+            f"(= 1.10 x committed {base4['wamp']:.3f}; the simulator is "
+            f"deterministic, so this is a code change, not noise)")
+
+
+def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
+    """Per-stream write/move columns + Wamp deltas in the CI job summary."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    base = {(r.get("scenario"), r.get("streams")): r for r in baseline}
+    lines = ["### bench_streams vs committed baseline", "",
+             "| scenario | k | Wamp | base | Δ | oracle | gap closed "
+             "| writes/stream | moves/stream |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        b = base.get((r.get("scenario"), r.get("streams")), {})
+        delta = ("—" if r.get("wamp") is None or b.get("wamp") is None
+                 else f"{r['wamp'] - b['wamp']:+.3f}")
+        sw = "/".join(str(x) for x in r.get("stream_writes", [])) or "—"
+        sm = "/".join(str(x) for x in r.get("stream_moves", [])) or "—"
+        lines.append(
+            f"| {r['scenario']} | {r['streams']} | {_fmt(r.get('wamp'))} "
+            f"| {_fmt(b.get('wamp'))} | {delta} | {_fmt(r.get('oracle'))} "
+            f"| {_fmt(r.get('gap_closed'))} | {sw} | {sm} |")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main(quick: bool = True, check: bool = False) -> None:
+    path = OUT_DIR / "bench_streams.json"
+    baseline = (json.loads(path.read_text()).get("rows", [])
+                if path.exists() else [])
+    rows = sim_rows(quick) + serve_rows(quick)
+    print_table("Death-stream separation — Wamp per stream count", rows,
+                ["scenario", "streams", "wamp", "oracle", "gap_closed",
+                 "gc_moves", "blocks_written", "blocks_moved", "compactions",
+                 "hit_rate", "tok_per_s", "ttft_p99_ms", "preemptions",
+                 "bit_identical", "wall_s"])
+    save_json("bench_streams", rows, {"quick": quick})
+    _github_step_summary(rows, baseline)
+    if check:
+        _check_gate(rows, baseline)
+
+
+def cli() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale store and request streams (slow)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail if the separation win regresses vs the "
+                         "committed experiments/bench/bench_streams.json")
+    args = ap.parse_args()
+    main(quick=not args.full, check=args.check)
+
+
+if __name__ == "__main__":
+    cli()

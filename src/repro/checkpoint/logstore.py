@@ -37,7 +37,7 @@ import pathlib
 
 import numpy as np
 
-from ..core.logstructure import USED, ByteLog, StoreStats
+from ..core.logstructure import USED, ByteLog, Placement, StoreStats
 
 __all__ = ["LogStructuredCheckpointStore", "ChunkVersion", "StoreStats"]
 
@@ -110,7 +110,8 @@ class LogStructuredCheckpointStore:
 
     def __init__(self, root: str | pathlib.Path, *, seg_bytes: int = 8 << 20,
                  chunk_bytes: int = 1 << 20, policy: str = "mdc",
-                 gc_dead_frac: float = 0.35, gc_batch: int = 4):
+                 gc_dead_frac: float = 0.35, gc_batch: int = 4,
+                 streams: int = 4):
         self.root = pathlib.Path(root)
         (self.root / "segments").mkdir(parents=True, exist_ok=True)
         (self.root / "manifests").mkdir(parents=True, exist_ok=True)
@@ -119,12 +120,12 @@ class LogStructuredCheckpointStore:
         self.policy = policy
         self.gc_dead_frac = gc_dead_frac
         self.gc_batch = gc_batch
+        self.streams = max(1, int(streams))
 
-        self.core = ByteLog()
+        self.core = ByteLog(n_streams=self.streams)
         self.segments: dict[int, _SegView] = {}
         self.versions: dict[str, list[ChunkVersion]] = {}  # key -> versions
         self.steps: dict[int, dict] = {}  # step -> manifest dict
-        self._open_sid: int | None = None
         self._load_state()
 
     @property
@@ -143,11 +144,12 @@ class LogStructuredCheckpointStore:
         state = {
             "u_now": self.core.u_now,
             "next_sid": self.core.next_sid,
-            "open_sid": self._open_sid,
+            "open_sids": [int(x) for x in self.core.streams.open],
             "segments": {
                 str(s.sid): dict(written=s.written, live_bytes=s.live_bytes,
                                  live_chunks=s.live_chunks, up2=s.up2,
-                                 up2_sum=s.up2_sum, sealed=s.sealed)
+                                 up2_sum=s.up2_sum, sealed=s.sealed,
+                                 stream=int(self.core.seg_stream[s.sid]))
                 for s in self.segments.values()},
             "versions": {
                 key: [dict(seg=v.seg, offset=v.offset, size=v.size, sha=v.sha,
@@ -166,12 +168,22 @@ class LogStructuredCheckpointStore:
             return
         state = json.loads(p.read_text())
         self.core.u_now = state["u_now"]
-        self._open_sid = state["open_sid"]
         for sid_s, d in state["segments"].items():
             sid = int(sid_s)
             self.core.restore_segment(sid, **d)
             self.segments[sid] = _SegView(self.core, sid, self._seg_path(sid))
             self._truncate_torn_tail(self.segments[sid])
+        if "open_sids" not in state and state.get("open_sid") is not None:
+            # legacy single-open-segment state: the open segment is stream 0
+            sid = int(state["open_sid"])
+            self.core.seg_stream[sid] = 0
+            self.core.streams.open[0] = sid
+        # a store reopened with fewer streams can leave unsealed segments
+        # that no stream claims — seal them so GC can reclaim their space
+        claimed = {int(x) for x in self.core.streams.open if int(x) >= 0}
+        for sid, seg in self.segments.items():
+            if not seg.sealed and sid not in claimed:
+                self.core.seal(sid)
         self.core.next_sid = max(self.core.next_sid, state["next_sid"])
         for key, vs in state["versions"].items():
             self.versions[key] = [
@@ -208,32 +220,32 @@ class LogStructuredCheckpointStore:
                 f"committed state ({size} < {seg.written} bytes)")
 
     # -------------------------------------------------------------- segments
-    def _open_segment(self) -> _SegView:
-        if self._open_sid is not None:
-            return self.segments[self._open_sid]
-        sid = self.core.alloc()
-        seg = _SegView(self.core, sid, self._seg_path(sid))
-        seg.path.write_bytes(b"")
-        self.segments[sid] = seg
-        self._open_sid = sid
-        return seg
+    def _open_segment(self, stream: int = 0) -> _SegView:
+        sid, fresh = self.core.open_stream(stream)
+        if fresh:
+            seg = _SegView(self.core, sid, self._seg_path(sid))
+            seg.path.write_bytes(b"")
+            self.segments[sid] = seg
+        return self.segments[sid]
 
     def _seal(self, sid: int) -> None:
         self.core.seal(sid)
-        if self._open_sid == sid:
-            self._open_sid = None
 
-    def _append(self, data: bytes, up2: float,
-                kind: str = "user") -> tuple[int, int]:
-        """Append one chunk payload; returns (segment id, offset)."""
-        seg = self._open_segment()
+    def _append(self, data: bytes, p: Placement) -> tuple[int, int]:
+        """Route and append one chunk payload; returns (segment id, offset).
+
+        The :class:`Placement` hint carries the exact u_p2 tag and the
+        predicted invalidation time; routing (which of the k death-stream
+        segment files receives the chunk) happens in the shared core."""
+        stream = int(self.core.route(p, 1)[0])
+        seg = self._open_segment(stream)
         if seg.written + len(data) > self.seg_bytes and seg.written > 0:
             self._seal(seg.sid)
-            seg = self._open_segment()
+            seg = self._open_segment(stream)
         with seg.path.open("ab") as f:
             off = f.tell()
             f.write(data)
-        self.core.append_bytes(seg.sid, len(data), up2, kind=kind)
+        self.core.append_bytes(seg.sid, len(data), p)
         if seg.written >= self.seg_bytes:
             self._seal(seg.sid)
         return seg.sid, off
@@ -244,9 +256,11 @@ class LogStructuredCheckpointStore:
         """Incremental save.  ``leaves``: flat {path: host ndarray}.  Returns
         the manifest.  ``keep_last``>0 drops older steps (their chunk pins)."""
         manifest = {"step": step, "leaves": {}}
-        batch_up2: list[float] = []
-        first_writes: list[ChunkVersion] = []
-
+        # Phase 1 — diff against the latest versions.  The §5.2.2 first-write
+        # u_p2 (coldest of the batch) is only known once the whole batch has
+        # been scanned, so new chunks are collected here and appended in
+        # phase 2 with their *exact* tag — no placeholder-then-retag.
+        pending: list[tuple[str, bytes, str, float | None]] = []
         for path, arr in leaves.items():
             arr = np.ascontiguousarray(arr)
             raw = arr.tobytes()
@@ -256,7 +270,7 @@ class LogStructuredCheckpointStore:
                 data = raw[ci * self.chunk_bytes:(ci + 1) * self.chunk_bytes]
                 key = f"{path}#{ci}"
                 sha = hashlib.sha1(data).hexdigest()
-                vs = self.versions.setdefault(key, [])
+                vs = self.versions.get(key)
                 latest = vs[-1] if vs else None
                 if latest is not None and latest.sha == sha:
                     latest.pins.add(step)       # unchanged: re-reference
@@ -268,25 +282,24 @@ class LogStructuredCheckpointStore:
                     self._unpin_from_latest(latest, step)
                 else:
                     up2 = None                   # first write: assign below
-                batch_up2.append(up2)
-                sid, off = self._append(data, up2 if up2 is not None else 0.0)
-                v = ChunkVersion(key, sid, off, len(data), sha,
-                                 up2 if up2 is not None else 0.0, {step})
-                vs.append(v)
-                if up2 is None:
-                    first_writes.append(v)
+                pending.append((key, data, sha, up2))
                 chunks.append(key)
             manifest["leaves"][path] = {
                 "dtype": str(arr.dtype), "shape": list(arr.shape),
                 "chunks": chunks}
 
-        # §5.2.2 first write: assign the coldest u_p2 seen in this batch
-        # (they were appended with a 0.0 placeholder; retag + fix seg sums)
-        known = [u for u in batch_up2 if u is not None]
+        # Phase 2 — append with exact tags.  est_death is one mean supersede
+        # interval ahead of now (§5.2.2's estimator); first writes carry the
+        # batch-coldest tag, which routes them to the cold streams where
+        # never-changing leaves (frozen params) belong.
+        known = [u for _, _, _, u in pending if u is not None]
         cold = min(known) if known else _FIRST_WRITE_COLD
-        for v in first_writes:
-            v.up2 = cold
-            self.core.retag_up2(v.seg, cold)
+        for key, data, sha, up2 in pending:
+            tag = cold if up2 is None else up2
+            sid, off = self._append(data, Placement(
+                up2=tag, est_death=2.0 * self.u_now - tag))
+            self.versions.setdefault(key, []).append(
+                ChunkVersion(key, sid, off, len(data), sha, tag, {step}))
 
         self.steps[step] = manifest
         json_path = self.root / "manifests" / f"step_{step:09d}.json"
@@ -334,9 +347,8 @@ class LogStructuredCheckpointStore:
     def _delete_segment(self, sid: int) -> None:
         self.segments[sid].path.unlink(missing_ok=True)
         self.core.release(np.array([sid]))
+        self.core.streams.clear_seg(sid)
         del self.segments[sid]
-        if self._open_sid == sid:
-            self._open_sid = None
 
     # -------------------------------------------------------------------- gc
     def dead_frac(self) -> float:
@@ -361,26 +373,33 @@ class LogStructuredCheckpointStore:
         victims = self.select_victims(k or self.gc_batch)
         if not victims:
             return 0
-        movers: list[tuple[ChunkVersion, bytes, float]] = []
+        movers: list[tuple[ChunkVersion, bytes, float, int]] = []
         for sid in victims:
             seg = self.segments[sid]
             data = seg.path.read_bytes()
             up2 = seg.up2
+            src = int(self.core.seg_stream[sid])
             for vs in self.versions.values():
                 for v in vs:
                     if v.seg == sid:
                         # §5.2.2 GC write: u_p2 from the containing segment
                         movers.append((v, data[v.offset:v.offset + v.size],
-                                       up2))
+                                       up2, src))
         # §5.3: sort survivors by u_p2 (hottest together)
         movers.sort(key=lambda t: -t[2])
+        # SepBIT survivor inference: each mover re-enters one stream colder
+        # than the one that wrote it (pre-stream segments route by est_death)
+        demoted = self.core.demote_streams(
+            np.array([m[3] for m in movers], dtype=np.int64),
+            np.array([2.0 * self.u_now - m[2] for m in movers]))
         # one clean cycle: core accounts E / moved bytes and frees the victims
         self.core.evacuate_accounting(np.asarray(victims))
         for sid in victims:
             self._delete_segment(sid)  # release is idempotent on FREE segs
-        for v, data, up2 in movers:
+        for (v, data, up2, _), stream in zip(movers, demoted):
             v.up2 = up2
-            sid, off = self._append(data, up2, kind="gc")
+            sid, off = self._append(data, Placement(
+                up2=up2, stream=int(stream), kind="gc"))
             v.seg, v.offset = sid, off
         return len(victims)
 

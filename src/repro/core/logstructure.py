@@ -28,6 +28,15 @@ each frontend decides what an "update" is.
 
 Victim selection is delegated to :mod:`repro.core.policies` so the np/jnp
 policy twins stay the single source of priority keys.
+
+Placement (death-stream separation, SepBIT arXiv:2104.12425): every log keeps
+a :class:`StreamSet` of ``k`` open segments and routes each append by its
+predicted invalidation time — running quantiles of ``est_death`` pick the
+stream, so items that die together are co-located and segments die
+nearly-whole.  Cleaning survivors re-route one stream *colder* (surviving a
+clean is itself a coldness signal; re-moved items step colder again).  All
+frontends pass hints through one :class:`Placement` object consumed by
+:meth:`LogStructureBase.route`.
 """
 
 from __future__ import annotations
@@ -68,9 +77,18 @@ class Clock:
 class StoreStats:
     """Cumulative counters in frames *and* bytes (paper eq. 2).
 
-    Canonical fields below; the per-frontend vocabularies (blocks/slabs for
-    the KV pool, chunks/bytes for the checkpoint store) are read-only alias
-    properties so every frontend reports the same quantities.
+    Canonical fields below; the per-frontend vocabularies (frames for the
+    core, blocks/slabs for the KV pool, chunks/bytes for the checkpoint
+    store) are read-only alias properties so every frontend reports the same
+    quantities.  ``user_writes``/``gc_moves``/``deaths`` count *items*
+    (frames/blocks/chunks); the ``*_bytes`` twins count bytes — the alias
+    properties make the unit explicit per vocabulary, so ``blocks_written``
+    and ``frames_written`` are the item counter while ``bytes_written`` is
+    the byte counter.
+
+    ``stream_writes`` / ``stream_moves`` break the item counters down by
+    placement stream (index = stream, 0 hottest), so stream skew — how
+    unevenly the death-stream router spreads appends — is observable.
     """
 
     user_writes: int = 0       # user items (frames/blocks/chunks) written
@@ -83,6 +101,8 @@ class StoreStats:
     sum_E_cleaned: float = 0.0  # Σ empty-fraction of cleaned segments
     frames_shared: int = 0     # extra references taken on live frames
     ref_drops: int = 0         # decrefs that did NOT free (sharing survived)
+    stream_writes: list = dataclasses.field(default_factory=list)
+    stream_moves: list = dataclasses.field(default_factory=list)
 
     def wamp(self) -> float:
         """Write amplification: moved / written, in bytes when byte counts
@@ -94,13 +114,44 @@ class StoreStats:
     def mean_E(self) -> float:
         return self.sum_E_cleaned / max(self.cleaned_segments, 1)
 
+    def note_stream(self, stream: int, n: int, kind: str | None) -> None:
+        """Count ``n`` items placed into ``stream`` (kind "gc": a move)."""
+        tgt = self.stream_moves if kind == "gc" else self.stream_writes
+        if len(tgt) <= stream:
+            tgt.extend([0] * (stream + 1 - len(tgt)))
+        tgt[stream] += n
+
     def snapshot(self) -> "StoreStats":
-        return dataclasses.replace(self)
+        s = dataclasses.replace(self)
+        s.stream_writes = list(self.stream_writes)
+        s.stream_moves = list(self.stream_moves)
+        return s
 
     def since(self, other: "StoreStats") -> "StoreStats":
-        return StoreStats(**{
-            f.name: getattr(self, f.name) - getattr(other, f.name)
-            for f in dataclasses.fields(self)})
+        out = {}
+        for f in dataclasses.fields(self):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            if isinstance(a, list):
+                m = max(len(a), len(b))
+                out[f.name] = [
+                    (a[i] if i < len(a) else 0) - (b[i] if i < len(b) else 0)
+                    for i in range(m)]
+            else:
+                out[f.name] = a - b
+        return StoreStats(**out)
+
+    # -- core frame vocabulary ----------------------------------------------
+    @property
+    def frames_written(self) -> int:
+        return self.user_writes
+
+    @property
+    def frames_moved(self) -> int:
+        return self.gc_moves
+
+    @property
+    def frames_died(self) -> int:
+        return self.deaths
 
     # -- serving-pool vocabulary ---------------------------------------------
     @property
@@ -159,9 +210,85 @@ class EvacResult:
     segs: np.ndarray         # source segment per item
     slots: np.ndarray        # source slot per item
     refs: np.ndarray = None  # reference count per item (carried by the move)
+    streams: np.ndarray = None  # source segment's stream per item (-1 unknown)
 
     def __len__(self) -> int:
         return len(self.items)
+
+
+def _per_item(x, n: int) -> np.ndarray:
+    """Broadcast a scalar-or-array hint to one float64 value per item."""
+    a = np.asarray(x, dtype=np.float64)
+    return np.broadcast_to(a, (n,)) if a.ndim == 0 else a
+
+
+@dataclasses.dataclass
+class Placement:
+    """Unified placement hint for one append batch (every frontend's append
+    surface funnels through this — the one argument ``route``/``place``/
+    ``append``/``append_bytes`` understand).
+
+    est_death : predicted invalidation clock per item (scalar or array).
+                Routed by running quantiles into one of the k death-streams.
+                Frontends whose lifetime signal is a recency midpoint
+                (simulator/checkpoint u_p2) derive it as
+                ``u_now + (u_now - u_p2)`` — one mean update interval ahead.
+    stream    : explicit stream override (scalar or per-item); cleaning
+                survivors pass their demoted stream here and skip routing.
+    kind      : "user" | "gc" | None — write accounting (None: the frontend
+                counts its own user writes; "gc" moves are counted once, at
+                evacuation).
+    refs      : per-item reference counts carried through relocation.
+    up2       : the §5.2.2 per-slot tag; defaults to ``est_death`` (the KV
+                pool tags slots with death estimates), else 0.
+    probs     : oracle per-item true update probability (simulator ``-opt``).
+    """
+
+    est_death: "np.ndarray | float | None" = None
+    stream: "np.ndarray | int | None" = None
+    kind: str | None = "user"
+    refs: np.ndarray | None = None
+    up2: "np.ndarray | float | None" = None
+    probs: np.ndarray | None = None
+
+    def up2_values(self, n: int) -> np.ndarray:
+        src = self.up2 if self.up2 is not None else self.est_death
+        return np.zeros(n) if src is None else _per_item(src, n)
+
+
+class StreamSet:
+    """The k open segments of one log, bucketed by predicted invalidation
+    time (SepBIT's death streams).  Stream 0 is the soonest-dying bucket,
+    stream k-1 the coldest.  Holds the routing state only; lifecycle stays
+    with the owning log."""
+
+    def __init__(self, k: int, window: int = 4096):
+        self.k = max(1, int(k))
+        self.open = np.full(self.k, -1, dtype=np.int64)  # stream -> OPEN seg
+        self.bounds = np.empty(0, dtype=np.float64)      # k-1 quantile cuts
+        # ring buffer of recently appended est_death values — the quantile
+        # sample for logs that cannot enumerate live deaths (ByteLog)
+        self._ring = np.zeros(window, dtype=np.float64)
+        self._n = 0
+        self._pos = 0
+
+    def observe(self, deaths: np.ndarray) -> None:
+        deaths = np.asarray(deaths, dtype=np.float64).ravel()[-len(self._ring):]
+        end = self._pos + len(deaths)
+        if end <= len(self._ring):
+            self._ring[self._pos:end] = deaths
+        else:
+            cut = len(self._ring) - self._pos
+            self._ring[self._pos:] = deaths[:cut]
+            self._ring[:end - len(self._ring)] = deaths[cut:]
+        self._pos = end % len(self._ring)
+        self._n = min(self._n + len(deaths), len(self._ring))
+
+    def sample(self) -> np.ndarray:
+        return self._ring[:self._n]
+
+    def clear_seg(self, s: int) -> None:
+        self.open[self.open == s] = -1
 
 
 class LogStructureBase:
@@ -170,7 +297,8 @@ class LogStructureBase:
     _oom_msg = "store out of free segments (cleaning failed to keep up)"
 
     def __init__(self, nseg: int, *, clock: Clock | None = None,
-                 use_free_list: bool = True):
+                 use_free_list: bool = True, n_streams: int = 1,
+                 stream_sample: str = "recent", stream_horizon: float = 1e9):
         self.nseg = int(nseg)
         self.seg_state = np.full(nseg, FREE, dtype=np.int8)
         self.seg_live = np.zeros(nseg, dtype=np.int64)       # C (live items)
@@ -178,6 +306,12 @@ class LogStructureBase:
         self.seg_up2sum = np.zeros(nseg, dtype=np.float64)   # Σ u_p2, live items
         self.seg_seal_time = np.zeros(nseg, dtype=np.float64)
         self.seg_prob = np.zeros(nseg, dtype=np.float64)     # oracle Σ p(item)
+        # which stream wrote each segment (-1: unknown / pre-stream content);
+        # read back by cleaning to demote survivors one stream colder
+        self.seg_stream = np.full(nseg, -1, dtype=np.int16)
+        self.streams = StreamSet(n_streams)
+        self._stream_sample = stream_sample  # "recent" (ring) | "live" (slots)
+        self._stream_horizon = float(stream_horizon)
         self._use_free_list = use_free_list
         self.free_list: list[int] = (
             list(range(nseg - 1, -1, -1)) if use_free_list else [])
@@ -216,6 +350,7 @@ class LogStructureBase:
         self.seg_up2[s] = self.seg_up2sum[s] / live if live else self.u_now
         self.seg_seal_time[s] = self.u_now if seal_time is None else seal_time
         self.seg_state[s] = USED
+        self.streams.clear_seg(s)
 
     def release(self, victims: np.ndarray) -> None:
         """→ FREE wholesale (cleaning frees victims after evacuation)."""
@@ -224,8 +359,79 @@ class LogStructureBase:
         self.seg_live[victims] = 0
         self.seg_up2sum[victims] = 0.0
         self.seg_prob[victims] = 0.0
+        self.seg_stream[victims] = -1
         if self._use_free_list:
             self.free_list.extend(int(s) for s in victims)
+
+    # -- death-stream routing -------------------------------------------------
+    def _stream_death_sample(self) -> np.ndarray:
+        """Quantile sample for the stream cuts (default: recent appends)."""
+        return self.streams.sample()
+
+    def refresh_stream_bounds(self) -> None:
+        """Recompute the k-1 death-quantile cuts between streams."""
+        k = self.streams.k - 1
+        if k <= 0:
+            self.streams.bounds = np.empty(0, dtype=np.float64)
+            return
+        sample = self._stream_death_sample()
+        if len(sample) >= 4:
+            qs = np.quantile(sample, np.linspace(0, 1, k + 2)[1:-1])
+            self.streams.bounds = np.sort(qs)
+        else:
+            self.streams.bounds = np.full(k, self.u_now + self._stream_horizon)
+
+    def route(self, p: Placement, n: int) -> np.ndarray:
+        """Stream index per item.  An explicit ``p.stream`` hint wins (GC
+        survivors arrive pre-demoted); otherwise ``est_death`` is bucketed by
+        the running quantile cuts — soonest-dying items to stream 0."""
+        k = self.streams.k
+        if p.stream is not None:
+            s = np.asarray(p.stream, dtype=np.int64)
+            s = np.broadcast_to(s, (n,)) if s.ndim == 0 else s
+            return np.clip(s, 0, k - 1)
+        if k <= 1 or p.est_death is None:
+            return np.zeros(n, dtype=np.int64)
+        deaths = _per_item(p.est_death, n)
+        self.refresh_stream_bounds()
+        out = (np.searchsorted(self.streams.bounds, deaths)
+               if len(self.streams.bounds) else np.zeros(n, dtype=np.int64))
+        self.streams.observe(deaths)
+        return out
+
+    def demote_streams(self, src_streams: np.ndarray,
+                       est_death=None, overdue=None) -> np.ndarray:
+        """SepBIT's survivor inference: an item that survived a clean is
+        colder than its stream predicted — step one stream down (re-moved
+        items keep stepping).  Unknown sources (-1, pre-stream segments)
+        route by ``est_death`` first, then step.
+
+        ``overdue`` restricts the inference to items whose predicted death
+        has demonstrably passed: where False, the item's ``est_death`` is a
+        *believed* future clock and survival carries no information (the
+        victim was simply cleaned early), so it re-routes by quantile with
+        no step.  Frontends whose estimates are absolute death clocks (the
+        KV pool) pass ``up2 <= u_now``; update-driven stores, where every
+        survival means the recency estimate was too hot, omit it."""
+        k = self.streams.k
+        src = np.asarray(src_streams, dtype=np.int64)
+        n = len(src)
+        if k <= 1:
+            return np.zeros(n, dtype=np.int64)
+        need_route = ((src < 0) if overdue is None
+                      else (src < 0) | ~np.asarray(overdue, dtype=bool))
+        if est_death is not None and need_route.any():
+            self.refresh_stream_bounds()
+            deaths = _per_item(est_death, n)
+            routed = (np.searchsorted(self.streams.bounds, deaths)
+                      if len(self.streams.bounds)
+                      else np.zeros(n, dtype=np.int64))
+            src = np.where(need_route, routed, src)
+        stepped = np.minimum(np.maximum(src, 0) + 1, k - 1)
+        if overdue is None:
+            return stepped
+        return np.where(np.asarray(overdue, dtype=bool), stepped,
+                        np.clip(src, 0, k - 1))
 
     def _count_write(self, kind: str | None, n_items: int, n_bytes: int) -> None:
         if kind == "user":
@@ -246,10 +452,16 @@ class FrameLog(LogStructureBase):
     it, items are opaque payloads (the KV pool stores sequence owners).
     """
 
+    _noroom_msg = "no open segment with room (all segments sealed+full)"
+
     def __init__(self, nseg: int, frames_per_seg: int, *,
                  frame_bytes: int = 1, max_items: int | None = None,
-                 auto_release_empty: bool = False, clock: Clock | None = None):
-        super().__init__(nseg, clock=clock)
+                 auto_release_empty: bool = False, clock: Clock | None = None,
+                 n_streams: int = 1, stream_sample: str = "recent",
+                 stream_horizon: float = 1e9):
+        super().__init__(nseg, clock=clock, n_streams=n_streams,
+                         stream_sample=stream_sample,
+                         stream_horizon=stream_horizon)
         self.S = int(frames_per_seg)
         self.frame_bytes = int(frame_bytes)
         self.auto_release_empty = auto_release_empty
@@ -267,6 +479,14 @@ class FrameLog(LogStructureBase):
             self.item_seg = np.full(max_items, -1, dtype=np.int64)
             self.item_slot = np.full(max_items, -1, dtype=np.int64)
             self.item_up2 = np.zeros(max_items, dtype=np.float64)
+
+    def _stream_death_sample(self) -> np.ndarray:
+        """"live" mode: quantile cuts over the live slots' death tags (only
+        meaningful for frontends whose slot_up2 *is* a death estimate — the
+        KV pool); default: the recent-append ring."""
+        if self._stream_sample == "live":
+            return self.slot_up2[self.slot_item >= 0]
+        return super()._stream_death_sample()
 
     # -- capacity -------------------------------------------------------------
     def live_items(self) -> int:
@@ -289,16 +509,23 @@ class FrameLog(LogStructureBase):
         self.seg_fill[s] = 0
         return s
 
-    def append(self, s: int, items: np.ndarray, up2: np.ndarray,
+    def append(self, s: int, items: np.ndarray, up2,
                probs: np.ndarray | None = None,
                kind: str | None = None,
                refs: np.ndarray | None = None) -> np.ndarray:
-        """Append items to an OPEN segment; returns their slot indices.
+        """Append items to an explicit OPEN segment; returns slot indices.
+
+        ``up2`` may be a :class:`Placement` (the unified hint surface —
+        preferred) or a bare per-item u_p2 array (deprecated shim).  Routed
+        multi-stream appends go through :meth:`place` instead.
 
         ``refs``: reference count per item (default 1 — a fresh user write
         has exactly its owner's reference).  GC re-appends pass the counts
         carried out of the victims so sharing survives relocation."""
         n = len(items)
+        if isinstance(up2, Placement):
+            p = up2
+            up2, probs, kind, refs = p.up2_values(n), p.probs, p.kind, p.refs
         start = int(self.seg_fill[s])
         assert self.seg_state[s] == OPEN and start + n <= self.S
         sl = slice(start, start + n)
@@ -317,6 +544,62 @@ class FrameLog(LogStructureBase):
             self.item_up2[items] = up2
         self._count_write(kind, n, n * self.frame_bytes)
         return np.arange(start, start + n)
+
+    # -- routed multi-stream placement ---------------------------------------
+    def stream_segment(self, stream: int) -> int:
+        """OPEN segment for ``stream``, allocating or borrowing as needed.
+
+        When no free segment exists for this lifetime class, the nearest
+        open stream with room absorbs the append (better slightly-mixed than
+        OOM — the borrowed segment keeps its own stream tag)."""
+        s = int(self.streams.open[stream])
+        if s >= 0:
+            return s
+        if self.free_count():
+            s = self.alloc()
+            self.streams.open[stream] = s
+            self.seg_stream[s] = stream
+            return s
+        for b in np.argsort(np.abs(np.arange(self.streams.k) - stream)):
+            s = int(self.streams.open[b])
+            if s >= 0 and self.room(s):
+                return s
+        raise RuntimeError(self._noroom_msg)
+
+    def place(self, items: np.ndarray, p: Placement) -> np.ndarray:
+        """Route one batch into the k open stream segments; returns flat
+        frame ids (``seg * S + slot``).
+
+        Vectorized: one :meth:`append` per (stream, segment) run — O(segments
+        touched), not O(items).  Segments that fill are sealed immediately.
+        Capacity must exist (callers clean/compact first); when a stream has
+        no free segment the append borrows a neighbor (see
+        :meth:`stream_segment`)."""
+        items = np.asarray(items, dtype=np.int64)
+        n = len(items)
+        out = np.empty(n, dtype=np.int64)
+        if n == 0:
+            return out
+        streams = self.route(p, n)
+        up2 = p.up2_values(n)
+        for b in np.unique(streams):
+            idx = np.flatnonzero(streams == b)
+            pos = 0
+            while pos < len(idx):
+                s = self.stream_segment(int(b))
+                take = min(self.room(s), len(idx) - pos)
+                sel = idx[pos:pos + take]
+                slots = self.append(
+                    s, items[sel], up2[sel],
+                    probs=None if p.probs is None else p.probs[sel],
+                    kind=p.kind,
+                    refs=None if p.refs is None else p.refs[sel])
+                out[sel] = s * self.S + slots
+                self.stats.note_stream(int(b), int(take), p.kind)
+                pos += take
+                if self.room(s) == 0:
+                    self.seal(s)
+        return out
 
     # -- sharing --------------------------------------------------------------
     def incref_slots(self, segs: np.ndarray, slots: np.ndarray,
@@ -456,6 +739,7 @@ class FrameLog(LogStructureBase):
             segs=segs,
             slots=c.astype(np.int64),
             refs=self.slot_ref[victims][r, c],
+            streams=self.seg_stream[segs].astype(np.int64),
         )
         counts = mask.sum(axis=1)
         self.stats.sum_E_cleaned += float((1.0 - counts / self.S).sum())
@@ -487,6 +771,15 @@ class FrameLog(LogStructureBase):
             "slot_ref / slot_item disagree on liveness"
         assert (self.seg_live[self.seg_state == FREE] == 0).all()
         assert self.free_count() == int((self.seg_state == FREE).sum())
+        # stream bookkeeping: open-stream segments are OPEN and tagged; FREE
+        # segments carry no stream (no frame is stranded in a ghost stream)
+        open_ids = self.streams.open[self.streams.open >= 0]
+        assert (self.seg_state[open_ids] == OPEN).all(), \
+            "stream points at a non-OPEN segment"
+        assert (self.seg_stream[open_ids] >= 0).all(), "untagged open stream"
+        assert (self.seg_stream[self.seg_state == FREE] == -1).all(), \
+            "FREE segment still tagged with a stream"
+        assert (self.seg_stream < self.streams.k).all(), "stream out of range"
         # nothing live past the fill pointer
         past_fill = np.arange(self.S)[None, :] >= self.seg_fill[:, None]
         assert not (live_mask & past_fill).any(), "live frame past fill"
@@ -506,8 +799,10 @@ class ByteLog(LogStructureBase):
     counter the lifecycle and the victim keys read: B (written), B−A (live
     bytes), C (live chunks), u_p2 sums and the state machine."""
 
-    def __init__(self, *, clock: Clock | None = None):
-        super().__init__(0, clock=clock, use_free_list=False)
+    def __init__(self, *, clock: Clock | None = None, n_streams: int = 1,
+                 stream_horizon: float = 1e9):
+        super().__init__(0, clock=clock, use_free_list=False,
+                         n_streams=n_streams, stream_horizon=stream_horizon)
         self.seg_written = np.zeros(0, dtype=np.int64)     # B
         self.seg_live_bytes = np.zeros(0, dtype=np.int64)  # B - A
         self.next_sid = 0
@@ -527,6 +822,7 @@ class ByteLog(LogStructureBase):
         self.seg_up2sum = pad(self.seg_up2sum)
         self.seg_seal_time = pad(self.seg_seal_time)
         self.seg_prob = pad(self.seg_prob)
+        self.seg_stream = pad(self.seg_stream, -1)
         self.seg_written = pad(self.seg_written)
         self.seg_live_bytes = pad(self.seg_live_bytes)
         self.nseg = cap
@@ -545,13 +841,31 @@ class ByteLog(LogStructureBase):
         super().seal(s, float(s) if seal_time is None else seal_time)
 
     # -- writes / deaths ------------------------------------------------------
-    def append_bytes(self, s: int, nbytes: int, up2: float,
+    def open_stream(self, stream: int) -> tuple[int, bool]:
+        """OPEN segment id for ``stream`` (allocating one if none is open);
+        returns (sid, freshly_allocated).  The frontend owns the file."""
+        s = int(self.streams.open[stream])
+        if s >= 0:
+            return s, False
+        s = self.alloc()
+        self.streams.open[stream] = s
+        self.seg_stream[s] = stream
+        return s, True
+
+    def append_bytes(self, s: int, nbytes: int, up2,
                      kind: str | None = "user") -> None:
+        """``up2`` may be a :class:`Placement` (preferred; its ``kind`` wins)
+        or a bare float u_p2 tag (deprecated shim)."""
+        if isinstance(up2, Placement):
+            p = up2
+            kind = p.kind
+            up2 = float(p.up2_values(1)[0])
         assert self.seg_state[s] == OPEN
         self.seg_written[s] += nbytes
         self.seg_live_bytes[s] += nbytes
         self.seg_live[s] += 1
         self.seg_up2sum[s] += up2
+        self.stats.note_stream(max(int(self.seg_stream[s]), 0), 1, kind)
         self._count_write(kind, 1, nbytes)
 
     def kill_bytes(self, s: int, nbytes: int, up2: float,
@@ -609,7 +923,7 @@ class ByteLog(LogStructureBase):
     # -- persistence ----------------------------------------------------------
     def restore_segment(self, sid: int, *, written: int, live_bytes: int,
                         live_chunks: int, up2: float, up2_sum: float,
-                        sealed: bool) -> None:
+                        sealed: bool, stream: int = -1) -> None:
         """Rebuild one segment's accounting from persisted frontend state."""
         self._grow_to(sid + 1)
         self.next_sid = max(self.next_sid, sid + 1)
@@ -620,6 +934,9 @@ class ByteLog(LogStructureBase):
         self.seg_up2[sid] = up2
         self.seg_up2sum[sid] = up2_sum
         self.seg_seal_time[sid] = float(sid)
+        self.seg_stream[sid] = stream
+        if not sealed and 0 <= stream < self.streams.k:
+            self.streams.open[stream] = sid
 
 
 class JournalLog:

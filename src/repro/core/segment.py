@@ -18,17 +18,19 @@ from __future__ import annotations
 import numpy as np
 
 from .logstructure import (FREE, IN_FLIGHT, OPEN, USED,  # noqa: F401
-                           Clock, FrameLog, StoreStats)
+                           Clock, EvacResult, FrameLog, Placement, StoreStats)
 
-__all__ = ["FREE", "OPEN", "USED", "IN_FLIGHT", "Clock", "SegmentStore",
-           "StoreStats"]
+__all__ = ["FREE", "OPEN", "USED", "IN_FLIGHT", "Clock", "EvacResult",
+           "Placement", "SegmentStore", "StoreStats"]
 
 
 class SegmentStore(FrameLog):
     """Fixed-size-page log-structured store with paper §5 accounting."""
 
-    def __init__(self, nseg: int, pages_per_seg: int, max_pages: int):
-        super().__init__(nseg, pages_per_seg, max_items=max_pages)
+    def __init__(self, nseg: int, pages_per_seg: int, max_pages: int,
+                 *, n_streams: int = 1):
+        super().__init__(nseg, pages_per_seg, max_items=max_pages,
+                         n_streams=n_streams)
         self.max_pages = int(max_pages)
         # paper vocabulary — same arrays, no separate bookkeeping
         self.page_seg = self.item_seg
@@ -75,3 +77,9 @@ class SegmentStore(FrameLog):
         """
         res = super().evacuate(victims)
         return res.items, res.up2_inherit
+
+    def evacuate_result(self, victims: np.ndarray) -> EvacResult:
+        """Like :meth:`evacuate` but returns the full :class:`EvacResult`
+        (per-page slot u_p2, refs and source streams — the death-stream
+        cleaning path demotes survivors by their source stream)."""
+        return super().evacuate(victims)

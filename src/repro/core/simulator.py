@@ -10,6 +10,14 @@ amplification").
 
 Policies: age | greedy | cost_benefit | mdc | mdc_opt | multilog | multilog_opt
 (multi-log per Stoica & Ailamaki [26] as described in the paper §6.1.3/§7.2).
+
+``SimConfig.streams = k`` (k > 1) switches any non-multilog policy to SepBIT
+death-stream placement: the sort buffer is bypassed and every write is routed
+directly into one of k open segments by predicted invalidation time
+(est_death = u_now + the MDC mean-update-interval estimate), via the shared
+:class:`~repro.core.logstructure.Placement` surface.  Cleaning survivors
+demote one stream colder (SepBIT's inference: surviving a clean is evidence
+of coldness).
 """
 
 from __future__ import annotations
@@ -20,7 +28,7 @@ import math
 import numpy as np
 
 from . import policies as P
-from .segment import USED, SegmentStore, StoreStats
+from .segment import USED, Placement, SegmentStore, StoreStats
 from .workloads import Workload, make_workload
 
 _MAX_DUP_ROUNDS = 8
@@ -38,11 +46,16 @@ class SimConfig:
     sort_user: bool = True             # separate user writes by u_p2
     sort_gc: bool = True               # separate GC writes by u_p2
     ml_bands: int = 32                 # multi-log frequency bands
+    streams: int = 0                   # >=1: SepBIT death-stream placement
+                                       # (1 = direct-append baseline, no sort)
     seed: int = 0
 
     def __post_init__(self):
         if self.policy.startswith("multilog"):
             self.clean_batch = 1
+            if self.streams:
+                raise ValueError("streams mode is its own placement policy; "
+                                 "combine it with a victim policy, not multilog")
 
 
 class _Buffer:
@@ -101,7 +114,9 @@ class Simulator:
         S, nseg = cfg.pages_per_seg, cfg.nseg
         self.opt = cfg.policy.endswith("_opt")
         self.multilog = cfg.policy.startswith("multilog")
+        self.st_mode = cfg.streams >= 1 and not self.multilog
         self._staged_load = 0
+        self._in_clean = False
 
         # -- scaled-store corrections (see DESIGN.md §4) --------------------
         # The paper's store has 51200 segments, so its 16-segment sort
@@ -121,6 +136,8 @@ class Simulator:
         self.clean_batch = max(1, min(cfg.clean_batch, slack0 // 8))
         self.ml_bands = (max(4, min(cfg.ml_bands, slack0 // 3))
                          if self.multilog else cfg.ml_bands)
+        self.st_k = (max(1, min(cfg.streams, slack0 // 3))
+                     if self.st_mode else 1)
         if self.multilog:
             self.clean_batch = 1
 
@@ -132,6 +149,8 @@ class Simulator:
             reserve = self.clean_trigger + E_est * self.clean_batch / 2
             if self.multilog:
                 reserve += self.ml_bands / 2  # half-full open band segments
+            elif self.st_mode:
+                reserve += self.st_k / 2      # half-full open stream segments
             else:
                 self._staged_load = (cfg.buf_segs * S) // 2 + S // 2
             n_user = int(cfg.fill_factor * (nseg - reserve)) * S \
@@ -142,7 +161,8 @@ class Simulator:
                 wkw["growth_frac"] = 0.1 / cfg.fill_factor
             workload = make_workload(workload_name, n_user, seed=cfg.seed, **wkw)
         self.w = workload
-        self.store = SegmentStore(nseg, S, workload.max_pages())
+        self.store = SegmentStore(nseg, S, workload.max_pages(),
+                                  n_streams=self.st_k)
         self.S = S
 
         mp = workload.max_pages()
@@ -192,6 +212,10 @@ class Simulator:
         if len(tail):
             if self.multilog:  # multi-log starts everything in one log ([26])
                 self._ml_append(0, tail, np.zeros(len(tail)))
+            elif self.st_mode:
+                # never-updated pages go to the coldest stream (cf. multi-log)
+                self._st_place(tail, np.zeros(len(tail)),
+                               stream=np.full(len(tail), self.st_k - 1))
             else:
                 self.user_buf.insert(tail, self.page_bufpos)
                 self.store.page_seg[tail] = -2
@@ -205,7 +229,7 @@ class Simulator:
         # arrival granularity must stay fine vs the sort buffer, or the
         # buffer degenerates to fill-whole/flush-whole and its steady-state
         # occupancy (compensated for in __init__) collapses
-        if not self.multilog:
+        if not (self.multilog or self.st_mode):
             chunk = min(chunk, max(self.S, self.user_buf.cap // 4))
         done = 0
         while done < n_updates:
@@ -262,6 +286,13 @@ class Simulator:
         # Paper §5.2.2: the old u_p2 "can be found from its containing segment".
         old_up2[on_disk] = st.seg_up2[loc[on_disk]]
         old_up2[in_user | in_gc] = st.page_up2[pages[in_user | in_gc]]
+        if self.st_mode:
+            # a still-OPEN stream segment has no sealed u_p2 mean yet — its
+            # pages are the analog of classic's staged writes: use the exact
+            # per-page value (paper's "from containing segment" is a sealed-
+            # segment storage optimization)
+            in_open = on_disk & (st.seg_state[np.maximum(loc, 0)] != USED)
+            old_up2[in_open] = st.page_up2[pages[in_open]]
 
         if on_disk.any():
             st.kill_pages(pages[on_disk], self.page_wprob[pages[on_disk]])
@@ -284,6 +315,8 @@ class Simulator:
 
         if self.multilog:
             self._ml_write(pages, new_up2, t, prev_last)
+        elif self.st_mode:
+            self._st_write(pages, new_up2, t)
         else:
             st.page_seg[pages] = -2
             self.user_buf.insert(pages, self.page_bufpos)
@@ -324,6 +357,8 @@ class Simulator:
                 raise RuntimeError("cleaning is not reclaiming space")
 
     def _clean_cycle(self) -> None:
+        if self.st_mode:
+            return self._st_clean()
         st = self.store
         eligible = st.seg_state == USED
         victims = P.select_victims(
@@ -357,6 +392,60 @@ class Simulator:
         if len(tail):  # residual survivors stay staged until the next cycle
             self.gc_buf.insert(tail, self.page_bufpos)
             st.page_seg[tail] = -3
+
+    # --------------------------------------------------------- death streams
+    def _st_place(self, pages: np.ndarray, up2: np.ndarray, *,
+                  est_death: np.ndarray | None = None,
+                  stream: np.ndarray | None = None,
+                  kind: str | None = None) -> None:
+        """Place directly into the k open stream segments (no sort buffer),
+        chunked so cleaning can interleave with a large batch."""
+        st = self.store
+        for i in range(0, len(pages), self.S):
+            sel = slice(i, i + self.S)
+            chunk = pages[sel]
+            if not self._in_clean:
+                self._ensure_free()
+            probs = self.w.probs[chunk]
+            self.page_wprob[chunk] = probs
+            st.place(chunk, Placement(
+                est_death=None if est_death is None else est_death[sel],
+                stream=None if stream is None else stream[sel],
+                up2=up2[sel], probs=probs, kind=kind))
+
+    def _st_write(self, pages: np.ndarray, up2: np.ndarray,
+                  t: np.ndarray) -> None:
+        if self.opt:  # oracle: exact mean interval from true frequencies
+            est = t + 1.0 / np.maximum(self.w.probs[pages], 1e-18)
+        else:
+            # (t - u_p2) is the MDC mean-update-interval estimate (§5.2.2),
+            # so one interval ahead of now is the predicted invalidation time
+            est = 2.0 * t - up2
+        self._st_place(pages, up2, est_death=est, kind=None)
+
+    def _st_clean(self) -> None:
+        """Evacuate victims; survivors re-enter one stream colder (SepBIT)."""
+        st = self.store
+        victims = P.select_victims(
+            self.cfg.policy, self.clean_batch,
+            live=st.seg_live, S=self.S, up2=st.seg_up2,
+            seal_time=st.seg_seal_time, u_now=st.u_now,
+            seg_prob=st.seg_prob, eligible=st.seg_state == USED,
+        )
+        assert len(victims), "no cleanable segment"
+        res = st.evacuate_result(victims)
+        if not len(res.items):
+            return
+        if self.opt:
+            est = st.u_now + 1.0 / np.maximum(self.w.probs[res.items], 1e-18)
+        else:
+            est = 2.0 * st.u_now - res.up2_slot
+        demoted = st.demote_streams(res.streams, est)
+        self._in_clean = True
+        try:
+            self._st_place(res.items, res.up2_slot, stream=demoted, kind="gc")
+        finally:
+            self._in_clean = False
 
     # ------------------------------------------------------------ multi-log
     def _ml_band(self, pages: np.ndarray, t: np.ndarray, prev_last: np.ndarray) -> np.ndarray:
@@ -491,9 +580,11 @@ class Simulator:
 
 
 def run_policy(policy: str, workload_name: str, *, nseg=256, S=512, F=0.8,
-               multiplier=20, seed=0, warmup_frac=0.25, **wkw) -> StoreStats:
+               multiplier=20, seed=0, warmup_frac=0.25, streams=0,
+               **wkw) -> StoreStats:
     """Convenience: simulate `multiplier`× the store size of user writes."""
-    cfg = SimConfig(nseg=nseg, pages_per_seg=S, fill_factor=F, policy=policy, seed=seed)
+    cfg = SimConfig(nseg=nseg, pages_per_seg=S, fill_factor=F, policy=policy,
+                    seed=seed, streams=streams)
     sim = Simulator(cfg, workload_name=workload_name, **wkw)
     n = int(multiplier * nseg * S)
     return sim.run_measured(n, warmup_frac=warmup_frac)

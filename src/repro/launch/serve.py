@@ -82,7 +82,9 @@ def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
 def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               policy: str = "mdc", seed: int = 0, n_slabs: int = 9,
               blocks_per_slab: int = 4, page_T: int = 8, max_batch: int = 4,
-              n_open: int = 4, params=None, model: Model | None = None,
+              n_open: int | None = None, streams: int | None = None,
+              demote_survivors: bool = False,
+              params=None, model: Model | None = None,
               use_pallas: bool | None = None, max_decode_chunk: int = 32,
               mesh=None, prefix_cache: bool = False,
               prefix_cache_pages: int = 0, shared_prefix_len: int = 0,
@@ -114,7 +116,8 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              blocks_per_slab=blocks_per_slab, page_T=page_T,
                              max_batch=max_batch, max_seq=256, policy=policy,
                              params=params, compact_trigger=2,
-                             compact_batch=3, n_open=n_open,
+                             compact_batch=3, n_open=n_open, streams=streams,
+                             demote_survivors=demote_survivors,
                              use_pallas=use_pallas,
                              max_decode_chunk=max_decode_chunk, mesh=mesh,
                              prefix_cache=prefix_cache,
@@ -181,8 +184,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--policies", nargs="*",
                     default=["mdc", "greedy", "age", "cost_benefit"])
-    ap.add_argument("--n-open", type=int, default=4,
-                    help="open slabs (lifetime buckets) for §5.3 placement")
+    ap.add_argument("--n-open", type=int, default=None,
+                    help="deprecated alias for --streams")
+    ap.add_argument("--streams", type=int, default=None, metavar="K",
+                    help="death streams (open slabs) for SepBIT placement; "
+                         "default 4")
+    ap.add_argument("--demote", action="store_true",
+                    help="demote overdue GC survivors one stream colder "
+                         "(SepBIT inference; off by default — KV death "
+                         "estimates are absolute clocks, so survival "
+                         "usually carries no signal)")
     ap.add_argument("--chunk", type=int, default=32,
                     help="max decode tokens per device dispatch")
     ap.add_argument("--use-pallas", choices=["auto", "on", "off"],
@@ -277,7 +288,9 @@ def main() -> None:
     import jax
     params = model.init(jax.random.PRNGKey(0))
     results = [serve_run(arch=args.arch, requests=args.requests, policy=p,
-                         seed=args.seed, n_open=args.n_open, params=params,
+                         seed=args.seed, n_open=args.n_open,
+                         streams=args.streams,
+                         demote_survivors=args.demote, params=params,
                          model=model, use_pallas=use_pallas,
                          max_decode_chunk=args.chunk, mesh=mesh,
                          prefix_cache=args.prefix_cache,

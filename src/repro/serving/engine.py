@@ -54,7 +54,7 @@ from ..models import attention as att
 from ..models import transformer as tfm
 from ..models.layers import rmsnorm
 from .. import kernels
-from ..core.logstructure import JournalLog
+from ..core.logstructure import JournalLog, Placement
 from ..distributed.fault import TransientFault, backoff_delay
 from .kvcache import LogStructuredKVPool
 from .prefix_cache import PrefixCache
@@ -356,7 +356,8 @@ class PagedServingEngine:
                  policy: str = "mdc", use_pallas: bool | None = None,
                  params=None, seed: int = 0,
                  compact_trigger: int = 2, compact_batch: int = 4,
-                 n_open: int = 4, max_decode_chunk: int = 32,
+                 n_open: int | None = None, streams: int | None = None,
+                 demote_survivors: bool = False, max_decode_chunk: int = 32,
                  warmup: bool = False, mesh=None,
                  prefix_cache: bool = False, prefix_cache_pages: int = 0,
                  pool_dtype=jnp.bfloat16, stop_token: int | None = None,
@@ -392,9 +393,14 @@ class PagedServingEngine:
         # hits are approximate; pool_dtype=float32 makes them bit-exact.
         self.pool_dtype = pool_dtype
 
+        # death-stream placement (DESIGN.md §11): ``streams`` open slabs
+        # routed by est-death quantiles; survivor demotion opt-in (KV
+        # deaths are absolute clocks); ``n_open`` kept as the legacy alias.
         self.pool = LogStructuredKVPool(
-            n_slabs, blocks_per_slab, policy=policy, n_open=n_open,
+            n_slabs, blocks_per_slab, policy=policy, streams=streams,
+            n_open=n_open, demote_survivors=demote_survivors,
             compact_trigger=compact_trigger, compact_batch=compact_batch)
+        self.streams = self.pool.n_open
         # synchronous plan execution: tensor move + block-table remap happen
         # before any compaction-freed page id can be re-allocated
         self.pool.on_compaction = self._execute_plan
@@ -919,7 +925,7 @@ class PagedServingEngine:
         try:
             pages_new = self.pool.alloc_blocks(
                 np.full(n_pages - n_shared, req.rid, dtype=np.int64),
-                np.full(n_pages - n_shared, est))
+                Placement(est_death=est))
         except Exception:
             if n_shared:
                 self.pool.free_pages(self.bt[i, :n_shared].astype(np.int64))
@@ -1261,8 +1267,8 @@ class PagedServingEngine:
                 for j in growing])
             pages = self.pool.alloc_blocks(
                 self.rid[growing],
-                self.pool.u_now + (self.lens[growing]
-                                   + rem).astype(np.float64))
+                Placement(est_death=self.pool.u_now
+                          + (self.lens[growing] + rem).astype(np.float64)))
             self.bt[growing, self.npages[growing]] = pages
             self.npages[growing] += 1
             self._bt_dirty = True
@@ -1520,6 +1526,9 @@ class PagedServingEngine:
             "wamp": st.wamp(),
             "mean_E_compacted": st.mean_E(),
             "compactions": st.compactions,
+            "streams": self.streams,
+            "stream_writes": list(st.stream_writes),
+            "stream_moves": list(st.stream_moves),
             "free_blocks": self.pool.free_blocks(),
             "preemptions": self.preemptions,
             "resumes": self.resumes,

@@ -18,11 +18,21 @@ slabs restores whole-slab free extents at the smallest possible copy cost —
 and every copied byte is HBM read+write bandwidth stolen from decode, so
 ``Wamp`` prices lost decode throughput directly.
 
-Placement (the paper's §5.3 sort-buffer): blocks are appended to one of
-``n_open`` open slabs bucketed by *expected remaining lifetime* (the serving
-analogue of u_p2: death-time ≈ now + tokens-left-to-generate).  Blocks that
-will die together land in the same slab, so slabs die nearly-whole — the
-mechanism by which MDC's hot/cold separation materializes in a KV pool.
+Placement (the paper's §5.3 sort-buffer, generalized to SepBIT death
+streams): blocks are appended to one of ``streams`` open slabs bucketed by
+*expected death time* (the serving analogue of u_p2: death ≈ now +
+tokens-left-to-generate, from the scheduler's EWMA length predictor).
+Blocks that will die together land in the same slab, so slabs die
+nearly-whole — the mechanism by which MDC's hot/cold separation
+materializes in a KV pool.  Compaction survivors re-route by the same
+quantiles: unlike an update-driven store, a KV block's ``est_death`` is an
+absolute clock, so surviving a clean carries no lifetime information and
+SepBIT's survivor demotion is opt-in (``demote_survivors=True``, applied
+only to *overdue* survivors — blocks alive past their predicted death,
+where the misrouting is proven).  The routing machinery itself
+lives in the core (:meth:`FrameLog.place` + :class:`StreamSet`), shared
+with the simulator and the checkpoint store; this class supplies only the
+hints.
 
 All slab bookkeeping (free list, fill, seal, {A, C, u_p2}, eviction) lives
 in the shared :class:`repro.core.logstructure.FrameLog` substrate — this
@@ -38,7 +48,7 @@ import dataclasses
 
 import numpy as np
 
-from ..core.logstructure import FREE, OPEN, USED, FrameLog, StoreStats
+from ..core.logstructure import USED, FrameLog, Placement, StoreStats
 
 NO_PAGE = -1
 
@@ -87,7 +97,8 @@ class LogStructuredKVPool:
     """
 
     def __init__(self, n_slabs: int, blocks_per_slab: int, *,
-                 policy: str = "mdc", n_open: int = 4,
+                 policy: str = "mdc", streams: int | None = None,
+                 n_open: int | None = None, demote_survivors: bool = False,
                  compact_trigger: int = 2, compact_batch: int = 4,
                  horizon: float = 1e9):
         if policy not in _SUPPORTED_POLICIES:
@@ -95,17 +106,26 @@ class LogStructuredKVPool:
                 f"KV pool cannot run policy {policy!r}: oracle policies "
                 f"(mdc_opt) need true per-page update probabilities, which a "
                 f"serving pool does not have; supported: {_SUPPORTED_POLICIES}")
+        if streams is None:
+            streams = 4 if n_open is None else n_open  # n_open: legacy alias
         self.n_slabs = n_slabs
         self.S = blocks_per_slab
         self.policy = policy
-        self.n_open = n_open
+        self.n_open = streams
+        self.demote_survivors = demote_survivors
         self.compact_trigger = compact_trigger
         self.compact_batch = compact_batch
         self.horizon = horizon
 
+        # stream_sample="live": the death-quantile cuts come from the live
+        # blocks' death estimates (the pool can enumerate them), not the
+        # recent-append ring — placement tracks the population that is
+        # actually resident.
         self.core = FrameLog(n_slabs, blocks_per_slab,
-                             auto_release_empty=True)
+                             auto_release_empty=True, n_streams=streams,
+                             stream_sample="live", stream_horizon=horizon)
         self.core._oom_msg = "KV pool out of slabs (compaction failed)"
+        self.core._noroom_msg = "KV pool: no open slab (all slabs sealed+full)"
         # Flat per-page views of the core's slot arrays (page = slab*S + slot):
         # the owner sequence id (-1 dead/empty), the estimated death clock,
         # and the reference count (shared prefix pages hold one per
@@ -114,9 +134,6 @@ class LogStructuredKVPool:
         self.block_death = self.core.slot_up2.reshape(-1)
         self.block_ref = self.core.slot_ref.reshape(-1)
 
-        # open slabs bucketed by expected-lifetime quantile (-1: none yet)
-        self._open = np.full(n_open, -1, dtype=np.int64)
-        self._open_bounds = np.empty(0, dtype=np.float64)
         # Plan executor: the engine registers a callback that performs the
         # tensor move (kernels.segment_compact) + block-table remap.  It MUST
         # run before any page id freed by the plan can be re-allocated, so
@@ -159,78 +176,40 @@ class LogStructuredKVPool:
         already-admitted sequences."""
         return self.compact_trigger * self.S
 
-    def _refresh_open_bounds(self) -> None:
-        """Lifetime-quantile boundaries spread over the active horizon."""
-        k = self.n_open - 1
-        if k <= 0:
-            self._open_bounds = np.empty(0, dtype=np.float64)
-            return
-        deaths = self.block_death[self.block_owner >= 0]
-        if len(deaths) >= 4:
-            qs = np.quantile(deaths, np.linspace(0, 1, k + 2)[1:-1])
-            self._open_bounds = np.sort(qs)
-        else:
-            self._open_bounds = np.full(k, self.u_now + self.horizon)
+    # open slabs + quantile cuts live in the core's StreamSet; legacy views:
+    @property
+    def _open(self) -> np.ndarray:
+        return self.core.streams.open
 
-    def _open_slab(self, bucket: int) -> int:
-        """Open slab for ``bucket``, allocating or borrowing as needed."""
-        s = int(self._open[bucket])
-        if s >= 0:
-            return s
-        if self.core.free_count():
-            s = self.core.alloc()
-            self._open[bucket] = s
-            return s
-        # no free slab for this lifetime class: borrow any open slab with room
-        for b in np.argsort(np.abs(np.arange(self.n_open) - bucket)):
-            s = int(self._open[b])
-            if s >= 0 and self.core.room(s):
-                return s
-        raise RuntimeError("KV pool: no open slab (all slabs sealed+full)")
+    @property
+    def _open_bounds(self) -> np.ndarray:
+        return self.core.streams.bounds
 
     def _place(self, owners: np.ndarray, deaths: np.ndarray,
                kind: str, refs: np.ndarray | None = None) -> np.ndarray:
-        """Append blocks into lifetime-bucketed open slabs; returns page ids.
-
-        Vectorized: one core.append per (bucket, slab) run — O(slabs touched),
-        not O(blocks).  Capacity must exist (the callers guarantee it), so no
-        compaction can fire mid-placement.
-        """
-        n = len(owners)
-        out = np.empty(n, dtype=np.int64)
-        self._refresh_open_bounds()
-        buckets = (np.searchsorted(self._open_bounds, deaths)
-                   if len(self._open_bounds) else np.zeros(n, dtype=np.int64))
-        for b in np.unique(buckets):
-            idx = np.flatnonzero(buckets == b)
-            pos = 0
-            while pos < len(idx):
-                s = self._open_slab(int(b))
-                take = min(self.core.room(s), len(idx) - pos)
-                sel = idx[pos:pos + take]
-                slots = self.core.append(s, owners[sel], deaths[sel],
-                                         kind=kind,
-                                         refs=None if refs is None
-                                         else refs[sel])
-                out[sel] = s * self.S + slots
-                pos += take
-                if self.core.room(s) == 0:
-                    self.core.seal(s)
-                    self._open[self._open == s] = -1
-        return out
+        """Deprecated shim: route + append via the core's unified placement."""
+        return self.core.place(owners, Placement(est_death=deaths, kind=kind,
+                                                 refs=refs))
 
     def alloc_blocks(self, seq_ids: np.ndarray,
-                     est_deaths: np.ndarray) -> np.ndarray:
+                     est_deaths) -> np.ndarray:
         """Allocate one pool page per entry; returns physical page ids.
 
-        ``est_deaths``: estimated clock values at which each block will die
-        (now + expected remaining tokens of its sequence).  Drives the §5.3
-        placement: similar-death blocks share a slab.  Compaction fires
-        *before* placement when free slabs run low, so page ids handed out by
-        one call are never moved by that same call.
+        ``est_deaths``: a :class:`Placement` hint, or (deprecated shim) a bare
+        array of estimated clock values at which each block will die (now +
+        expected remaining tokens of its sequence).  Drives the SepBIT
+        death-stream placement: similar-death blocks share a slab.
+        Compaction fires *before* placement when free slabs run low, so page
+        ids handed out by one call are never moved by that same call.
         """
         seq_ids = np.asarray(seq_ids, dtype=np.int64)
-        est_deaths = np.asarray(est_deaths, dtype=np.float64)
+        if isinstance(est_deaths, Placement):
+            p = est_deaths
+            if p.kind != "user":
+                p = dataclasses.replace(p, kind="user")
+        else:
+            p = Placement(est_death=np.asarray(est_deaths, dtype=np.float64),
+                          kind="user")
         n = len(seq_ids)
         if n == 0:
             return np.empty(0, dtype=np.int64)
@@ -242,7 +221,7 @@ class LogStructuredKVPool:
             self._compact_until(n)
         if self.core.free_frames() < n:
             raise RuntimeError("KV pool out of slabs (compaction failed)")
-        return self._place(seq_ids, est_deaths, kind="user")
+        return self.core.place(seq_ids, p)
 
     def _compact_until(self, n: int) -> None:
         """Run compaction cycles until ``n`` frames are appendable and the
@@ -315,10 +294,21 @@ class LogStructuredKVPool:
         # §5.3: sort survivors by expected death so they re-cluster; the
         # victims were freed above, so capacity for the survivors exists.
         # Reference counts ride along: sharing is invariant under relocation.
+        # SepBIT survivor inference, restricted to *overdue* blocks: a
+        # block still alive past its predicted death was provably routed
+        # too hot — demote one stream.  Blocks whose predicted death is
+        # still ahead learned nothing by surviving (KV deaths are absolute
+        # clocks, not recency guesses), so they re-route by quantile.
         order = np.argsort(res.up2_slot, kind="stable")
+        streams = (self.core.demote_streams(res.streams, res.up2_slot,
+                                            overdue=res.up2_slot <= self.u_now)
+                   if self.demote_survivors else None)
         dst = np.empty(len(src), dtype=np.int64)
-        dst[order] = self._place(res.items[order], res.up2_slot[order],
-                                 kind="gc", refs=res.refs[order])
+        dst[order] = self.core.place(
+            res.items[order],
+            Placement(est_death=res.up2_slot[order],
+                      stream=None if streams is None else streams[order],
+                      kind="gc", refs=res.refs[order]))
         plan = CompactionPlan(src_pages=src, dst_pages=dst, owners=res.items)
         if self.on_compaction is not None:
             self.on_compaction(plan)
@@ -328,6 +318,4 @@ class LogStructuredKVPool:
 
     # ------------------------------------------------------------ invariants
     def check_invariants(self) -> None:
-        self.core.check_invariants()
-        open_ids = self._open[self._open >= 0]
-        assert (self.core.seg_state[open_ids] == OPEN).all()
+        self.core.check_invariants()  # includes the stream/open-slab checks

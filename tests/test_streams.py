@@ -1,0 +1,373 @@
+"""Death-stream separation (SepBIT) behind the unified Placement API.
+
+Pins the cross-frontend placement contract: routing by est_death quantiles,
+GC-survivor demotion, the deprecated bare-argument shims, per-stream
+StoreStats accounting, and the two properties the feature must never break —
+engine token bit-identity (placement moves pages, never logits) and the
+hot/cold write-amplification win over a single stream.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # degrades to skips without hypothesis
+
+from repro.core.logstructure import (OPEN, USED, ByteLog, FrameLog, Placement,
+                                     StoreStats)
+from repro.core.simulator import run_policy
+
+
+# ------------------------------------------------------------------- routing
+
+def test_route_buckets_by_death_quantiles():
+    log = FrameLog(16, 4, n_streams=4)
+    # warm the quantile sample with a wide death range
+    log.place(np.arange(16), Placement(est_death=np.linspace(1.0, 160.0, 16)))
+    probe = Placement(est_death=np.array([1.0, 50.0, 100.0, 159.0]))
+    streams = log.route(probe, 4)
+    assert streams.tolist() == sorted(streams.tolist())  # monotone in death
+    assert streams[0] == 0 and streams[-1] == log.streams.k - 1
+    log.check_invariants()
+
+
+def test_explicit_stream_hint_wins_over_routing():
+    log = FrameLog(8, 4, n_streams=4)
+    log.place(np.arange(3), Placement(est_death=np.array([1.0, 2.0, 3.0]),
+                                      stream=np.array([3, 3, 3])))
+    open3 = int(log.streams.open[3])
+    assert open3 >= 0 and log.seg_stream[open3] == 3
+    assert int(log.seg_fill[open3]) == 3
+    # a filling append seals the stream's segment and clears the open slot
+    log.place(np.array([3]), Placement(stream=3))
+    assert log.seg_state[open3] == USED and int(log.streams.open[3]) == -1
+
+
+def test_stream_segments_seal_and_borrow():
+    """Filling a stream seals its segment; when the free list is exhausted
+    the nearest open stream with room absorbs the append instead of OOM."""
+    log = FrameLog(3, 2, n_streams=3)
+    # claim all three segments, one per stream, leaving room in each
+    log.place(np.array([0]), Placement(stream=0))
+    log.place(np.array([1]), Placement(stream=1))
+    log.place(np.array([2]), Placement(stream=2))
+    assert log.free_count() == 0
+    # stream 0 fills and seals; the next stream-0 append must borrow
+    log.place(np.array([3]), Placement(stream=0))
+    assert log.seg_state[int(log.seg_stream.tolist().index(0))] == USED
+    log.place(np.array([4]), Placement(stream=0))   # borrowed from 1 or 2
+    log.check_invariants()
+    assert log.live_items() == 5
+
+
+def test_demotion_steps_colder_and_routes_unknown():
+    log = FrameLog(8, 4, n_streams=4)
+    src = np.array([0, 1, 3, -1, -1])
+    # warm bounds so the unknown sources route deterministically
+    log.place(np.arange(8), Placement(est_death=np.linspace(1, 80, 8)))
+    demoted = log.demote_streams(src, est_death=np.array(
+        [0.0, 0.0, 0.0, 1.0, 80.0]))
+    # known sources step one colder (clipped at k-1)
+    assert demoted[:3].tolist() == [1, 2, 3]
+    # unknown sources route by est_death first, then step
+    assert demoted[3] == 1 and demoted[4] == 3
+
+
+def test_demotion_overdue_mask_spares_early_cleaned_blocks():
+    log = FrameLog(8, 4, n_streams=4)
+    # warm bounds: deaths 1..80 spread the quantile cuts
+    log.place(np.arange(8), Placement(est_death=np.linspace(1, 80, 8)))
+    src = np.array([2, 2, -1])
+    est = np.array([1.0, 80.0, 80.0])
+    overdue = np.array([True, False, False])
+    out = log.demote_streams(src, est_death=est, overdue=overdue)
+    # overdue survivor: provably routed too hot — steps one colder
+    assert out[0] == 3
+    # death still ahead: survival carries no signal — pure quantile
+    # re-route (no step), even from a known source
+    assert out[1] == 3 and out[2] == 3
+    cold = log.demote_streams(np.array([1]), est_death=np.array([1.0]),
+                              overdue=np.array([False]))
+    assert cold[0] == 0  # re-routed hot, NOT stepped from its old stream
+
+
+def test_survivors_demote_through_evacuation():
+    log = FrameLog(8, 2, n_streams=3)
+    pages = log.place(np.array([1, 2]),
+                      Placement(est_death=np.array([5.0, 6.0]),
+                                stream=np.array([0, 0])))
+    victim = int(pages[0]) // log.S  # filled exactly, so it auto-sealed
+    assert log.seg_state[victim] == USED
+    res = log.evacuate(np.array([victim]))
+    assert res.streams.tolist() == [0, 0]
+    assert log.demote_streams(res.streams).tolist() == [1, 1]
+
+
+# ---------------------------------------------------------- property testing
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1e6,
+                          allow_nan=False), min_size=1, max_size=64),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=2**32 - 1))
+def test_placement_preserves_invariants(deaths, k, seed):
+    """Any batch mix of routed appends and kills leaves the store with no
+    stranded frames: invariants hold and every placed frame is accounted to
+    exactly one stream counter."""
+    rng = np.random.default_rng(seed)
+    log = FrameLog(32, 4, n_streams=k)
+    deaths = np.asarray(deaths)
+    placed = 0
+    for i in range(0, len(deaths), 8):
+        chunk = deaths[i:i + 8]
+        ids = np.arange(placed, placed + len(chunk))
+        pages = log.place(ids, Placement(est_death=chunk))
+        assert len(np.unique(pages)) == len(pages)
+        placed += len(chunk)
+        log.check_invariants()
+        # kill a random subset of everything currently live
+        segs, slots = np.nonzero(log.slot_item >= 0)
+        take = rng.random(len(segs)) < 0.3
+        if take.any():
+            log.kill_slots(segs[take], slots[take])
+            log.check_invariants()
+    assert sum(log.stats.stream_writes) == placed
+    assert len(log.stats.stream_writes) <= k
+
+
+# -------------------------------------------------------------------- shims
+
+def test_framelog_append_accepts_placement_and_bare_array():
+    a, b = FrameLog(2, 4), FrameLog(2, 4)
+    sa, sb = a.alloc(), b.alloc()
+    a.append(sa, np.array([1, 2]), np.array([3.0, 4.0]), kind="user")
+    b.append(sb, np.array([1, 2]),
+             Placement(up2=np.array([3.0, 4.0]), kind="user"))
+    assert (a.slot_up2[sa] == b.slot_up2[sb]).all()
+    assert a.stats.user_writes == b.stats.user_writes == 2
+
+
+def test_bytelog_append_accepts_placement_and_bare_float():
+    a, b = ByteLog(), ByteLog()
+    sa, _ = a.open_stream(0)
+    sb, _ = b.open_stream(0)
+    a.append_bytes(sa, 100, 7.0)
+    b.append_bytes(sb, 100, Placement(up2=7.0))
+    assert a.seg_up2sum[sa] == b.seg_up2sum[sb] == 7.0
+    assert a.stats.user_bytes == b.stats.user_bytes == 100
+
+
+def test_pool_alloc_blocks_accepts_placement_and_bare_array():
+    from repro.serving import LogStructuredKVPool
+    pools = [LogStructuredKVPool(8, 4, streams=2) for _ in range(2)]
+    ids = np.array([1, 1, 2])
+    deaths = np.array([5.0, 5.0, 100.0])
+    pa = pools[0].alloc_blocks(ids, deaths)
+    pb = pools[1].alloc_blocks(ids, Placement(est_death=deaths))
+    assert pa.tolist() == pb.tolist()
+    # a Placement with the wrong kind is coerced: allocs are user writes
+    pc = pools[1].alloc_blocks(np.array([3]),
+                               Placement(est_death=np.array([9.0]),
+                                         kind="gc"))
+    assert len(pc) == 1
+    assert pools[1].stats.user_writes == 4 and pools[1].stats.gc_moves == 0
+
+
+# ---------------------------------------------------------------- StoreStats
+
+def test_storestats_stream_counters_snapshot_since_roundtrip():
+    s = StoreStats()
+    s.note_stream(2, 5, "user")      # extends the list to reach stream 2
+    s.note_stream(0, 1, None)
+    s.note_stream(1, 4, "gc")
+    assert s.stream_writes == [1, 0, 5] and s.stream_moves == [0, 4]
+    snap = s.snapshot()
+    s.note_stream(2, 2, "user")
+    s.note_stream(3, 7, "gc")        # appears only after the snapshot
+    d = s.since(snap)
+    assert d.stream_writes == [0, 0, 2] and d.stream_moves == [0, 0, 0, 7]
+    # snapshots are deep: mutating the original must not leak into the copy
+    assert snap.stream_writes == [1, 0, 5]
+    # json round-trip (store_state.json persists asdict(stats))
+    back = StoreStats(**json.loads(json.dumps(dataclasses.asdict(s))))
+    assert back.stream_writes == s.stream_writes
+    assert back.stream_moves == s.stream_moves
+
+
+def test_storestats_loads_legacy_dict_without_stream_keys():
+    legacy = {"user_writes": 10, "gc_moves": 3, "deaths": 5}
+    s = StoreStats(**legacy)
+    assert s.stream_writes == [] and s.stream_moves == []
+    assert s.since(StoreStats()).user_writes == 10
+
+
+# ----------------------------------------------------------------- simulator
+
+def test_sim_streams_k4_beats_single_stream_hotcold():
+    """The tentpole claim at test scale: 4 death streams cut hot/cold Wamp
+    vs the unseparated single-stream log (seeded, deterministic)."""
+    w1 = run_policy("mdc", "hot_cold", nseg=96, S=64, F=0.8, multiplier=6,
+                    streams=1, seed=3).wamp()
+    w4 = run_policy("mdc", "hot_cold", nseg=96, S=64, F=0.8, multiplier=6,
+                    streams=4, seed=3).wamp()
+    assert w4 < w1, (w4, w1)
+
+
+def test_sim_streams_conservation_and_counters():
+    from repro.core.simulator import SimConfig, Simulator
+    cfg = SimConfig(nseg=64, pages_per_seg=32, fill_factor=0.75,
+                    policy="mdc", streams=4, seed=1)
+    sim = Simulator(cfg, workload_name="hot_cold",
+                    update_frac=0.8, data_frac=0.2)
+    stats = sim.run(20_000)
+    sim.store.check_invariants()
+    # every live page is on disk (no sort buffer in streams mode)
+    assert (sim.store.page_seg[sim.w.initial_pages()] >= 0).all()
+    assert sum(stats.stream_moves) == stats.gc_moves
+    assert stats.user_writes == 20_000
+
+
+def test_sim_streams_rejects_multilog_combo():
+    from repro.core.simulator import SimConfig
+    with pytest.raises(ValueError):
+        SimConfig(policy="multilog", streams=4)
+
+
+# ---------------------------------------------------------------- engine e2e
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    from repro.configs import get_config
+    from repro.models import Model
+    return Model(get_config("qwen3-1.7b").smoke())
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_engine_tokens_bit_identical_across_streams(smoke_model, use_pallas):
+    """Placement redirects page ids, never values: enabling 4 death streams
+    (with survivor demotion) must not change a single decoded token."""
+    import jax
+
+    from repro.serving import PagedServingEngine
+    params = smoke_model.init(jax.random.PRNGKey(0))
+    prompt = (np.arange(2, 25) * 3) % smoke_model.cfg.vocab_size
+    outs = []
+    for streams in (1, 4):
+        eng = PagedServingEngine(smoke_model, n_slabs=12, blocks_per_slab=2,
+                                 page_T=8, max_batch=2, max_seq=64,
+                                 policy="mdc", params=params,
+                                 compact_trigger=2, compact_batch=3,
+                                 streams=streams, use_pallas=use_pallas)
+        rid = eng.submit(prompt, 10)
+        eng.run_to_completion()
+        outs.append(eng.finished[rid])
+        eng.pool.check_invariants()
+        m = eng.metrics()
+        assert m["streams"] == streams
+        assert sum(m["stream_writes"]) == m["blocks_written"]
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.skipif(len(__import__("jax").devices()) < 2,
+                    reason="needs >=2 (virtual) devices; CI multidevice job")
+def test_engine_streams_identity_under_mesh2(smoke_model):
+    """Streams + tensor-parallel mesh: same tokens as the unsharded
+    single-stream engine (placement stays device-invariant)."""
+    import jax
+
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving import PagedServingEngine
+    params = smoke_model.init(jax.random.PRNGKey(0))
+    prompt = np.arange(1, 18) % smoke_model.cfg.vocab_size
+    outs = []
+    for streams, mesh in ((1, None), (4, make_serving_mesh(2))):
+        eng = PagedServingEngine(smoke_model, n_slabs=10, blocks_per_slab=2,
+                                 page_T=8, max_batch=2, max_seq=64,
+                                 policy="mdc", params=params,
+                                 compact_trigger=2, compact_batch=3,
+                                 streams=streams, mesh=mesh)
+        rid = eng.submit(prompt, 8)
+        eng.run_to_completion()
+        outs.append(eng.finished[rid])
+    assert outs[0] == outs[1]
+
+
+# --------------------------------------------------------------- checkpoint
+
+def _leaves(step):
+    rng = np.random.default_rng(0)
+    frozen = rng.standard_normal((64, 8)).astype(np.float32)  # never changes
+    hot = np.full((32, 8), float(step), dtype=np.float32)     # changes/step
+    return {"frozen/w": frozen, "opt/m": hot}
+
+
+def test_checkpoint_save_never_retags(tmp_path):
+    """Two-phase save computes the batch-coldest first-write u_p2 before
+    appending, so the placeholder-then-retag path is gone."""
+    from repro.checkpoint.logstore import LogStructuredCheckpointStore
+    store = LogStructuredCheckpointStore(tmp_path, seg_bytes=1 << 12,
+                                         chunk_bytes=1 << 10, streams=4)
+
+    def boom(*a, **k):  # any retag call is a regression
+        raise AssertionError("save() retagged a placeholder u_p2")
+    store.core.retag_up2 = boom
+    for step in range(4):
+        store.save(step, _leaves(step), keep_last=2)
+    store.check_invariants()
+    got = store.restore()
+    want = _leaves(3)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+def test_checkpoint_streams_roundtrip_and_reopen(tmp_path):
+    from repro.checkpoint.logstore import LogStructuredCheckpointStore
+    store = LogStructuredCheckpointStore(tmp_path, seg_bytes=1 << 12,
+                                         chunk_bytes=1 << 10, streams=4)
+    for step in range(5):
+        store.save(step, _leaves(step), keep_last=2)
+    store.check_invariants()
+    assert sum(store.stats.stream_writes) > 0
+    # reopen: per-segment streams and the open-segment set must survive
+    again = LogStructuredCheckpointStore(tmp_path, seg_bytes=1 << 12,
+                                         chunk_bytes=1 << 10, streams=4)
+    again.check_invariants()
+    open_a = [int(x) for x in store.core.streams.open]
+    open_b = [int(x) for x in again.core.streams.open]
+    assert open_a == open_b
+    got = again.restore()
+    for k, v in _leaves(4).items():
+        np.testing.assert_array_equal(got[k], v)
+    again.save(5, _leaves(5), keep_last=2)
+    again.check_invariants()
+
+
+def test_checkpoint_loads_legacy_single_stream_state(tmp_path):
+    """A store_state.json written before death streams (single "open_sid",
+    no per-segment "stream") must still open and keep working."""
+    from repro.checkpoint.logstore import LogStructuredCheckpointStore
+    store = LogStructuredCheckpointStore(tmp_path, seg_bytes=1 << 12,
+                                         chunk_bytes=1 << 10, streams=1)
+    for step in range(3):
+        store.save(step, _leaves(step), keep_last=2)
+    state_path = tmp_path / "store_state.json"
+    state = json.loads(state_path.read_text())
+    open_sids = state.pop("open_sids")
+    open_sid = next((s for s in open_sids if s >= 0), None)
+    state["open_sid"] = open_sid
+    for d in state["segments"].values():
+        d.pop("stream")
+    for k in ("stream_writes", "stream_moves"):
+        state["stats"].pop(k, None)
+    state_path.write_text(json.dumps(state))
+
+    again = LogStructuredCheckpointStore(tmp_path, seg_bytes=1 << 12,
+                                         chunk_bytes=1 << 10, streams=4)
+    again.check_invariants()
+    got = again.restore()
+    for k, v in _leaves(2).items():
+        np.testing.assert_array_equal(got[k], v)
+    again.save(3, _leaves(3), keep_last=2)
+    again.check_invariants()
