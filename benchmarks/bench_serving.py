@@ -73,7 +73,22 @@ def pool_traffic(policy: str, *, n_slabs=64, bps=8, n_seqs=600, seed=0,
                 mean_E=round(st.mean_E(), 3), compactions=st.compactions,
                 blocks_per_s=int(st.blocks_written / max(time.time() - t0,
                                                          1e-9)),
-                wall_s=round(time.time() - t0, 2))
+                wall_s=round(time.time() - t0, 2),
+                engine_metrics=_pool_metrics(pool))
+
+
+def _pool_metrics(pool) -> dict:
+    """The store-level subset of ``engine.metrics()`` for pool-only rows, so
+    every persisted row carries a uniform ``engine_metrics`` dict (the
+    engine-run rows store the full ``eng.metrics()``)."""
+    st = pool.stats
+    return dict(blocks_written=st.blocks_written, blocks_moved=st.blocks_moved,
+                wamp=st.wamp(), mean_E_compacted=st.mean_E(),
+                compactions=st.compactions,
+                stream_writes=list(st.stream_writes),
+                stream_moves=list(st.stream_moves),
+                per_stream_wamp=st.per_stream_wamp(),
+                free_blocks=int(pool.free_blocks()))
 
 
 def shared_prefix_rows(quick: bool = True) -> list[dict]:
@@ -135,7 +150,8 @@ def shared_prefix_rows(quick: bool = True) -> list[dict]:
         row = dict(blocks_written=st.blocks_written,
                    blocks_moved=st.blocks_moved, wamp=round(st.wamp(), 3),
                    mean_E=round(st.mean_E(), 3), compactions=st.compactions,
-                   tok_per_s=round(toks / dt, 1))
+                   tok_per_s=round(toks / dt, 1),
+                   engine_metrics=eng.metrics())
         if cache:
             total = eng._prefill_tokens_total - pf_total0
             saved = eng._prefill_tokens_saved - pf_saved0
@@ -217,7 +233,8 @@ def overload_rows(quick: bool = True) -> list[dict]:
             ttft_p99_ms=e["ttft_p99_ms"], queue_ms_p50=e["queue_ms_p50"],
             queue_ms_p99=e["queue_ms_p99"], tpot_p50_ms=e["tpot_p50_ms"],
             tpot_p99_ms=e["tpot_p99_ms"], preemptions=e["preemptions"],
-            resumes=e["resumes"], recomputed_tokens=e["recomputed_tokens"]))
+            resumes=e["resumes"], recomputed_tokens=e["recomputed_tokens"],
+            engine_metrics=e["engine_metrics"]))
         assert np.isfinite(e["ttft_p99_ms"]), rows[-1]
         if preempt:
             assert e["resumes"] == e["preemptions"], rows[-1]
@@ -228,6 +245,47 @@ def overload_rows(quick: bool = True) -> list[dict]:
                 assert e["preemptions"] >= 1, \
                     ("overload must engage preemption (pool pressure too "
                      "low for the scenario to mean anything)", rows[-1])
+
+    # Traced re-run of the headline mdc config (repro.obs, DESIGN.md §12):
+    # full tracer + per-dispatch phase attribution + death-prediction
+    # calibration on.  This is the "before" evidence for async compaction —
+    # compaction's share of the dispatch-latency p99 tail — and the obs
+    # overhead check.  The untraced reference is re-measured immediately
+    # before the traced run (identical config, back to back in the same
+    # process) — the gated ``mdc (overload)`` row ran minutes earlier and
+    # open-loop tok/s drifts more run-to-run than the tracer costs.
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    trace_path = OUT_DIR / "overload_trace.json"
+    okw = dict(policy="mdc", requests=n_req, params=params, model=model,
+               verbose=False, seed=7, n_slabs=8, blocks_per_slab=4,
+               max_batch=4, stop_token=328, preemption=True,
+               arrival_rate=rate, prefill_chunk=8)
+    eu = serve_run(**okw)
+    et = serve_run(**okw, trace=str(trace_path), calibration=True,
+                   phase_log=True)
+    pr = et["phase_report"]
+    assert pr["dispatches"] > 0
+    n_events = len(json.loads(trace_path.read_text())["traceEvents"])
+    base_tps = eu["tok_per_s"]
+    overhead = 1.0 - et["tok_per_s"] / max(base_tps, 1e-9)
+    rows.append(dict(
+        policy="mdc (overload, traced)", wamp=round(et["wamp"], 3),
+        compactions=et["compactions"], tok_per_s=round(et["tok_per_s"], 1),
+        ttft_p99_ms=et["ttft_p99_ms"],
+        dispatch_p50_ms=round(pr["p50_ms"], 2),
+        dispatch_p99_ms=round(pr["p99_ms"], 2),
+        compaction_share_p99=round(pr["compaction_share_p99"], 4),
+        misroute_rate=round(et["calibration"]["misroute_rate"], 4),
+        trace_events=n_events, tok_per_s_untraced=round(base_tps, 1),
+        obs_overhead_pct=round(overhead * 100, 1),
+        engine_metrics=et["engine_metrics"], phase_report=pr,
+        calibration=et["calibration"]))
+    # generous same-process bound (the 10%-budget check runs against the
+    # adjacent untraced row; wall-clock noise on CI hosts gets headroom,
+    # like the journal-overhead margin in crash_recovery_rows)
+    assert et["tok_per_s"] > 0.75 * base_tps, \
+        (f"obs overhead {overhead:.1%} — tracing is supposed to be "
+         f"a ring-buffer append, not a tax", rows[-1])
     return rows
 
 
@@ -272,7 +330,8 @@ def chunked_prefill_rows(quick: bool = True) -> list[dict]:
                    blocks_moved=m["blocks_moved"], wamp=round(m["wamp"], 3),
                    mean_E=round(m["mean_E_compacted"], 3),
                    compactions=m["compactions"],
-                   tok_per_s=round(toks / dt, 1), dispatches=dispatches)
+                   tok_per_s=round(toks / dt, 1), dispatches=dispatches,
+                   engine_metrics=m)
         return row, [eng.finished[r] for r in rids]
 
     mono_row, mono_tokens = run_once(0)
@@ -357,7 +416,8 @@ def crash_recovery_rows(quick: bool = True) -> list[dict]:
                          tok_per_s=round(toks / dt_j, 1),
                          journal_records=m["journal_records"],
                          journal_bytes=m["journal_bytes"],
-                         journal_overhead_pct=round(overhead * 100, 1)))
+                         journal_overhead_pct=round(overhead * 100, 1),
+                         engine_metrics=m))
         # same process, identical adjacent work: a generous margin that
         # still catches pathological cost (e.g. an accidental fsync per
         # record), not wall-clock noise
@@ -396,7 +456,7 @@ def crash_recovery_rows(quick: bool = True) -> list[dict]:
                              np.percentile(recov_ms, 50)), 1),
                          recovery_ms_max=round(max(recov_ms), 1),
                          preemptions=eng.preemptions, resumes=eng.resumes,
-                         bit_identical=True))
+                         bit_identical=True, engine_metrics=eng.metrics()))
 
         # 4. overload + probabilistic transient faults: all must complete
         inj = FailureInjector(transient_prob={"dispatch": 0.02,
@@ -421,7 +481,8 @@ def crash_recovery_rows(quick: bool = True) -> list[dict]:
                          fault_retries=e["fault_retries"],
                          fault_unwinds=e["fault_unwinds"],
                          preemptions=e["preemptions"],
-                         resumes=e["resumes"]))
+                         resumes=e["resumes"],
+                         engine_metrics=e["engine_metrics"]))
     finally:
         shutil.rmtree(jroot, ignore_errors=True)
     return rows
@@ -433,7 +494,8 @@ def _e2e_row(label: str, e2e: dict, **extra) -> dict:
             "wamp": round(e2e["wamp"], 3),
             "mean_E": round(e2e["mean_E_compacted"], 3),
             "compactions": e2e["compactions"],
-            "tok_per_s": round(e2e["tok_per_s"], 1), **extra}
+            "tok_per_s": round(e2e["tok_per_s"], 1),
+            "engine_metrics": e2e["engine_metrics"], **extra}
 
 
 def run(quick: bool = True, mesh_devices: int = 0,
@@ -630,8 +692,10 @@ def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
     lines = ["### bench_serving vs committed baseline", "",
              "| policy | tok/s | base | Δ | Wamp | base | Δ "
              "| hit | prefill saved | Δ "
-             "| TTFT p50 | TTFT p99 | base | queue p99 | preempt |",
-             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
+             "| TTFT p50 | TTFT p99 | base | queue p99 | preempt "
+             "| cmpct p99 share | misroute |",
+             "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---"
+             "|---|---|"]
     for r in rows:
         b = base.get(r.get("policy"), {})
 
@@ -649,7 +713,9 @@ def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
             f"| {d('prefill_saved')} "
             f"| {_fmt(r.get('ttft_p50_ms'))} | {_fmt(r.get('ttft_p99_ms'))} "
             f"| {_fmt(b.get('ttft_p99_ms'))} | {_fmt(r.get('queue_ms_p99'))} "
-            f"| {_fmt(r.get('preemptions'))} |")
+            f"| {_fmt(r.get('preemptions'))} "
+            f"| {_fmt(r.get('compaction_share_p99'))} "
+            f"| {_fmt(r.get('misroute_rate'))} |")
     with open(path, "a") as f:
         f.write("\n".join(lines) + "\n")
 
@@ -663,7 +729,8 @@ def main(quick: bool = True, check: bool = False, mesh: int = 0,
                  "mean_E", "compactions", "blocks_per_s", "tok_per_s",
                  "tok_per_s_per_device", "hit_rate", "prefill_saved",
                  "prefill_x", "ttft_p50_ms", "ttft_p99_ms", "queue_ms_p99",
-                 "tpot_p50_ms", "preemptions", "wall_s"])
+                 "tpot_p50_ms", "preemptions", "compaction_share_p99",
+                 "misroute_rate", "wall_s"])
     save_json("bench_serving", rows, {"quick": quick})
     _github_step_summary(rows, baseline)
     if check:

@@ -37,15 +37,23 @@ HOT_UPD, HOT_DATA = 0.8, 0.2
 
 
 def sim_rows(quick: bool = True) -> list[dict]:
+    from repro.obs import DeathCalibration
     nseg, S, mult = (256, 512, 20) if not quick else (192, 256, 12)
     oracle = min_wamp_hotcold(0.8, HOT_UPD, HOT_DATA)
     rows = []
     for wl in ("hot_cold", "tpcc"):
         per_k = {}
         for k in (1, 4):
+            # death-prediction calibration on the hot/cold rows (repro.obs):
+            # per-stream actual-death histograms + misroute rate — the
+            # observed distribution the stream-auto-tuning item needs
+            # (DESIGN.md §12).  24 log2 bins cover the cold tail.
+            cal = (DeathCalibration(n_streams=k, hist_bins=24)
+                   if wl == "hot_cold" else None)
             t0 = time.time()
             st = run_policy("mdc", wl, nseg=nseg, S=S, F=0.8,
-                            multiplier=mult, streams=k, seed=0)
+                            multiplier=mult, streams=k, seed=0,
+                            calibration=cal)
             per_k[k] = st
             row = dict(scenario=f"sim {wl}", streams=k,
                        wamp=round(st.wamp(), 4),
@@ -54,12 +62,16 @@ def sim_rows(quick: bool = True) -> list[dict]:
                        stream_writes=list(st.stream_writes),
                        stream_moves=list(st.stream_moves),
                        wall_s=round(time.time() - t0, 1))
+            if cal is not None:
+                row["misroute_rate"] = round(cal.misroute_rate(), 4)
+                row["calibration"] = cal.report()
             if wl == "hot_cold":
                 row["oracle"] = round(oracle, 4)
                 if k > 1:
                     w1 = per_k[1].wamp()
                     row["gap_closed"] = round(
                         (w1 - st.wamp()) / max(w1 - oracle, 1e-9), 3)
+                    print(cal.format_report())
             rows.append(row)
     return rows
 
@@ -211,8 +223,8 @@ def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
     base = {(r.get("scenario"), r.get("streams")): r for r in baseline}
     lines = ["### bench_streams vs committed baseline", "",
              "| scenario | k | Wamp | base | Δ | oracle | gap closed "
-             "| writes/stream | moves/stream |",
-             "|---|---|---|---|---|---|---|---|---|"]
+             "| misroute | writes/stream | moves/stream |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         b = base.get((r.get("scenario"), r.get("streams")), {})
         delta = ("—" if r.get("wamp") is None or b.get("wamp") is None
@@ -222,7 +234,8 @@ def _github_step_summary(rows: list[dict], baseline: list[dict]) -> None:
         lines.append(
             f"| {r['scenario']} | {r['streams']} | {_fmt(r.get('wamp'))} "
             f"| {_fmt(b.get('wamp'))} | {delta} | {_fmt(r.get('oracle'))} "
-            f"| {_fmt(r.get('gap_closed'))} | {sw} | {sm} |")
+            f"| {_fmt(r.get('gap_closed'))} "
+            f"| {_fmt(r.get('misroute_rate'))} | {sw} | {sm} |")
     with open(path, "a") as f:
         f.write("\n".join(lines) + "\n")
 
@@ -234,9 +247,9 @@ def main(quick: bool = True, check: bool = False) -> None:
     rows = sim_rows(quick) + serve_rows(quick)
     print_table("Death-stream separation — Wamp per stream count", rows,
                 ["scenario", "streams", "wamp", "oracle", "gap_closed",
-                 "gc_moves", "blocks_written", "blocks_moved", "compactions",
-                 "hit_rate", "tok_per_s", "ttft_p99_ms", "preemptions",
-                 "bit_identical", "wall_s"])
+                 "misroute_rate", "gc_moves", "blocks_written",
+                 "blocks_moved", "compactions", "hit_rate", "tok_per_s",
+                 "ttft_p99_ms", "preemptions", "bit_identical", "wall_s"])
     save_json("bench_streams", rows, {"quick": quick})
     _github_step_summary(rows, baseline)
     if check:

@@ -106,10 +106,25 @@ class StoreStats:
 
     def wamp(self) -> float:
         """Write amplification: moved / written, in bytes when byte counts
-        exist (they always do unless the frontend counts its own writes)."""
+        exist (they always do unless the frontend counts its own writes).
+        With no user writes at all there is no meaningful ratio — report
+        0.0 rather than leaking raw move counts through a ``/ 1``."""
         if self.user_bytes:
             return self.gc_bytes / self.user_bytes
-        return self.gc_moves / max(self.user_writes, 1)
+        if self.user_writes:
+            return self.gc_moves / self.user_writes
+        return 0.0
+
+    def per_stream_wamp(self) -> list:
+        """Item-count Wamp per placement stream (moves / writes, 0.0 for a
+        stream that never took a user write)."""
+        k = max(len(self.stream_writes), len(self.stream_moves))
+        out = []
+        for i in range(k):
+            w = self.stream_writes[i] if i < len(self.stream_writes) else 0
+            m = self.stream_moves[i] if i < len(self.stream_moves) else 0
+            out.append(m / w if w else 0.0)
+        return out
 
     def mean_E(self) -> float:
         return self.sum_E_cleaned / max(self.cleaned_segments, 1)
@@ -317,6 +332,9 @@ class LogStructureBase:
             list(range(nseg - 1, -1, -1)) if use_free_list else [])
         self.clock = clock if clock is not None else Clock()
         self.stats = StoreStats()
+        # observability hooks (repro.obs) — None keeps the hot paths free
+        self.tracer = None          # obs.trace.Tracer | None
+        self.calibration = None     # obs.calibration.DeathCalibration | None
 
     # the paper's update clock, read/written by frontends
     @property
@@ -333,6 +351,13 @@ class LogStructureBase:
     def free_count(self) -> int:
         return len(self.free_list)
 
+    # segment-lifecycle trace events land on their own thread lane
+    _trace_tid = 2
+
+    def _trace_seg(self, name: str, s: int, **args) -> None:
+        self.tracer.instant(name, tid=self._trace_tid, cat="segment",
+                            seg=int(s), **args)
+
     # -- lifecycle ------------------------------------------------------------
     def alloc(self) -> int:
         """FREE → OPEN: take a segment for appending."""
@@ -340,6 +365,8 @@ class LogStructureBase:
             raise RuntimeError(self._oom_msg)
         s = self.free_list.pop()
         self.seg_state[s] = OPEN
+        if self.tracer is not None:
+            self._trace_seg("seg.open", s)
         return s
 
     def seal(self, s: int, seal_time: float | None = None) -> None:
@@ -351,6 +378,10 @@ class LogStructureBase:
         self.seg_seal_time[s] = self.u_now if seal_time is None else seal_time
         self.seg_state[s] = USED
         self.streams.clear_seg(s)
+        if self.tracer is not None:
+            self._trace_seg("seg.seal", s, live=live,
+                            up2=float(self.seg_up2[s]),
+                            stream=int(self.seg_stream[s]))
 
     def release(self, victims: np.ndarray) -> None:
         """→ FREE wholesale (cleaning frees victims after evacuation)."""
@@ -479,6 +510,18 @@ class FrameLog(LogStructureBase):
             self.item_seg = np.full(max_items, -1, dtype=np.int64)
             self.item_slot = np.full(max_items, -1, dtype=np.int64)
             self.item_up2 = np.zeros(max_items, dtype=np.float64)
+        # death-calibration side arrays (allocated by enable_calibration)
+        self.slot_est = None    # death estimate each slot was routed with
+        self.slot_wtime = None  # clock at placement
+
+    def enable_calibration(self, cal) -> None:
+        """Attach a :class:`repro.obs.DeathCalibration`; placements start
+        recording their routed estimate + write clock per slot so each
+        death can be compared with its prediction."""
+        self.calibration = cal
+        if self.slot_est is None:
+            self.slot_est = np.full((self.nseg, self.S), np.nan)
+            self.slot_wtime = np.zeros((self.nseg, self.S))
 
     def _stream_death_sample(self) -> np.ndarray:
         """"live" mode: quantile cuts over the live slots' death tags (only
@@ -599,6 +642,11 @@ class FrameLog(LogStructureBase):
                 pos += take
                 if self.room(s) == 0:
                     self.seal(s)
+        if self.calibration is not None and self.slot_est is not None:
+            est = (_per_item(p.est_death, n) if p.est_death is not None
+                   else np.full(n, np.nan))
+            self.slot_est[out // self.S, out % self.S] = est
+            self.slot_wtime[out // self.S, out % self.S] = self.u_now
         return out
 
     # -- sharing --------------------------------------------------------------
@@ -673,6 +721,11 @@ class FrameLog(LogStructureBase):
                 probs = probs[~survive]
             if len(segs) == 0:
                 return np.empty(0, dtype=np.int64)
+        if self.calibration is not None and self.slot_est is not None:
+            self.calibration.record(
+                self.seg_stream[segs], self.slot_est[segs, slots],
+                self.u_now, wtime=self.slot_wtime[segs, slots],
+                bounds=self.streams.bounds)
         up2v = self.slot_up2[segs, slots]
         self.slot_item[segs, slots] = -1
         np.add.at(self.seg_live, segs, -1)
@@ -696,6 +749,8 @@ class FrameLog(LogStructureBase):
             self.seg_fill[rewind] = 0
             self.slot_up2[rewind] = 0.0
             self.seg_up2sum[rewind] = 0.0
+            if self.slot_est is not None:
+                self.slot_est[rewind] = np.nan
         return rel
 
     def kill_items(self, items: np.ndarray,
@@ -747,6 +802,15 @@ class FrameLog(LogStructureBase):
         self.stats.gc_moves += len(items)
         self.stats.gc_bytes += len(items) * self.frame_bytes
         self.stats.cleanings += 1
+        if self.tracer is not None:
+            for i, v in enumerate(victims):
+                self._trace_seg("seg.evacuate", int(v),
+                                E=float(1.0 - counts[i] / self.S),
+                                up2=float(self.seg_up2[v]),
+                                stream=int(self.seg_stream[v]))
+            self._trace_seg("seg.clean", int(victims[0]),
+                            victims=len(victims), moves=len(items),
+                            mean_E=float((1.0 - counts / self.S).mean()))
         self.release(victims)
         if self.max_items is not None:
             self.item_seg[items] = IN_FLIGHT
@@ -760,6 +824,8 @@ class FrameLog(LogStructureBase):
         self.slot_up2[victims] = 0.0
         self.slot_ref[victims] = 0
         self.seg_fill[victims] = 0
+        if self.slot_est is not None:
+            self.slot_est[victims] = np.nan
 
     # -- invariant checks (used by property tests) ----------------------------
     def check_invariants(self) -> None:
@@ -833,6 +899,8 @@ class ByteLog(LogStructureBase):
         self.next_sid += 1
         self._grow_to(self.next_sid)
         self.seg_state[s] = OPEN
+        if self.tracer is not None:
+            self._trace_seg("seg.open", s)
         return s
 
     def seal(self, s: int, seal_time: float | None = None) -> None:
@@ -912,6 +980,16 @@ class ByteLog(LogStructureBase):
         self.stats.gc_moves += int(self.seg_live[victims].sum())
         self.stats.gc_bytes += int(live_b.sum())
         self.stats.cleanings += 1
+        if self.tracer is not None:
+            E = (written - live_b) / np.maximum(written, 1.0)
+            for i, v in enumerate(victims):
+                self._trace_seg("seg.evacuate", int(v), E=float(E[i]),
+                                up2=float(self.seg_up2[v]),
+                                stream=int(self.seg_stream[v]))
+            self._trace_seg("seg.clean", int(victims[0]),
+                            victims=len(victims),
+                            moves=int(self.seg_live[victims].sum()),
+                            mean_E=float(E.mean()))
         self.release(victims)
 
     def release(self, victims: np.ndarray) -> None:

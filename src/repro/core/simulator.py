@@ -109,7 +109,8 @@ class _Buffer:
 
 class Simulator:
     def __init__(self, cfg: SimConfig, workload: Workload | None = None,
-                 workload_name: str = "uniform", **wkw):
+                 workload_name: str = "uniform", tracer=None,
+                 calibration=None, **wkw):
         self.cfg = cfg
         S, nseg = cfg.pages_per_seg, cfg.nseg
         self.opt = cfg.policy.endswith("_opt")
@@ -164,6 +165,13 @@ class Simulator:
         self.store = SegmentStore(nseg, S, workload.max_pages(),
                                   n_streams=self.st_k)
         self.S = S
+        # observability (repro.obs): segment-lifecycle tracing and death
+        # calibration hook straight into the shared core.  Attached before
+        # the initial load so even the preload placements are recorded.
+        self.store.tracer = tracer
+        self.calibration = calibration
+        if calibration is not None:
+            self.store.enable_calibration(calibration)
 
         mp = workload.max_pages()
         self.page_bufpos = np.full(mp, -1, dtype=np.int64)

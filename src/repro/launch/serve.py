@@ -27,7 +27,11 @@ def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
     (per-token decode latency after the first) percentiles in ms, plus the
     TTFT *queue-wait* component (scheduled arrival → first admission, read
     off the engine's ``admit_wall`` stamps) — separating "the scheduler sat
-    on it" from "the prefill took that long to compute"."""
+    on it" from "the prefill took that long to compute".
+
+    All driver timestamps come from ``eng.clock`` (the engine's monotonic,
+    test-pluggable clock), so the queue-wait subtraction against
+    ``admit_wall`` happens on one timebase."""
     arrivals = list(np.cumsum(rng.exponential(1.0 / rate, size=len(reqs))))
     # (prompt, n_new, original arrival) — shed retries re-enter this list
     # scheduled at now + retry_after but keep their first arrival, so the
@@ -37,9 +41,9 @@ def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
     shed_retries = 0
     dispatches = 0
     nxt = 0
-    t0 = time.time()
+    t0 = eng.clock()
     while nxt < len(pend) or eng.has_work():
-        now = time.time() - t0
+        now = eng.clock() - t0
         while nxt < len(pend) and arrivals[nxt] <= now:
             prompt, n_new, orig = pend[nxt]
             try:
@@ -55,7 +59,7 @@ def _open_loop(eng, reqs, rate: float, rng) -> tuple[int, dict]:
             continue
         done = eng.step()
         dispatches += 1
-        now = time.time() - t0
+        now = eng.clock() - t0
         for i in np.flatnonzero(eng.rid >= 0):
             if eng._out_n[i] > 0:  # TTFT: survives preemption (out is kept)
                 first_t.setdefault(int(eng.rid[i]), now)
@@ -94,6 +98,9 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               journal_dir: str | None = None, snapshot_every: int = 0,
               audit_every: int = 0, injector=None,
               shed_queue_depth: int = 0,
+              trace: str | None = None, metrics_every: int = 0,
+              metrics_file: str | None = None, calibration: bool = False,
+              phase_log: bool = False,
               verbose: bool = True) -> dict:
     """One engine run over a request stream; returns metrics.
 
@@ -108,10 +115,23 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
     fused dispatch (that many prompt tokens per dispatch — DESIGN.md §9);
     ``admit_every_dispatch`` shrinks dispatches to per-token scheduling
     while work waits under stop-token decode (mid-dispatch exits become
-    visible immediately)."""
+    visible immediately).
+
+    Observability (repro.obs, DESIGN.md §12): ``trace`` writes a
+    Chrome-trace JSON to that path; ``metrics_every`` samples engine
+    metrics to ``metrics_file`` (JSONL) every N dispatches; ``calibration``
+    records est-death vs. actual death per block and prints the per-stream
+    report; ``phase_log`` records the per-dispatch latency split and
+    attaches ``phase_report`` to the returned row."""
     if model is None:
         model = Model(get_config(arch).smoke())
     rng = np.random.default_rng(seed)
+    tracer = None
+    if trace:
+        from ..obs import Tracer
+        tracer = Tracer(capacity=1 << 18)
+    if metrics_every and not metrics_file:
+        metrics_file = f"serve_metrics_{policy}.jsonl"
     eng = PagedServingEngine(model, n_slabs=n_slabs,
                              blocks_per_slab=blocks_per_slab, page_T=page_T,
                              max_batch=max_batch, max_seq=256, policy=policy,
@@ -129,6 +149,10 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              snapshot_every=snapshot_every,
                              audit_every=audit_every, injector=injector,
                              shed_queue_depth=shed_queue_depth,
+                             tracer=tracer, calibration=calibration,
+                             metrics_every=metrics_every,
+                             metrics_sink=metrics_file,
+                             phase_log=phase_log,
                              warmup=True)  # AOT-compile outside the timed loop
     # mixed short/long request stream (the checkerboarding driver); with
     # shared_prefix_len, every prompt opens with the same system prompt
@@ -142,7 +166,7 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
         reqs.append((np.concatenate([sys_prompt, prompt]), nnew))
 
     lat: dict = {}
-    t0 = time.time()
+    t0 = eng.clock()
     if arrival_rate > 0:
         dispatches, lat = _open_loop(eng, reqs, arrival_rate, rng)
     else:
@@ -152,12 +176,33 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
         while eng.has_work():
             eng.step()
             dispatches += 1
-    dt = time.time() - t0
-    m = eng.metrics()
+    dt = eng.clock() - t0
+    # the full metrics dict rides along uniformly (bench rows persist it)
+    engine_metrics = eng.metrics()
+    m = dict(engine_metrics)
     m.pop("dispatches", None)   # the driver-side count below is reported
     toks = sum(len(v) for v in eng.finished.values())
     out = dict(policy=policy, requests=requests, dispatches=dispatches,
-               tokens=toks, tok_per_s=toks / dt, **lat, **m)
+               tokens=toks, tok_per_s=toks / dt, **lat, **m,
+               engine_metrics=engine_metrics)
+    if tracer is not None:
+        tracer.export(trace)
+        if verbose:
+            print(f"[serve] trace: {len(tracer)} events "
+                  f"({tracer.dropped} dropped) -> {trace}")
+    if calibration:
+        out["calibration"] = eng.calibration.report()
+        if verbose:
+            print(eng.calibration.format_report())
+    if phase_log:
+        out["phase_report"] = eng.phase_report()
+        if verbose:
+            pr = out["phase_report"]
+            if pr.get("dispatches"):
+                print(f"[serve] dispatch p50={pr['p50_ms']:.2f}ms "
+                      f"p99={pr['p99_ms']:.2f}ms  compaction share of "
+                      f"p99 tail={pr['compaction_share_p99']:.1%} "
+                      f"(of total {pr['compaction_share_total']:.1%})")
     if verbose:
         extra = ""
         if "prefix_hit_rate" in m:
@@ -267,6 +312,29 @@ def main() -> None:
                          "process at R req/s (independent of completions) "
                          "and report wall-clock TTFT/TPOT p50/p99; 0 = "
                          "closed loop (submit everything up front)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="export a Chrome-trace/Perfetto JSON of the run to "
+                         "FILE (request lifecycles, per-dispatch phase "
+                         "spans, segment open/seal/evacuate/clean events); "
+                         "with several --policies the policy name is "
+                         "suffixed to FILE")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="sample engine metrics (Wamp, free blocks, "
+                         "per-stream writes/moves, queue depth, ...) to a "
+                         "JSONL file every N dispatches, with per-interval "
+                         "deltas (0 = off; see --metrics-file)")
+    ap.add_argument("--metrics-file", default=None, metavar="FILE",
+                    help="JSONL sink for --metrics-every (default "
+                         "serve_metrics_<policy>.jsonl)")
+    ap.add_argument("--calibration", action="store_true",
+                    help="record est-death vs. actual death per block and "
+                         "print the per-stream misroute rate + death-time "
+                         "histograms at the end of the run")
+    ap.add_argument("--phase-log", action="store_true",
+                    help="record the per-dispatch latency split (admit / "
+                         "upload / dispatch / host sync / compaction / "
+                         "journal) and print compaction's share of the "
+                         "dispatch p99 tail")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     use_pallas = {"auto": None, "on": True, "off": False}[args.use_pallas]
@@ -305,7 +373,14 @@ def main() -> None:
                                       if args.journal else None),
                          snapshot_every=args.snapshot_every,
                          audit_every=args.audit, injector=injector,
-                         shed_queue_depth=args.shed_queue_depth)
+                         shed_queue_depth=args.shed_queue_depth,
+                         trace=(args.trace if len(args.policies) == 1
+                                else f"{args.trace}.{p}") if args.trace
+                               else None,
+                         metrics_every=args.metrics_every,
+                         metrics_file=args.metrics_file,
+                         calibration=args.calibration,
+                         phase_log=args.phase_log)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

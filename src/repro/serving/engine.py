@@ -56,6 +56,7 @@ from ..models.layers import rmsnorm
 from .. import kernels
 from ..core.logstructure import JournalLog, Placement
 from ..distributed.fault import TransientFault, backoff_delay
+from ..obs import DeathCalibration, MetricsLogger
 from .kvcache import LogStructuredKVPool
 from .prefix_cache import PrefixCache
 from .scheduler import (AdmissionShed, choose_preempt_victims,
@@ -366,7 +367,9 @@ class PagedServingEngine:
                  journal_dir: str | None = None, snapshot_every: int = 0,
                  audit_every: int = 0, injector=None, fault_retries: int = 2,
                  fault_backoff_s: float = 0.0, shed_queue_depth: int = 0,
-                 journal_fsync: bool = False):
+                 journal_fsync: bool = False, clock=None, tracer=None,
+                 metrics_every: int = 0, metrics_sink=None,
+                 calibration: bool = False, phase_log: bool = False):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
@@ -554,6 +557,30 @@ class PagedServingEngine:
         self.recovery: dict | None = None   # set by recovery.recover_engine
         self._snap_id = 0
         self._snap_store = None       # lazy LogStructuredCheckpointStore
+        # --- observability (repro.obs, DESIGN.md §12) ---------------------
+        # ONE monotonic, test-pluggable clock for every engine timestamp:
+        # admit_wall, dispatch timing, trace spans and metric rows share
+        # this timebase, so queue-wait and compute splits are comparable.
+        self.clock = clock if clock is not None else time.perf_counter
+        self.tracer = tracer
+        if tracer is not None:
+            self.pool.attach_tracer(tracer)
+            if self.journal is not None:
+                self.journal.core.tracer = tracer
+        self.calibration = (DeathCalibration(n_streams=self.streams)
+                            if calibration else None)
+        if self.calibration is not None:
+            self.pool.enable_calibration(self.calibration)
+        self.metrics_every = int(metrics_every)
+        self._metrics_logger = (
+            MetricsLogger(metrics_sink, clock=self.clock)
+            if self.metrics_every and metrics_sink is not None else None)
+        # per-dispatch phase attribution rows; recorded when phase_log=True
+        # or a tracer is attached (bounded — old dispatches roll off)
+        self.phase_log = bool(phase_log)
+        self.dispatch_phases: collections.deque = collections.deque(
+            maxlen=100_000)
+        self._phase_acc: dict | None = None
         if warmup:
             self.warmup()
 
@@ -644,8 +671,16 @@ class PagedServingEngine:
         (better to die than to serve unjournaled state)."""
         if self.journal is None:
             return None
-        return self._with_retries(
-            "journal", lambda: self.journal.append_record(rec))
+        ph = self._phase_acc
+        if ph is None:
+            return self._with_retries(
+                "journal", lambda: self.journal.append_record(rec))
+        t = self.clock()
+        try:
+            return self._with_retries(
+                "journal", lambda: self.journal.append_record(rec))
+        finally:
+            ph["journal"] = ph.get("journal", 0.0) + self.clock() - t
 
     def _with_retries(self, op: str, fn):
         """Run ``fn`` with fault injection keyed by ``op`` and bounded
@@ -667,6 +702,23 @@ class PagedServingEngine:
                     time.sleep(delay)
         raise AssertionError("unreachable")
 
+    def _timed_retries(self, op: str, fn):
+        """:meth:`_with_retries` plus phase attribution: with a phase
+        accumulator active, ``op``'s wall time lands in the current
+        dispatch's split (and a trace span when a tracer is attached)."""
+        ph, tr = self._phase_acc, self.tracer
+        if ph is None:
+            return self._with_retries(op, fn)
+        t = self.clock()
+        if tr is not None:
+            tr.begin(op, cat="engine")
+        try:
+            return self._with_retries(op, fn)
+        finally:
+            if tr is not None:
+                tr.end(op)
+            ph[op] = ph.get(op, 0.0) + self.clock() - t
+
     # ------------------------------------------------------------- requests
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
         if max_new_tokens < 1:
@@ -687,6 +739,10 @@ class PagedServingEngine:
         self._next_rid += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32),
                                   max_new_tokens))
+        if self.tracer is not None:
+            self.tracer.async_begin("req", rid, tid=1, cat="request",
+                                    prompt_len=len(prompt),
+                                    max_new=int(max_new_tokens))
         self._jrec({"t": "sub", "rid": rid,
                     "p": [int(t) for t in np.asarray(prompt)],
                     "n": int(max_new_tokens)})
@@ -958,7 +1014,11 @@ class PagedServingEngine:
         # a chunked prefill can be preempted before its first token, and
         # its restart is a resume too — which is what keeps the
         # ``resumes == preemptions`` ledger exact at drain.
-        self.admit_wall.setdefault(req.rid, time.time())
+        self.admit_wall.setdefault(req.rid, self.clock())
+        if self.tracer is not None:
+            self.tracer.async_instant(
+                "req.resume" if from_resume else "req.admit",
+                req.rid, tid=1, cat="request")
         if from_resume:
             self.resumes += 1
         if resume:
@@ -1165,6 +1225,9 @@ class PagedServingEngine:
         rid = int(self.rid[i])
         self.finished[rid] = self._out[i][:self._out_n[i]].tolist()
         self.length_predictor.observe(int(self._out_n[i]))
+        if self.tracer is not None:
+            self.tracer.async_end("req", rid, tid=1, cat="request",
+                                  tokens=int(self._out_n[i]))
         self._jrec({"t": "fin", "rid": rid})
         self._release_slot(i)
 
@@ -1176,6 +1239,9 @@ class PagedServingEngine:
         the emitted span, bit-identically with never having been
         preempted."""
         self.preemptions += 1
+        if self.tracer is not None:
+            self.tracer.async_instant("req.preempt", int(self.rid[i]),
+                                      tid=1, cat="request")
         self._jrec({"t": "pre", "rid": int(self.rid[i])})
         # a slot preempted mid-replay (out_n < _jskip) still *knows* the
         # full journaled span — the carried buffer holds it past out_n
@@ -1230,15 +1296,55 @@ class PagedServingEngine:
 
     def step(self) -> list[int]:
         """Admit, then decode up to ``max_decode_chunk`` tokens for every
-        active slot in one device dispatch.  Returns finished request ids."""
-        self._admit()
+        active slot in one device dispatch.  Returns finished request ids.
+
+        With a tracer attached or ``phase_log=True``, each dispatch is
+        split into attributed phases (admit / alloc / upload / dispatch /
+        host_sync, plus compaction and journal time accumulated wherever
+        they fire) — the latency breakdown the overload bench reports.
+        Disabled (the default), the whole apparatus is one ``None`` check."""
+        tr = self.tracer
+        ph = {} if (self.phase_log or tr is not None) else None
+        self._phase_acc = ph
+        t_step = self.clock()
+        if tr is not None:
+            tr.begin("step", cat="engine", dispatch=self.dispatches)
+        try:
+            return self._step_impl(ph, tr, t_step)
+        finally:
+            self._phase_acc = None
+            if tr is not None:
+                tr.counter("pool", free_blocks=self.pool.free_blocks(),
+                           queue_depth=len(self.queue) + len(self._resume),
+                           active_slots=int((self.rid >= 0).sum()))
+                tr.end("step")
+            if ph is not None and ph.pop("dispatched", False):
+                ph["total"] = self.clock() - t_step
+                self.dispatch_phases.append(ph)
+            if (self._metrics_logger is not None
+                    and self.dispatches % self.metrics_every == 0):
+                self._sample_metrics()
+
+    def _step_impl(self, ph, tr, t_step) -> list[int]:
+        if ph is None:
+            self._admit()
+        else:
+            t_a = self.clock()
+            if tr is not None:
+                tr.begin("admit", cat="engine")
+            self._admit()
+            if tr is not None:
+                tr.end("admit")
+            ph["admit"] = self.clock() - t_a
         done, self._admit_done = self._admit_done, []
         active = (self.rid >= 0) & ~self._prefilling
         pf = self._pf
         if not active.any() and pf is None:
             return done
         self.dispatches += 1
-        t0 = time.perf_counter()
+        t0 = self.clock()
+        if ph is not None:
+            ph["dispatched"] = True
 
         # pages for the incoming tokens must exist before the dispatch writes
         # them; one batched alloc covers every slot at a page boundary
@@ -1262,6 +1368,7 @@ class PagedServingEngine:
                 if not active.any() and pf is None:
                     return done
         if growing.size:
+            t_al = self.clock() if ph is not None else 0.0
             rem = np.array([self._predict_remaining(
                 int(self._out_n[j] + self.to_gen[j]), int(self._out_n[j]))
                 for j in growing])
@@ -1274,9 +1381,20 @@ class PagedServingEngine:
             self._bt_dirty = True
             self._jrec({"t": "al", "r": self.rid[growing].tolist(),
                         "pg": pages.tolist()})
+            if ph is not None:
+                ph["alloc"] = self.clock() - t_al
 
         n = self._event_horizon(active)
-        self._sync_device()
+        if ph is None:
+            self._sync_device()
+        else:
+            t_up = self.clock()
+            if tr is not None:
+                tr.begin("upload", cat="engine")
+            self._sync_device()
+            if tr is not None:
+                tr.end("upload")
+            ph["upload"] = self.clock() - t_up
         if pf is not None:
             # ---- fused dispatch: one prefill chunk + n decode tokens ----
             C, T = self.prefill_chunk, self.page_T
@@ -1309,24 +1427,27 @@ class PagedServingEngine:
                         np.int32(pos), np.int32(last_idx),
                         kv_len=pf["kv_len"])
             (out, first, self.k_pools, self.v_pools, self._lens_dev,
-             self._tok_dev) = self._with_retries("dispatch", _dispatch_fused)
+             self._tok_dev) = self._timed_retries("dispatch", _dispatch_fused)
             pf["pos"] = pos + C
             # host-only progress marker (the slot is decode-masked, so the
             # stale device-side value is never consumed — no upload)
             self.lens[pi] = min(pf["pos"], pf["plen"])
             self.prefill_chunks_dispatched += 1
+            if tr is not None:
+                tr.async_instant("req.prefill_chunk", int(self.rid[pi]),
+                                 tid=1, cat="request", pos=int(pf["pos"]))
         else:
             is_last = False
             (out, self.k_pools, self.v_pools, self._lens_dev,
-             self._tok_dev) = self._with_retries(
+             self._tok_dev) = self._timed_retries(
                 "dispatch",
                 lambda: self._decode(self.params, self.k_pools, self.v_pools,
                                      self._bt_dev, self._lens_dev,
                                      self._tok_dev, self._act_dev,
                                      np.int32(n)))
         # ONE host sync per dispatch, not per token
-        toks = self._with_retries("host_sync",
-                                  lambda: np.asarray(out))[:n]
+        toks = self._timed_retries("host_sync",
+                                   lambda: np.asarray(out))[:n]
 
         # host bookkeeping: O(active slots) per dispatch.  With stop tokens
         # a slot may have stopped mid-dispatch: it emitted tokens only up to
@@ -1380,7 +1501,7 @@ class PagedServingEngine:
         if act.size:
             tot = int(emitted[act].sum())
             if tot > 0:   # decode-rate EWMA feeds the shed retry-after hint
-                dt = time.perf_counter() - t0
+                dt = self.clock() - t0
                 self._tpot_ewma = 0.8 * self._tpot_ewma + 0.2 * (dt / tot)
         if (self.journal is not None and self.snapshot_every
                 and self.dispatches % self.snapshot_every == 0):
@@ -1400,6 +1521,10 @@ class PagedServingEngine:
     def _execute_plan(self, plan) -> None:
         if len(plan) == 0:
             return
+        ph, tr = self._phase_acc, self.tracer
+        t_c = self.clock() if ph is not None else 0.0
+        if tr is not None:
+            tr.begin("compaction", cat="engine", moves=len(plan))
         # pad the plan to a power-of-two bucket with trash→trash moves so
         # plan sizes share compiled executables
         src, dst = plan.padded(_pow2(len(plan)), self.trash_page)
@@ -1423,6 +1548,11 @@ class PagedServingEngine:
         if self.prefix_cache is not None:
             self.prefix_cache.remap(lut)
         self._bt_dirty = True
+        if tr is not None:
+            tr.end("compaction")
+        if ph is not None:
+            # accumulated, not assigned: several plans can fire per dispatch
+            ph["compaction"] = ph.get("compaction", 0.0) + self.clock() - t_c
 
     # ------------------------------------------------------------ integrity
     def audit(self) -> None:
@@ -1529,6 +1659,7 @@ class PagedServingEngine:
             "streams": self.streams,
             "stream_writes": list(st.stream_writes),
             "stream_moves": list(st.stream_moves),
+            "per_stream_wamp": st.per_stream_wamp(),
             "free_blocks": self.pool.free_blocks(),
             "preemptions": self.preemptions,
             "resumes": self.resumes,
@@ -1561,7 +1692,56 @@ class PagedServingEngine:
                 prefix_evictions=self.prefix_cache.evictions,
                 frames_shared=st.frames_shared,
             )
+        if self.calibration is not None:
+            m["misroute_rate"] = self.calibration.misroute_rate()
         return m
+
+    def _sample_metrics(self) -> None:
+        """One metrics-logger row: the cumulative :meth:`metrics` dict plus
+        point-in-time gauges (JSONL sink, ``metrics_every`` cadence)."""
+        m = self.metrics()
+        m.pop("recovery", None)   # nested dict, not a time series
+        m["u_now"] = float(self.pool.u_now)
+        m["queue_depth"] = len(self.queue) + len(self._resume)
+        m["active_slots"] = int((self.rid >= 0).sum())
+        self._metrics_logger.sample(m)
+
+    def phase_report(self) -> dict:
+        """Aggregate the per-dispatch phase splits (``phase_log=True`` or a
+        tracer attached): per-phase means, the dispatch-latency p50/p99, and
+        compaction's share of the p99 tail — the attribution the async-
+        compaction work needs as its "before" evidence.
+
+        Phases can nest (a compaction fires *inside* the admit/alloc path
+        when allocation trips the pool's trigger), so per-phase tail shares
+        may overlap and sum past 1.0 — each answers "what fraction of the
+        tail's wall time had this phase running", not a partition."""
+        rows = list(self.dispatch_phases)
+        if not rows:
+            return {"dispatches": 0}
+        tot = np.array([r["total"] for r in rows])
+        p50, p99 = np.quantile(tot, [0.5, 0.99])
+        tail = [r for r in rows if r["total"] >= p99]
+        tail_tot = sum(r["total"] for r in tail)
+        keys = sorted({k for r in rows for k in r} - {"total"})
+        return {
+            "dispatches": len(rows),
+            "p50_ms": float(p50) * 1e3,
+            "p99_ms": float(p99) * 1e3,
+            "phase_mean_ms": {
+                k: float(np.mean([r.get(k, 0.0) for r in rows])) * 1e3
+                for k in keys},
+            "phase_share_p99_tail": {
+                k: (sum(r.get(k, 0.0) for r in tail) / tail_tot
+                    if tail_tot else 0.0)
+                for k in keys},
+            "compaction_share_p99": (
+                sum(r.get("compaction", 0.0) for r in tail) / tail_tot
+                if tail_tot else 0.0),
+            "compaction_share_total": float(
+                sum(r.get("compaction", 0.0) for r in rows) / tot.sum())
+            if tot.sum() else 0.0,
+        }
 
 
 def _prefill_cont_fn(params, k_pools, v_pools, pages, toks, true_len, *,

@@ -161,6 +161,18 @@ class LogStructuredKVPool:
     def free_slabs(self) -> list[int]:
         return self.core.free_list
 
+    # -- observability (repro.obs) -------------------------------------------
+    def attach_tracer(self, tracer) -> None:
+        """Stream segment-lifecycle events (seg.open/seal/evacuate/clean)
+        to ``tracer`` from the shared core; None detaches."""
+        self.core.tracer = tracer
+
+    def enable_calibration(self, cal) -> None:
+        """Route block deaths to a :class:`repro.obs.DeathCalibration` —
+        each block's est-death (the absolute clock it was placed with) is
+        compared against ``u_now`` when it actually dies."""
+        self.core.enable_calibration(cal)
+
     # ------------------------------------------------------------ allocation
     def free_blocks(self) -> int:
         return self.core.free_frames()
