@@ -55,6 +55,8 @@ from . import policies as P
 FREE = 0  # on the free list
 OPEN = 1  # currently being filled (multi-log open segments)
 USED = 2  # sealed, eligible for cleaning
+FENCED = 3  # evacuated under an uncommitted (async) plan: not allocatable,
+#             not re-victimizable, until the owner commits the move
 
 IN_FLIGHT = -2  # item_seg marker: evacuated, not yet re-written
 
@@ -101,6 +103,11 @@ class StoreStats:
     sum_E_cleaned: float = 0.0  # Σ empty-fraction of cleaned segments
     frames_shared: int = 0     # extra references taken on live frames
     ref_drops: int = 0         # decrefs that did NOT free (sharing survived)
+    # async-cleaning deferred-move debt (DESIGN.md §13): items whose move
+    # was *planned* (fenced evacuation) vs. *committed* (remap applied and
+    # the fenced victims released); planned - committed = moves in flight
+    gc_planned: int = 0
+    gc_committed: int = 0
     stream_writes: list = dataclasses.field(default_factory=list)
     stream_moves: list = dataclasses.field(default_factory=list)
 
@@ -128,6 +135,10 @@ class StoreStats:
 
     def mean_E(self) -> float:
         return self.sum_E_cleaned / max(self.cleaned_segments, 1)
+
+    def deferred_moves(self) -> int:
+        """Moves planned but not yet committed (async-cleaning debt)."""
+        return self.gc_planned - self.gc_committed
 
     def note_stream(self, stream: int, n: int, kind: str | None) -> None:
         """Count ``n`` items placed into ``stream`` (kind "gc": a move)."""
@@ -393,6 +404,31 @@ class LogStructureBase:
         self.seg_stream[victims] = -1
         if self._use_free_list:
             self.free_list.extend(int(s) for s in victims)
+
+    def fence(self, victims: np.ndarray) -> None:
+        """→ FENCED: accounting has left the victims (their survivors were
+        re-placed at plan time) but the frames must not be reallocated until
+        the owner commits the deferred device move + remap — a reader still
+        resolves to the source frames until then (DESIGN.md §13)."""
+        victims = np.asarray(victims, dtype=np.int64)
+        self.seg_state[victims] = FENCED
+        self.seg_live[victims] = 0
+        self.seg_up2sum[victims] = 0.0
+        self.seg_prob[victims] = 0.0
+        self.seg_stream[victims] = -1
+
+    def commit_fenced(self, victims: np.ndarray) -> None:
+        """FENCED → FREE: the deferred move committed; the frames rejoin
+        the free list."""
+        victims = np.asarray(victims, dtype=np.int64)
+        if len(victims) == 0:
+            return
+        assert (self.seg_state[victims] == FENCED).all(), \
+            "commit_fenced on a non-fenced segment"
+        self.release(victims)
+
+    def fenced_count(self) -> int:
+        return int((self.seg_state == FENCED).sum())
 
     # -- death-stream routing -------------------------------------------------
     def _stream_death_sample(self) -> np.ndarray:
@@ -774,12 +810,18 @@ class FrameLog(LogStructureBase):
             seal_time=self.seg_seal_time, u_now=self.u_now,
             seg_prob=self.seg_prob, eligible=eligible)
 
-    def evacuate(self, victims: np.ndarray) -> EvacResult:
+    def evacuate(self, victims: np.ndarray, *, fence: bool = False) -> EvacResult:
         """Gather victims' live frames, free the victims, account the cycle.
 
         GC moves are counted here (once); re-appending the survivors should
         use ``kind="gc"`` (uncounted).  With back-pointers, survivors are
-        marked IN_FLIGHT until re-written."""
+        marked IN_FLIGHT until re-written.
+
+        ``fence=True`` (async cleaning, DESIGN.md §13): the victims go to
+        FENCED instead of FREE — their accounting is cleared but the frames
+        stay un-allocatable until :meth:`commit_fenced`, because the
+        deferred device move still reads them and stale external page ids
+        still resolve to them."""
         victims = np.asarray(victims, dtype=np.int64)
         assert (self.seg_state[victims] == USED).all()
         rows = self.slot_item[victims]                    # (k, S)
@@ -811,7 +853,11 @@ class FrameLog(LogStructureBase):
             self._trace_seg("seg.clean", int(victims[0]),
                             victims=len(victims), moves=len(items),
                             mean_E=float((1.0 - counts / self.S).mean()))
-        self.release(victims)
+        if fence:
+            self.stats.gc_planned += len(items)
+            self.fence(victims)
+        else:
+            self.release(victims)
         if self.max_items is not None:
             self.item_seg[items] = IN_FLIGHT
             self.item_slot[items] = -1
@@ -820,6 +866,17 @@ class FrameLog(LogStructureBase):
     def release(self, victims: np.ndarray) -> None:
         victims = np.asarray(victims, dtype=np.int64)
         super().release(victims)
+        self._clear_slots(victims)
+
+    def fence(self, victims: np.ndarray) -> None:
+        victims = np.asarray(victims, dtype=np.int64)
+        super().fence(victims)
+        # slot accounting leaves with the survivors (block_owner reads of a
+        # fenced frame see -1, so an un-resolved free trips "double free"
+        # instead of corrupting the destination's refcount)
+        self._clear_slots(victims)
+
+    def _clear_slots(self, victims: np.ndarray) -> None:
         self.slot_item[victims] = -1
         self.slot_up2[victims] = 0.0
         self.slot_ref[victims] = 0
@@ -837,6 +894,14 @@ class FrameLog(LogStructureBase):
             "slot_ref / slot_item disagree on liveness"
         assert (self.seg_live[self.seg_state == FREE] == 0).all()
         assert self.free_count() == int((self.seg_state == FREE).sum())
+        # fenced segments: accounting already left (live == 0, untagged),
+        # but the frames are NOT free — never on the free list
+        fenced = self.seg_state == FENCED
+        assert (self.seg_live[fenced] == 0).all(), "fenced segment has live"
+        assert (self.seg_stream[fenced] == -1).all(), \
+            "FENCED segment still tagged with a stream"
+        assert not (fenced[np.asarray(self.free_list, dtype=np.int64)].any()
+                    if self.free_list else False), "fenced segment in free list"
         # stream bookkeeping: open-stream segments are OPEN and tagged; FREE
         # segments carry no stream (no frame is stranded in a ghost stream)
         open_ids = self.streams.open[self.streams.open >= 0]

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import numpy as np
 
@@ -101,6 +102,7 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
               trace: str | None = None, metrics_every: int = 0,
               metrics_file: str | None = None, calibration: bool = False,
               phase_log: bool = False,
+              async_compaction: bool = False, clean_budget: int = 0,
               verbose: bool = True) -> dict:
     """One engine run over a request stream; returns metrics.
 
@@ -122,7 +124,16 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
     metrics to ``metrics_file`` (JSONL) every N dispatches; ``calibration``
     records est-death vs. actual death per block and prints the per-stream
     report; ``phase_log`` records the per-dispatch latency split and
-    attaches ``phase_report`` to the returned row."""
+    attaches ``phase_report`` to the returned row.
+
+    ``async_compaction`` lifts cleaning out of the dispatch path
+    (DESIGN.md §13): victims are fenced and evacuated in budget-sized
+    sub-plans spread across dispatches instead of one synchronous burst;
+    ``clean_budget`` caps blocks moved per dispatch (0 = the scheduler
+    default)."""
+    if n_open is not None:
+        warnings.warn("n_open= is deprecated; use streams=",
+                      DeprecationWarning, stacklevel=2)
     if model is None:
         model = Model(get_config(arch).smoke())
     rng = np.random.default_rng(seed)
@@ -153,6 +164,8 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
                              metrics_every=metrics_every,
                              metrics_sink=metrics_file,
                              phase_log=phase_log,
+                             async_compaction=async_compaction,
+                             clean_budget=clean_budget,
                              warmup=True)  # AOT-compile outside the timed loop
     # mixed short/long request stream (the checkerboarding driver); with
     # shared_prefix_len, every prompt opens with the same system prompt
@@ -182,9 +195,14 @@ def serve_run(*, arch: str = "qwen3-1.7b", requests: int = 14,
     m = dict(engine_metrics)
     m.pop("dispatches", None)   # the driver-side count below is reported
     toks = sum(len(v) for v in eng.finished.values())
+    # stable digest over the decoded streams (int-tuple hashing does not
+    # depend on PYTHONHASHSEED): lets two runs assert bit-identical output
+    # without shipping every token through the bench row
+    digest = hash(tuple(sorted((int(r), tuple(int(t) for t in v))
+                               for r, v in eng.finished.items())))
     out = dict(policy=policy, requests=requests, dispatches=dispatches,
-               tokens=toks, tok_per_s=toks / dt, **lat, **m,
-               engine_metrics=engine_metrics)
+               tokens=toks, tok_per_s=toks / dt, finished_digest=digest,
+               **lat, **m, engine_metrics=engine_metrics)
     if tracer is not None:
         tracer.export(trace)
         if verbose:
@@ -335,6 +353,15 @@ def main() -> None:
                          "upload / dispatch / host sync / compaction / "
                          "journal) and print compaction's share of the "
                          "dispatch p99 tail")
+    ap.add_argument("--async-compaction", action="store_true",
+                    help="lift cleaning out of the dispatch path: fence "
+                         "victims and spread their evacuation over "
+                         "budget-sized sub-plans across dispatches "
+                         "(planned / in-flight / committed; DESIGN.md §13)")
+    ap.add_argument("--clean-budget", type=int, default=0, metavar="B",
+                    help="async compaction: max blocks moved per dispatch "
+                         "at steady state (0 = scheduler default; the "
+                         "budget self-raises with the free-slab deficit)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     use_pallas = {"auto": None, "on": True, "off": False}[args.use_pallas]
@@ -380,7 +407,9 @@ def main() -> None:
                          metrics_every=args.metrics_every,
                          metrics_file=args.metrics_file,
                          calibration=args.calibration,
-                         phase_log=args.phase_log)
+                         phase_log=args.phase_log,
+                         async_compaction=args.async_compaction,
+                         clean_budget=args.clean_budget)
                for p in args.policies]
     best = min(results, key=lambda r: r["wamp"])
     print(f"[serve] lowest block-move overhead: {best['policy']} "

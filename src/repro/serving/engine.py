@@ -54,12 +54,13 @@ from ..models import attention as att
 from ..models import transformer as tfm
 from ..models.layers import rmsnorm
 from .. import kernels
-from ..core.logstructure import JournalLog, Placement
+from ..core.logstructure import FENCED, JournalLog, Placement
 from ..distributed.fault import TransientFault, backoff_delay
 from ..obs import DeathCalibration, MetricsLogger
 from .kvcache import LogStructuredKVPool
 from .prefix_cache import PrefixCache
-from .scheduler import (AdmissionShed, choose_preempt_victims,
+from .scheduler import (DEFAULT_CLEAN_BUDGET, AdmissionShed,
+                        choose_preempt_victims, clean_budget,
                         make_length_predictor, normalize_prefill_chunk,
                         retry_after_estimate)
 
@@ -369,7 +370,8 @@ class PagedServingEngine:
                  fault_backoff_s: float = 0.0, shed_queue_depth: int = 0,
                  journal_fsync: bool = False, clock=None, tracer=None,
                  metrics_every: int = 0, metrics_sink=None,
-                 calibration: bool = False, phase_log: bool = False):
+                 calibration: bool = False, phase_log: bool = False,
+                 async_compaction: bool = False, clean_budget: int = 0):
         cfg = model.cfg
         self.model, self.cfg = model, cfg
         self.page_T = page_T
@@ -407,6 +409,22 @@ class PagedServingEngine:
         # synchronous plan execution: tensor move + block-table remap happen
         # before any compaction-freed page id can be re-allocated
         self.pool.on_compaction = self._execute_plan
+        # --- async, budgeted compaction (DESIGN.md §13) -------------------
+        # planned / in-flight / committed pipeline: the per-step pump plans
+        # fenced sub-plans ahead of pressure, issues their move dispatches
+        # double-buffered against decode, and applies the LUT remap at the
+        # next step's sync point.  The synchronous callback above stays
+        # registered as the pressure fallback (the pool drains the pipeline
+        # first via on_drain, then cleans synchronously if still short).
+        self.async_compaction = bool(async_compaction)
+        self.clean_budget = (int(clean_budget) if clean_budget > 0
+                             else DEFAULT_CLEAN_BUDGET)
+        self._inflight_plans: list = []  # moves issued, remap pending
+        if self.async_compaction:
+            self.pool.on_drain = self._drain_compaction
+            # alloc-path trigger crossings fence-plan at this grain instead
+            # of compacting synchronously; the pump issues the moves
+            self.pool.plan_budget = self.clean_budget
         # shared-prefix KV reuse: full-page prompt prefixes keyed in a radix
         # tree over the pool's physical pages (refcounted; DESIGN.md §7)
         self.prefix_cache = (
@@ -622,6 +640,19 @@ class PagedServingEngine:
                          self._bt_dev, self._lens_dev, self._tok_dev,
                          self._act_dev, np.int32(1)))
         out.block_until_ready()
+        if self.async_compaction:
+            # the pump owns the compaction move kernel, so its pow2 buckets
+            # compile here, not inside a serving dispatch: sub-plans are
+            # budget-capped, so the key space is known up front.  Trash→trash
+            # moves are inert (only the trash page is written).
+            bucket, top = 1, _pow2(max(self.clean_budget, self.pool.S))
+            while bucket <= top:
+                trash = np.full(bucket, self.trash_page, np.int32)
+                self.k_pools, self.v_pools = self._move(
+                    self.k_pools, self.v_pools, self._put_rep(trash),
+                    self._put_rep(trash), use_pallas=self.use_pallas)
+                bucket *= 2
+            jax.block_until_ready(self.k_pools)
         T = self.page_T
         max_prompt_bucket = _pow2(self.max_pages_per_seq * T)
         if self.prefill_chunk:
@@ -813,9 +844,15 @@ class PagedServingEngine:
         tree still references, which the request is about to splice, not
         reclaim."""
         avail = self.pool.free_blocks()
+        # fenced victim slabs are reclaimable on demand exactly like
+        # evictable cache pages: the alloc path drains the async pipeline
+        # when frames run genuinely short, so counting them here keeps
+        # fencing from starving admission into needless preemption
+        avail += self.pool.core.fenced_count() * self.pool.S
         if self.prefix_cache is not None:
-            overlap = int((self.pool.block_ref[
-                np.asarray(hit_pages, np.int64)] == 1).sum()) \
+            # cached ids may be stale across a pending remap — resolve first
+            overlap = int((self.pool.block_ref[self.pool.resolve(
+                np.asarray(hit_pages, np.int64))] == 1).sum()) \
                 if hit_pages else 0
             avail += max(self.prefix_cache.evictable() - overlap, 0)
         return avail
@@ -899,10 +936,15 @@ class PagedServingEngine:
         sequence to fund its *own* growth would loop forever)."""
         def avail() -> int:
             a = self.pool.free_blocks()
+            a += self.pool.core.fenced_count() * self.pool.S
             if self.prefix_cache is not None:
                 a += self.prefix_cache.evictable()
             return a
 
+        # committing the async pipeline frees fenced slabs without evicting
+        # anyone — always cheaper than preemption, so it goes first
+        if self.pool.on_drain is not None and self.pool.deferred_moves():
+            self.pool.on_drain()
         start = avail()
         keep = set(int(k) for k in keep)
         while avail() - start < deficit:
@@ -913,8 +955,8 @@ class PagedServingEngine:
             # pages whose *last* reference a preemption drops (shared
             # prefix pages survive in the tree / other referencers)
             freeable = np.array(
-                [int((self.pool.block_ref[
-                    self.bt[j, :self.npages[j]].astype(np.int64)] == 1).sum())
+                [int((self.pool.block_ref[self.pool.resolve(
+                    self.bt[j, :self.npages[j]].astype(np.int64))] == 1).sum())
                  for j in cand])
             remaining = np.array(
                 [self._predict_remaining(
@@ -1326,6 +1368,10 @@ class PagedServingEngine:
                 self._sample_metrics()
 
     def _step_impl(self, ph, tr, t_step) -> list[int]:
+        if self.async_compaction:
+            # commit last step's in-flight remaps, plan + issue new moves
+            # ahead of admission — cleaning leaves the dispatch path
+            self._pump_compaction()
         if ph is None:
             self._admit()
         else:
@@ -1518,20 +1564,31 @@ class PagedServingEngine:
         return self.finished
 
     # ----------------------------------------------------------- compaction
-    def _execute_plan(self, plan) -> None:
-        if len(plan) == 0:
-            return
+    @contextlib.contextmanager
+    def _compaction_phase(self, moves: int):
+        """Attribute a compaction span to the current dispatch's phase split
+        (accumulated — several plans/pumps can fire per dispatch)."""
         ph, tr = self._phase_acc, self.tracer
         t_c = self.clock() if ph is not None else 0.0
         if tr is not None:
-            tr.begin("compaction", cat="engine", moves=len(plan))
+            tr.begin("compaction", cat="engine", moves=moves)
+        try:
+            yield
+        finally:
+            if tr is not None:
+                tr.end("compaction")
+            if ph is not None:
+                ph["compaction"] = (ph.get("compaction", 0.0)
+                                    + self.clock() - t_c)
+
+    def _move_plan(self, plan) -> None:
+        """Journal + issue the jitted donated move for one plan.  The pool's
+        accounting already committed the placement, so the tensor move
+        cannot be abandoned — transient faults retry in place until the
+        move lands or the retry budget declares the fault hard."""
         # pad the plan to a power-of-two bucket with trash→trash moves so
         # plan sizes share compiled executables
         src, dst = plan.padded(_pow2(len(plan)), self.trash_page)
-        # the pool's accounting already committed the plan (blocks moved,
-        # segments reclaimed), so the tensor move cannot be abandoned —
-        # transient faults retry in place until the move lands or the
-        # retry budget declares the fault hard
         self._jrec({"t": "mv", "src": plan.src_pages.tolist(),
                     "dst": plan.dst_pages.tolist()})
         self.k_pools, self.v_pools = self._with_retries(
@@ -1539,20 +1596,128 @@ class PagedServingEngine:
             lambda: self._move(self.k_pools, self.v_pools,
                                self._put_rep(src), self._put_rep(dst),
                                use_pallas=self.use_pallas))
-        # remap block tables: one vectorized page-id lookup over the matrix.
-        # Every reference holder remaps with the same LUT — all slot rows
-        # (shared pages appear in several) and the prefix-cache tree.
+
+    def _apply_remap(self, plan) -> None:
+        """Remap block tables: one vectorized page-id lookup over the
+        matrix.  Every reference holder remaps with the same LUT — all slot
+        rows (shared pages appear in several) and the prefix-cache tree."""
         lut = np.arange(self.trash_page + 1, dtype=np.int32)
         lut[plan.src_pages] = plan.dst_pages
         self.bt = lut[self.bt]
         if self.prefix_cache is not None:
             self.prefix_cache.remap(lut)
         self._bt_dirty = True
-        if tr is not None:
-            tr.end("compaction")
-        if ph is not None:
-            # accumulated, not assigned: several plans can fire per dispatch
-            ph["compaction"] = ph.get("compaction", 0.0) + self.clock() - t_c
+
+    def _execute_plan(self, plan) -> None:
+        """Synchronous path (``pool.on_compaction``): move + remap, run to
+        completion before the pool hands out any plan-freed page id."""
+        if len(plan) == 0:
+            return
+        with self._compaction_phase(len(plan)):
+            self._move_plan(plan)
+            self._apply_remap(plan)
+
+    # --- async pipeline: planned → in-flight → committed (DESIGN.md §13) --
+    def _commit_plan(self, plan) -> None:
+        """Commit one in-flight sub-plan: apply its LUT remap to every
+        external holder, journal the commit ("mvc" — forensic: a kill
+        between "mv" and "mvc" recovers via replay, which rebuilds physical
+        placement from scratch), and release its fenced victims."""
+        if len(plan):
+            self._apply_remap(plan)
+            self._jrec({"t": "mvc", "src": plan.src_pages.tolist(),
+                        "dst": plan.dst_pages.tolist()})
+        self.pool.commit_plan(plan)
+
+    def _hot_pages(self) -> np.ndarray:
+        """Pages the *upcoming* dispatch may write: each live slot's pages
+        from its current length on (decode appends K/V there), including a
+        prefilling slot's chunk span.  A planned move whose source
+        intersects this set cannot leave its remap pending across the
+        dispatch — the decode would write the source after the move copied
+        it, and the write would be lost at remap."""
+        hot = []
+        for i in np.flatnonzero(self.rid >= 0):
+            lo = int(self.lens[i]) // self.page_T
+            if self._pf is not None and self._pf["slot"] == i:
+                lo = min(lo, int(self._pf["pos"]) // self.page_T)
+            hot.append(self.bt[i, lo:self.npages[i]].astype(np.int64))
+        return (np.concatenate(hot) if hot
+                else np.empty(0, dtype=np.int64))
+
+    def _pump_compaction(self) -> None:
+        """The per-step async-cleaning pump, run before admission:
+
+        1. **commit** — sub-plans whose move dispatch was issued last step
+           apply their LUT remap now (the next sync point after the move:
+           the remapped tables upload with this step's ``_sync_device``)
+           and release their fenced victims.  FIFO: the pending LUT and
+           chained moves (a later plan may relocate an earlier plan's
+           destination) compose in plan order only.
+        2. **issue** — dispatch pending sub-plans' moves up to the
+           scheduler's deficit-weighted clean budget, double-buffered
+           against this step's decode dispatch.  A sub-plan whose source
+           intersects the dispatch's write set commits immediately instead
+           (the move is device-ordered before the decode, so remapping
+           first is always safe) — rare, but it is what keeps deferred
+           remaps write-hazard-free.
+
+        The pump deliberately does NOT plan.  Victim slabs become
+        cycle-worthy *mid-admission* — sealed by the very writes that drain
+        the reserve — so no step-boundary planner can see them; planning
+        lives in the alloc path (``_compact_until``), where it runs at
+        exactly the state synchronous cleaning used to, picking the same
+        victims at the same Wamp.  There it is fence-accounting only; the
+        sub-plans queue for this pump to move and commit."""
+        pool = self.pool
+        if not (self._inflight_plans or pool.pending_plans):
+            return
+        with self._compaction_phase(0):
+            while self._inflight_plans:
+                self._commit_plan(self._inflight_plans.pop(0))
+            if not pool.pending_plans:
+                return
+            # the deficit is judged on *projected* free slabs: in-flight
+            # reclamation is demand already being served, so the budget
+            # only escalates when the pipeline itself falls behind
+            budget = clean_budget(
+                self.clean_budget, free_slabs=pool.projected_free_slabs(),
+                trigger=pool.compact_trigger, blocks_per_slab=pool.S,
+                queue_depth=len(self.queue) + len(self._resume))
+            hot = self._hot_pages()
+            moved = 0
+            while pool.pending_plans and moved < budget:
+                plan = pool.pending_plans.pop(0)
+                self._move_plan(plan)
+                moved += len(plan)
+                if len(plan) and np.isin(plan.src_pages, hot).any():
+                    # write hazard: commit through this plan, in order
+                    while self._inflight_plans:
+                        self._commit_plan(self._inflight_plans.pop(0))
+                    self._commit_plan(plan)
+                    # the commits remapped the tables — refresh the write
+                    # set, or a chained later sub-plan (its source is an
+                    # earlier sub-plan's destination, now live in the
+                    # tables) would slip past the hazard check
+                    hot = self._hot_pages()
+                else:
+                    self._inflight_plans.append(plan)
+
+    def _drain_compaction(self) -> None:
+        """Emergency synchronous drain (the pool's ``on_drain``): commit the
+        whole pipeline FIFO.  Already-issued sub-plans only need their remap
+        (pure host work — their moves are already ordered on device);
+        unissued ones issue + commit like synchronous cleaning.  Called from
+        the alloc path when capacity is needed *now*."""
+        if not (self._inflight_plans or self.pool.pending_plans):
+            return
+        with self._compaction_phase(0):
+            while self._inflight_plans:
+                self._commit_plan(self._inflight_plans.pop(0))
+            while self.pool.pending_plans:
+                plan = self.pool.pending_plans.pop(0)
+                self._move_plan(plan)
+                self._commit_plan(plan)
 
     # ------------------------------------------------------------ integrity
     def audit(self) -> None:
@@ -1569,15 +1734,23 @@ class PagedServingEngine:
         if self.prefix_cache is not None:
             self.prefix_cache.check_invariants()
         expected = np.zeros_like(np.asarray(self.pool.block_ref))
+        # across a pending async-compaction window the block tables and the
+        # prefix tree still carry source ids (their remap lands with the
+        # plan's commit), so every holder's pages are read through the
+        # pool's pending-move LUT before the refcount cross-check
         for i in range(self.max_batch):
             if self.rid[i] >= 0:
-                np.add.at(expected, self.slot_pages(i).astype(np.int64), 1)
+                pages = self.pool.resolve(self.slot_pages(i).astype(np.int64))
+                np.add.at(expected, pages, 1)
         if self.prefix_cache is not None:
-            for p in self.prefix_cache.pages():
-                expected[p] += 1
+            tree = self.prefix_cache.pages()
+            if tree:
+                np.add.at(expected,
+                          self.pool.resolve(np.asarray(tree, np.int64)), 1)
         ref = np.asarray(self.pool.block_ref)
         assert (expected == ref).all(), \
             f"refcount mismatch at pages {np.flatnonzero(expected != ref)}"
+        self._audit_fenced()
         for i in range(self.max_batch):
             if self.rid[i] >= 0 and not self._prefilling[i]:
                 # lens counts prompt + consumed outputs (all emitted but the
@@ -1590,6 +1763,44 @@ class PagedServingEngine:
                     f"slot {i}: to_gen ledger broken"
         if self.journal is not None:
             self.journal.check_tail()
+
+    def _audit_fenced(self) -> None:
+        """Fenced/in-flight cross-checks for async compaction (DESIGN.md
+        §13): a FENCED slab is a victim whose evacuation is planned or
+        issued but not committed — it must be invisible to allocation
+        (never in a free list), unreachable from any holder (no resolved
+        block-table or tree page lands in one), and exactly the home of
+        every uncommitted plan's source pages (destinations are survivor
+        placements into OPEN/USED slabs, never fenced ones)."""
+        pool = self.pool
+        core = pool.core
+        fenced = np.flatnonzero(np.asarray(core.seg_state) == FENCED)
+        plans = list(pool.pending_plans) + list(self._inflight_plans)
+        if len(fenced) == 0 and not plans:
+            assert pool.deferred_moves() == 0, "move debt with no plans"
+            return
+        assert not np.isin(np.asarray(core.free_list, np.int64),
+                           fenced).any(), "fenced slab on the free list"
+        S = pool.S
+        for i in range(self.max_batch):
+            if self.rid[i] >= 0:
+                held = pool.resolve(self.slot_pages(i).astype(np.int64))
+                assert not np.isin(held // S, fenced).any(), \
+                    f"slot {i} holds a page in a fenced slab"
+        if self.prefix_cache is not None and self.prefix_cache.n_pages:
+            tree = pool.resolve(np.asarray(self.prefix_cache.pages(),
+                                           np.int64))
+            assert not np.isin(tree // S, fenced).any(), \
+                "prefix tree holds a page in a fenced slab"
+        for plan in plans:
+            if len(plan) == 0:
+                continue
+            src = np.asarray(plan.src_pages, np.int64)
+            dst = np.asarray(plan.dst_pages, np.int64)
+            assert np.isin(src // S, fenced).all(), \
+                "uncommitted plan source outside fenced slabs"
+            assert not np.isin(dst // S, fenced).any(), \
+                "uncommitted plan destination inside a fenced slab"
 
     def session_state(self) -> dict:
         """JSON-able snapshot of the *request-level* session state — what
@@ -1661,6 +1872,10 @@ class PagedServingEngine:
             "stream_moves": list(st.stream_moves),
             "per_stream_wamp": st.per_stream_wamp(),
             "free_blocks": self.pool.free_blocks(),
+            # async-cleaning debt: moves planned but not yet committed plus
+            # the slabs those moves will hand back (0 when synchronous)
+            "compaction_debt_moves": self.pool.deferred_moves(),
+            "fenced_slabs": self.pool.core.fenced_count(),
             "preemptions": self.preemptions,
             "resumes": self.resumes,
             "recomputed_tokens": self.recomputed_tokens,
@@ -1718,7 +1933,13 @@ class PagedServingEngine:
         tail's wall time had this phase running", not a partition."""
         rows = list(self.dispatch_phases)
         if not rows:
-            return {"dispatches": 0}
+            # zeroed but *full-key* report: dashboards and bench gates index
+            # these fields unconditionally, so an empty or not-yet-warm
+            # window must not KeyError downstream
+            return {"dispatches": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                    "phase_mean_ms": {}, "phase_share_p99_tail": {},
+                    "compaction_share_p99": 0.0,
+                    "compaction_share_total": 0.0}
         tot = np.array([r["total"] for r in rows])
         p50, p99 = np.quantile(tot, [0.5, 0.99])
         tail = [r for r in rows if r["total"] >= p99]

@@ -45,10 +45,11 @@ batched and vectorized: cost is O(slabs touched), not O(blocks).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
-from ..core.logstructure import USED, FrameLog, Placement, StoreStats
+from ..core.logstructure import FENCED, USED, FrameLog, Placement, StoreStats
 
 NO_PAGE = -1
 
@@ -71,9 +72,37 @@ class CompactionPlan:
     src_pages: np.ndarray
     dst_pages: np.ndarray
     owners: np.ndarray
+    # async cleaning (DESIGN.md §13): victim slabs whose *last* move this
+    # sub-plan carries — released (FENCED → FREE) when the sub-plan commits.
+    # None for synchronous plans, whose victims were released at evacuation.
+    commit_segs: np.ndarray | None = None
 
     def __len__(self) -> int:
         return len(self.src_pages)
+
+    def split(self, budget: int, segs: np.ndarray) -> list["CompactionPlan"]:
+        """Cut one cleaning cycle into budget-sized incremental sub-plans.
+
+        ``segs`` is the source slab per move (victim order — contiguous
+        runs, the order :meth:`FrameLog.evacuate` emits).  Each victim
+        slab's release rides with the sub-plan holding its last move, so a
+        slab stays fenced exactly until every move out of it has
+        committed.  ``budget <= 0`` means unmetered (one sub-plan)."""
+        n = len(self)
+        step = n if budget <= 0 else max(int(budget), 1)
+        segs = np.asarray(segs, dtype=np.int64)
+        last = {int(s): i for i, s in enumerate(segs)}
+        plans = []
+        for lo in range(0, n, step):
+            hi = min(lo + step, n)
+            # victims whose last move index falls inside [lo, hi)
+            commit = np.array(sorted(s for s, i in last.items()
+                                     if lo <= i < hi), dtype=np.int64)
+            plans.append(CompactionPlan(
+                src_pages=self.src_pages[lo:hi],
+                dst_pages=self.dst_pages[lo:hi],
+                owners=self.owners[lo:hi], commit_segs=commit))
+        return plans
 
     def padded(self, bucket: int, fill: int) -> tuple[np.ndarray, np.ndarray]:
         """(src, dst) int32 arrays padded to ``bucket`` with fill→fill moves
@@ -106,6 +135,9 @@ class LogStructuredKVPool:
                 f"KV pool cannot run policy {policy!r}: oracle policies "
                 f"(mdc_opt) need true per-page update probabilities, which a "
                 f"serving pool does not have; supported: {_SUPPORTED_POLICIES}")
+        if n_open is not None:
+            warnings.warn("n_open= is deprecated; use streams=",
+                          DeprecationWarning, stacklevel=2)
         if streams is None:
             streams = 4 if n_open is None else n_open  # n_open: legacy alias
         self.n_slabs = n_slabs
@@ -140,13 +172,28 @@ class LogStructuredKVPool:
         # the pool invokes it synchronously at plan creation.
         self.on_compaction = None  # Callable[[CompactionPlan], None] | None
         # manual mode (no callback): plans queue here; the caller must drain
-        # them before its next alloc
+        # them before its next alloc.  Async mode (DESIGN.md §13) reuses the
+        # queue: plan_compaction() appends fenced sub-plans, the engine's
+        # pump issues + commits them across dispatches.
         self.pending_plans: list[CompactionPlan] = []
         # pressure hook: called with the page deficit when compaction alone
         # cannot satisfy an alloc — the engine registers the prefix cache's
         # LRU eviction here, so unreferenced cached prefixes are given back
         # before the pool declares OOM
         self.on_pressure = None  # Callable[[int], None] | None
+        # async-cleaning drain hook: called (no args) when the alloc path
+        # needs capacity that only committing the planned/in-flight pipeline
+        # can provide — the engine drains FIFO (issue + remap + commit)
+        self.on_drain = None  # Callable[[], None] | None
+        # sub-plan grain for alloc-path fence-planning (0 = monolithic);
+        # the engine sets this to its per-dispatch clean budget
+        self.plan_budget = 0
+        # pending-move LUT: between plan and commit, external holders (block
+        # tables, the prefix tree) still carry *source* page ids while the
+        # accounting (owner/death/refcount) lives at the destination.
+        # resolve() translates; identity (+trash passthrough) when no debt.
+        self._remap = np.arange(n_slabs * blocks_per_slab + 1, dtype=np.int64)
+        self._pending_moves = 0
 
     # unified accounting lives in the core
     @property
@@ -176,6 +223,30 @@ class LogStructuredKVPool:
     # ------------------------------------------------------------ allocation
     def free_blocks(self) -> int:
         return self.core.free_frames()
+
+    def deferred_moves(self) -> int:
+        """Blocks whose move is planned/in-flight but not committed."""
+        return self._pending_moves
+
+    def projected_free_slabs(self) -> int:
+        """Free slabs counting fenced victims as already reclaimed — what
+        the free count becomes once the planned pipeline commits.  The
+        async pump plans against this so it stops planning once enough
+        reclamation is in flight, instead of victimizing the whole pool."""
+        return self.core.free_count() + self.core.fenced_count()
+
+    def resolve(self, pages: np.ndarray) -> np.ndarray:
+        """Translate page ids through the pending-move LUT (DESIGN.md §13).
+
+        Between ``plan_compaction`` and ``commit_plan`` the block tables and
+        the prefix tree still hold *source* ids (their remap is deferred to
+        the engine's next sync point) while the pool's accounting rows moved
+        to the destinations.  Every accounting entry point resolves first;
+        with no debt this is the identity."""
+        pages = np.asarray(pages, dtype=np.int64)
+        if self._pending_moves == 0:
+            return pages
+        return self._remap[pages]
 
     def admission_reserve(self) -> int:
         """Blocks admission control must leave free: the compaction reserve.
@@ -237,10 +308,50 @@ class LogStructuredKVPool:
 
     def _compact_until(self, n: int) -> None:
         """Run compaction cycles until ``n`` frames are appendable and the
-        free-slab reserve is above the trigger, or no cycle makes progress."""
-        while (self.core.free_count() <= self.compact_trigger
+        free-slab reserve is above the trigger, or no cycle makes progress.
+
+        With async cleaning active, the reserve trigger is judged on
+        *projected* free slabs (actual + fenced): in-flight reclamation
+        counts, so a healthy pipeline lets allocation dig into the actual
+        reserve without forcing cleaning back into the alloc path — that
+        deferral is the whole point of the refactor.
+
+        When the reserve does cross the trigger here, the crossing is
+        almost always *reserve maintenance*, not an actual frame shortage:
+        the victim slabs that make a cycle worthwhile were typically sealed
+        by this very admission wave, so no step-boundary planner can have
+        seen them.  In that case the alloc path **fence-plans** instead of
+        compacting: :meth:`plan_compaction` is pure host accounting (the
+        survivors fit in the room we already have), the victims fence, the
+        projected reserve refills, and the data moves defer to the engine's
+        pump — budget-spread across subsequent dispatches.  Victim
+        selection happens at exactly the state synchronous cleaning would
+        have used, so write amplification is unchanged.
+
+        Only when frames are genuinely short does the alloc path drain the
+        pipeline (``on_drain``): committing it releases the fenced victim
+        slabs — already-issued moves just need their remap, which is pure
+        host work — before any new synchronous cycle is paid here.
+        Without async cleaning there is never fenced debt, so projected ==
+        actual and the behavior is the classic synchronous trigger."""
+        while (self.projected_free_slabs() <= self.compact_trigger
                or self.core.free_frames() < n):
+            if self.on_drain is not None and self.core.free_frames() >= n:
+                # reserve maintenance, not shortage: fence-plan and return
+                # the moves to the pump.  Guard on projected progress —
+                # placement can consume free slabs for fresh open segments,
+                # so a cycle that does not raise the projection falls
+                # through to the synchronous path below.
+                proj = self.projected_free_slabs()
+                if (self.plan_compaction(self.plan_budget)
+                        and self.projected_free_slabs() > proj):
+                    continue
             before = self.core.free_frames()
+            if self.on_drain is not None and self.deferred_moves():
+                debt = self.deferred_moves()
+                self.on_drain()
+                if self.deferred_moves() < debt:
+                    continue
             if self.compact() is None or self.core.free_frames() <= before:
                 break
 
@@ -256,7 +367,7 @@ class LogStructuredKVPool:
         sharing them).  ``est_deaths`` raises each page's death estimate to
         the max over its referencing sequences — shared hot prefixes sort
         into long-lifetime slabs and stop being pointlessly relocated."""
-        pages = np.asarray(pages, dtype=np.int64)
+        pages = self.resolve(pages)
         if len(pages) == 0:
             return
         assert (self.block_owner[pages] >= 0).all(), "incref of dead page"
@@ -272,7 +383,7 @@ class LogStructuredKVPool:
         finished / was preempted), shared ones stay live for the remaining
         referencers — a page is freed exactly when its refcount hits zero."""
         pages = np.asarray(pages, dtype=np.int64)
-        pages = pages[pages >= 0]
+        pages = self.resolve(pages[pages >= 0])
         if len(pages) == 0:
             return
         assert (self.block_owner[pages] >= 0).all(), "double free"
@@ -297,7 +408,16 @@ class LogStructuredKVPool:
         return self.compact()
 
     def compact(self):
-        """Evacuate victims; returns CompactionPlan(src_pages, dst_pages)."""
+        """Evacuate victims; returns CompactionPlan(src_pages, dst_pages).
+
+        Synchronous cleaning: victims are released at evacuation and the
+        plan executes (or queues) immediately.  Never interleaves with
+        uncommitted async plans — the pipeline is drained first, so the
+        block tables are current when this plan's remap applies."""
+        if self.deferred_moves() and self.on_drain is not None:
+            self.on_drain()
+        assert self.deferred_moves() == 0, \
+            "synchronous compact with uncommitted async plans"
         victims = self.select_victims()
         if len(victims) == 0:
             return None
@@ -328,6 +448,87 @@ class LogStructuredKVPool:
             self.pending_plans.append(plan)
         return plan
 
+    # --------------------------------------------- async two-phase cleaning
+    def plan_compaction(self, budget: int = 0) -> list:
+        """Phase one of async cleaning (DESIGN.md §13): one cleaning cycle
+        whose victims are *fenced* instead of freed, cut into budget-sized
+        sub-plans appended to ``pending_plans``.
+
+        Survivors are placed (and all Wamp accounting lands) now, exactly
+        like :meth:`compact`; only the device move and the block-table
+        remap are deferred.  The victim slabs stay FENCED — not
+        allocatable, not re-victimizable (``select_victims`` needs USED) —
+        until :meth:`commit_plan` releases them, because until the remap
+        both the deferred move and stale external ids still read them.
+        Returns the new sub-plans ([] when no victim fits: fenced planning
+        must pay survivor placement out of *current* free room, so under
+        extreme pressure the caller falls back to the synchronous path)."""
+        victims = self.select_victims()
+        if len(victims) == 0:
+            return []
+        # capacity fence: survivors consume appendable room now but the
+        # victims only return at commit — keep victims (ranked best-first)
+        # whose cumulative survivor count fits
+        fits = self.core.seg_live[victims].cumsum() <= self.core.free_frames()
+        victims = victims[fits]
+        if len(victims) == 0:
+            return []
+        res = self.core.evacuate(victims, fence=True)
+        if len(res) == 0:
+            # nothing live to move: the cycle is pure reclamation
+            self.core.commit_fenced(victims)
+            return []
+        src = res.segs * self.S + res.slots
+        order = np.argsort(res.up2_slot, kind="stable")
+        streams = (self.core.demote_streams(res.streams, res.up2_slot,
+                                            overdue=res.up2_slot <= self.u_now)
+                   if self.demote_survivors else None)
+        dst = np.empty(len(src), dtype=np.int64)
+        dst[order] = self.core.place(
+            res.items[order],
+            Placement(est_death=res.up2_slot[order],
+                      stream=None if streams is None else streams[order],
+                      kind="gc", refs=res.refs[order]))
+        # victims that contributed no move (fully-dead slabs) reclaim now
+        empty = victims[~np.isin(victims, res.segs)]
+        if len(empty):
+            self.core.commit_fenced(empty)
+        # compose into the pending LUT: a stale id whose earlier destination
+        # is itself being moved now resolves through to the newest location
+        m = np.arange(len(self._remap), dtype=np.int64)
+        m[src] = dst
+        self._remap = m[self._remap]
+        self._pending_moves += len(src)
+        plans = CompactionPlan(src, dst, res.items).split(budget, res.segs)
+        self.pending_plans.extend(plans)
+        return plans
+
+    def commit_plan(self, plan: CompactionPlan) -> None:
+        """Phase two: the owner applied this sub-plan's LUT remap to every
+        external holder (block tables + prefix tree), so the source ids are
+        gone — retire the pending-LUT entries and release the victim slabs
+        whose last move this sub-plan carried.  Sub-plans MUST commit in
+        plan order (the pending LUT composes FIFO)."""
+        if len(plan):
+            self._remap[plan.src_pages] = plan.src_pages
+            self._pending_moves -= len(plan)
+            self.stats.gc_committed += len(plan)
+        if plan.commit_segs is not None and len(plan.commit_segs):
+            self.core.commit_fenced(plan.commit_segs)
+
     # ------------------------------------------------------------ invariants
     def check_invariants(self) -> None:
         self.core.check_invariants()  # includes the stream/open-slab checks
+        # pending-move LUT: every non-identity entry maps a page in a FENCED
+        # slab to a live destination; with no debt the LUT is the identity
+        ident = np.arange(len(self._remap) - 1, dtype=np.int64)
+        stale = np.flatnonzero(self._remap[:-1] != ident)
+        assert self._pending_moves >= 0, "negative deferred-move debt"
+        if self._pending_moves == 0:
+            assert len(stale) == 0, "pending LUT left behind after commit"
+        else:
+            # (destinations may legitimately die before commit — a moved
+            # block's owner can finish inside the window — so only the
+            # source side is asserted here)
+            assert (self.core.seg_state[stale // self.S] == FENCED).all(), \
+                "pending-move source outside a fenced slab"

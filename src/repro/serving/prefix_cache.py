@@ -167,9 +167,17 @@ class PrefixCache:
     # ------------------------------------------------------------- eviction
     def _unreferenced_leaves(self) -> list[_Node]:
         """Leaves only the tree still references (pool refcount == 1)."""
-        return [n for n in self.root.depth_first()
-                if n is not self.root and not n.children
-                and self.pool.block_ref[n.page] == 1]
+        leaves = [n for n in self.root.depth_first()
+                  if n is not self.root and not n.children]
+        if not leaves:
+            return []
+        # tree ids may be pending-move sources; read refcounts through the
+        # pool's LUT (a fenced source's own count is 0 — raw reads would
+        # misclassify every in-flight page as evictable)
+        arr = self.pool.resolve(np.asarray([n.page for n in leaves],
+                                           np.int64))
+        ref = self.pool.block_ref[arr]
+        return [n for n, r in zip(leaves, ref) if r == 1]
 
     def evictable(self) -> int:
         """Pages the cache could give back right now (pool pressure view).
@@ -178,13 +186,16 @@ class PrefixCache:
         evicting leaves exposes their parents, but a referenced descendant
         pins every ancestor (matches cascaded leaves-first eviction).
         ``depth_first`` is post-order, so children are classified first."""
+        nodes = [n for n in self.root.depth_first() if n is not self.root]
+        if not nodes:
+            return 0
+        arr = self.pool.resolve(np.asarray([n.page for n in nodes],
+                                           np.int64))
+        unref = self.pool.block_ref[arr] == 1
         reclaim: dict[int, bool] = {}
         count = 0
-        for n in self.root.depth_first():
-            if n is self.root:
-                continue
-            ok = (self.pool.block_ref[n.page] == 1
-                  and all(reclaim[id(c)] for c in n.children.values()))
+        for n, u in zip(nodes, unref):
+            ok = bool(u) and all(reclaim[id(c)] for c in n.children.values())
             reclaim[id(n)] = ok
             count += ok
         return count
@@ -259,7 +270,10 @@ class PrefixCache:
         assert len(pages) == self.n_pages
         assert len(set(pages)) == len(pages), "page cached twice"
         if pages:
-            arr = np.asarray(pages, np.int64)
+            # across a pending async-compaction window the tree still holds
+            # source ids (its remap is deferred with the block tables'), so
+            # the pool accounting is read through the pending-move LUT
+            arr = self.pool.resolve(np.asarray(pages, np.int64))
             assert (self.pool.block_owner[arr] >= 0).all(), \
                 "cached page is dead"
             assert (self.pool.block_ref[arr] >= 1).all()

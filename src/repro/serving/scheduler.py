@@ -54,6 +54,35 @@ def normalize_prefill_chunk(chunk: int, page_T: int) -> int:
     return -(-int(chunk) // page_T) * page_T
 
 
+# default per-dispatch clean budget (blocks moved) for async compaction:
+# one default-sized slab's worth — enough to retire a typical sub-plan per
+# dispatch at steady state without ever paying a whole multi-slab cleaning
+# burst inside one dispatch's latency
+DEFAULT_CLEAN_BUDGET = 8
+
+
+def clean_budget(base: int, *, free_slabs: int, trigger: int,
+                 blocks_per_slab: int, queue_depth: int = 0) -> int:
+    """Per-dispatch clean budget in blocks moved (DESIGN.md §13).
+
+    The metering dial of async compaction, the time-efficient-GC scheduling
+    idea (arXiv:1807.09313) applied to the KV pool: cleaning throughput
+    should track reclamation *demand*, not arrive in bursts.  At or above
+    comfortable free-slab headroom the budget is ``base`` (a steady
+    trickle); below it the budget grows by the slab deficit converted to
+    blocks — deficit-weighted, so the deeper the pool digs into its
+    reserve the more moves each dispatch retires — plus a small queue-depth
+    term (waiting admissions are reclamation demand too).  MDC-ordered
+    sub-plans are issued against this budget first-ranked-first, so the
+    cheapest reclamation always ships earliest."""
+    base = max(int(base), 1)
+    deficit = max(int(trigger) + 1 - int(free_slabs), 0)
+    if deficit == 0:
+        return base
+    return (base + deficit * max(int(blocks_per_slab), 1)
+            + 2 * min(int(queue_depth), 8))
+
+
 class EwmaLengthPredictor:
     """EWMA over recent completions' output lengths (in tokens).
 

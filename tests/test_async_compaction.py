@@ -1,0 +1,354 @@
+"""Asynchronous, budgeted compaction (DESIGN.md §13).
+
+The tentpole contract: lifting cleaning out of the dispatch path — fencing
+victims and spreading their evacuation over budget-sized sub-plans across
+dispatches — must be *invisible*:
+
+* pool accounting (live set, Wamp, free space) ends exactly where one
+  monolithic synchronous cycle would have left it, no matter how sub-plan
+  commits interleave with allocations;
+* engine tokens stay bit-identical to the synchronous engine, on the ref
+  path, the pallas path, and under a tensor-parallel mesh;
+* the audit cross-checks see through the pending window (stale source ids
+  resolve through the pool LUT; FENCED slabs are invisible to allocation
+  and unreachable from any holder);
+* a kill between a sub-plan's move dispatch ("mv") and its remap commit
+  ("mvc") recovers via the journal to bit-identical tokens.
+"""
+
+import numpy as np
+import pytest
+from _hyp import given, settings, st  # degrades to skips without hypothesis
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.logstructure import FENCED
+from repro.models import Model
+from repro.serving import (LogStructuredKVPool, PagedServingEngine,
+                           recover_engine)
+from repro.serving.scheduler import DEFAULT_CLEAN_BUDGET, clean_budget
+
+NDEV = len(jax.devices())
+
+
+# ------------------------------------------------------------ pool two-phase
+
+def _mk_pool(n_slabs=10):
+    # headroom above the checkerboard working set: the equivalence tests
+    # must not trip the alloc-path pressure fallback mid-window (that path
+    # gets its own test below, with a drain hook attached)
+    return LogStructuredKVPool(n_slabs, 4, policy="mdc", compact_trigger=0,
+                               compact_batch=4, streams=1)
+
+
+def _checkerboard(pool):
+    """Interleave two lifetime classes and kill one: the victim driver."""
+    short, long_ = [], []
+    for i in range(12):
+        short.append(pool.alloc_block(100 + i, est_death=5.0))
+        long_.append(pool.alloc_block(500 + i, est_death=1e6))
+    pool.free_pages(np.asarray(short))
+    return long_
+
+
+def _remap_held(held, plan):
+    """What the engine does at commit: rewrite one external holder."""
+    lut = {int(s): int(d) for s, d in zip(plan.src_pages, plan.dst_pages)}
+    return [lut.get(p, p) for p in held]
+
+
+def _run_split_committed(budget, allocs_between):
+    """One checkerboarded pool cleaned through plan/commit at ``budget``,
+    with ``allocs_between`` fresh allocations interleaved between commits;
+    returns (pool, held pages after all remaps, extra alloc pages)."""
+    pool = _mk_pool()
+    held = _checkerboard(pool)
+    plans = pool.plan_compaction(budget)
+    assert plans, "checkerboard must yield a plan"
+    assert pool.deferred_moves() == sum(len(p) for p in plans)
+    extra = []
+    while pool.pending_plans:          # commit FIFO (the LUT composes so)
+        plan = pool.pending_plans.pop(0)
+        pool.check_invariants()        # mid-window: LUT + fencing coherent
+        for _ in range(allocs_between):
+            extra.append(pool.alloc_block(900 + len(extra), est_death=50.0))
+        held = _remap_held(held, plan)
+        pool.commit_plan(plan)
+    assert pool.deferred_moves() == 0
+    return pool, held, extra
+
+
+def _assert_equivalent(pool_a, held_a, pool_b, held_b):
+    assert pool_a.stats.blocks_moved == pool_b.stats.blocks_moved
+    assert pool_a.stats.wamp() == pytest.approx(pool_b.stats.wamp())
+    assert pool_a.core.free_frames() == pool_b.core.free_frames()
+    assert pool_a.core.free_count() == pool_b.core.free_count()
+    for pool, held in ((pool_a, held_a), (pool_b, held_b)):
+        arr = pool.resolve(np.asarray(held, np.int64))
+        assert (pool.block_owner[arr] >= 500).all(), "live set corrupted"
+        assert (pool.block_ref[arr] == 1).all()
+        pool.check_invariants()
+
+
+@pytest.mark.parametrize("budget,allocs_between", [(0, 0), (2, 0), (3, 2),
+                                                   (1, 1)])
+def test_plan_commit_matches_monolithic(budget, allocs_between):
+    """Sub-plan/alloc interleavings ≡ one monolithic cycle: same moves,
+    same Wamp, same free space, same live set."""
+    pool_a = _mk_pool()
+    held_a = _checkerboard(pool_a)
+    plan = pool_a.compact()            # monolithic synchronous cycle
+    assert plan is not None and len(plan) > 0
+    held_a = _remap_held(held_a, plan)
+
+    pool_b, held_b, extra = _run_split_committed(budget, allocs_between)
+    for i in range(len(extra)):        # mirror the interleaved allocations
+        pool_a.alloc_block(900 + i, est_death=50.0)
+    _assert_equivalent(pool_a, held_a, pool_b, held_b)
+
+
+@given(budget=st.integers(min_value=0, max_value=6),
+       allocs_between=st.integers(min_value=0, max_value=2))
+@settings(max_examples=25, deadline=None)
+def test_plan_commit_interleaving_property(budget, allocs_between):
+    """Property form: every (budget, interleave) point holds equivalence."""
+    pool_a = _mk_pool()
+    held_a = _checkerboard(pool_a)
+    held_a = _remap_held(held_a, pool_a.compact())
+    pool_b, held_b, extra = _run_split_committed(budget, allocs_between)
+    for i in range(len(extra)):
+        pool_a.alloc_block(900 + i, est_death=50.0)
+    _assert_equivalent(pool_a, held_a, pool_b, held_b)
+
+
+def test_fenced_invisible_to_alloc_and_victims():
+    """Mid-window, FENCED victim slabs are not allocatable and not
+    re-victimizable; projected free space counts them as in-flight debt."""
+    pool = _mk_pool()
+    _checkerboard(pool)
+    plans = pool.plan_compaction(2)
+    fenced = np.flatnonzero(pool.core.seg_state == FENCED)
+    assert len(fenced) > 0
+    assert pool.core.fenced_count() == len(fenced)
+    assert not np.isin(np.asarray(pool.core.free_list, np.int64),
+                       fenced).any()
+    assert not np.isin(pool.select_victims(), fenced).any()
+    assert (pool.projected_free_slabs()
+            == pool.core.free_count() + len(fenced))
+    fresh = [pool.alloc_block(7, est_death=10.0) for _ in range(4)]
+    assert not np.isin(np.asarray(fresh, np.int64) // pool.S, fenced).any()
+    assert plans
+    while pool.pending_plans:
+        pool.commit_plan(pool.pending_plans.pop(0))
+    assert pool.core.fenced_count() == 0
+
+
+def test_alloc_pressure_drains_pipeline():
+    """The capacity fallback: when allocation runs out of room mid-window,
+    the pool's first lever is ``on_drain`` — committing the pipeline
+    releases the fenced victims without a fresh synchronous cycle."""
+    pool = _mk_pool(8)
+    held = [_checkerboard(pool)]
+
+    def drain():
+        while pool.pending_plans:
+            plan = pool.pending_plans.pop(0)
+            held[0] = _remap_held(held[0], plan)
+            pool.commit_plan(plan)
+
+    pool.on_drain = drain
+    pool.plan_compaction(2)
+    assert pool.deferred_moves() > 0
+    # grind allocation until the fenced reserve is the only room left —
+    # the drain hook must fire instead of the sync-compact assert
+    fresh = [pool.alloc_block(800 + i, est_death=50.0) for i in range(12)]
+    assert len(set(fresh)) == 12
+    assert pool.deferred_moves() == 0
+    assert pool.core.fenced_count() == 0
+    arr = pool.resolve(np.asarray(held[0], np.int64))
+    assert (pool.block_owner[arr] >= 500).all()
+    pool.check_invariants()
+
+
+def test_pool_invariants_catch_fenced_on_free_list():
+    """The audit teeth: a fenced slab leaking onto the free list trips the
+    core cross-check (double-allocation of an in-flight victim)."""
+    pool = _mk_pool()
+    _checkerboard(pool)
+    pool.plan_compaction(0)
+    fenced = np.flatnonzero(pool.core.seg_state == FENCED)
+    assert len(fenced) > 0
+    pool.core.free_list.append(int(fenced[0]))
+    with pytest.raises(AssertionError):
+        pool.check_invariants()
+
+
+def test_clean_budget_deficit_weighting():
+    """The scheduler dial: base trickle at headroom, deficit-weighted
+    growth below the trigger, queue depth as demand."""
+    kw = dict(trigger=2, blocks_per_slab=4)
+    assert clean_budget(8, free_slabs=5, queue_depth=0, **kw) == 8
+    assert clean_budget(8, free_slabs=3, queue_depth=0, **kw) == 8
+    at2 = clean_budget(8, free_slabs=2, queue_depth=0, **kw)
+    at0 = clean_budget(8, free_slabs=0, queue_depth=0, **kw)
+    assert at2 > 8 and at0 > at2, "budget must grow with the deficit"
+    assert clean_budget(8, free_slabs=2, queue_depth=4, **kw) > at2
+    assert clean_budget(0, free_slabs=5, queue_depth=0, **kw) == 1
+    assert DEFAULT_CLEAN_BUDGET > 0
+
+
+# ------------------------------------------------------------ engine e2e
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    return Model(get_config("qwen3-1.7b").smoke())
+
+
+@pytest.fixture(scope="module")
+def smoke_params(smoke_model):
+    return smoke_model.init(jax.random.PRNGKey(0))
+
+
+def _reqs(vocab, seed=1):
+    rng = np.random.default_rng(seed)
+    lens = [5, 17, 9, 24, 3, 12, 20, 7, 15, 11]
+    news = [16, 20, 14, 18, 22, 15, 19, 21, 13, 17]
+    return [(rng.integers(1, vocab, size=l), n) for l, n in zip(lens, news)]
+
+
+def _run_engine(model, params, *, use_pallas=False, mesh=None, **kw):
+    # tiny pool + aggressive trigger ⇒ cleaning fires repeatedly mid-run;
+    # audit_every exercises the fenced cross-checks inside pending windows
+    eng = PagedServingEngine(model, n_slabs=7, blocks_per_slab=2, page_T=8,
+                             max_batch=3, max_seq=96, policy="mdc",
+                             params=params, compact_trigger=2,
+                             compact_batch=2, use_pallas=use_pallas,
+                             mesh=mesh, audit_every=3, **kw)
+    rids = [eng.submit(p, n) for p, n in _reqs(model.cfg.vocab_size)]
+    eng.run_to_completion()
+    eng.audit()
+    return eng, [eng.finished[r] for r in rids]
+
+
+@pytest.mark.parametrize("use_pallas", [False, True],
+                         ids=["ref", "pallas_interpret"])
+def test_engine_async_bit_identical_to_sync(smoke_model, smoke_params,
+                                            use_pallas):
+    """Tokens must not change when cleaning goes asynchronous — including
+    across dispatches that run with a remap still pending."""
+    _, want = _run_engine(smoke_model, smoke_params, use_pallas=use_pallas)
+    eng, got = _run_engine(smoke_model, smoke_params, use_pallas=use_pallas,
+                           async_compaction=True, clean_budget=4)
+    assert got == want, "async compaction changed tokens"
+    assert eng.pool.stats.gc_planned > 0, "async pipeline never engaged"
+    assert eng.pool.stats.gc_planned == eng.pool.stats.gc_committed
+    assert eng.metrics()["compaction_debt_moves"] == 0
+
+
+@pytest.mark.skipif(NDEV < 2, reason="needs >= 2 devices (CI multidevice)")
+def test_engine_async_bit_identical_under_mesh(smoke_model, smoke_params):
+    """Same contract tensor-parallel: the deferred remap is a host-side
+    global-page-id rewrite, so it must be mesh-oblivious."""
+    from repro.launch.mesh import make_serving_mesh
+    _, want = _run_engine(smoke_model, smoke_params)
+    _, got = _run_engine(smoke_model, smoke_params,
+                         mesh=make_serving_mesh(2),
+                         async_compaction=True, clean_budget=4)
+    assert got == want, "async compaction not mesh-oblivious"
+
+
+def test_engine_metrics_and_audit_track_debt(smoke_model, smoke_params):
+    """Mid-run the engine must at some point carry in-flight debt across a
+    step boundary (the whole point of the refactor), and the audit must
+    pass *inside* those windows (audit_every=1)."""
+    eng = PagedServingEngine(smoke_model, n_slabs=7, blocks_per_slab=2,
+                             page_T=8, max_batch=3, max_seq=96, policy="mdc",
+                             params=smoke_params, compact_trigger=2,
+                             compact_batch=2, audit_every=1,
+                             async_compaction=True, clean_budget=4)
+    for p, n in _reqs(smoke_model.cfg.vocab_size):
+        eng.submit(p, n)
+    saw_window = False
+    while eng.has_work():
+        eng.step()
+        saw_window = saw_window or bool(eng._inflight_plans)
+    assert saw_window, "no plan ever stayed in flight across a step"
+    m = eng.metrics()
+    assert m["compaction_debt_moves"] == 0 and m["fenced_slabs"] == 0
+    assert eng.pool.stats.gc_planned == eng.pool.stats.gc_committed > 0
+
+
+# ------------------------------------------------------- satellite guards
+
+def test_phase_report_empty_window(smoke_model, smoke_params):
+    """An engine that never dispatched (or a cleared window) must return a
+    zeroed report with the FULL key set — dashboards index these fields."""
+    eng = PagedServingEngine(smoke_model, n_slabs=7, blocks_per_slab=2,
+                             page_T=8, max_batch=2, max_seq=64,
+                             params=smoke_params, phase_log=True)
+    rep = eng.phase_report()
+    assert rep == {"dispatches": 0, "p50_ms": 0.0, "p99_ms": 0.0,
+                   "phase_mean_ms": {}, "phase_share_p99_tail": {},
+                   "compaction_share_p99": 0.0,
+                   "compaction_share_total": 0.0}
+
+
+def test_n_open_alias_warns_and_routes():
+    """--n-open / n_open= is a deprecated alias for streams: it must warn
+    but keep routing to the same stream count."""
+    with pytest.warns(DeprecationWarning, match="n_open"):
+        pool = LogStructuredKVPool(8, 4, policy="mdc", n_open=3)
+    assert pool.n_open == 3
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        pool = LogStructuredKVPool(8, 4, policy="mdc", streams=3)
+    assert pool.n_open == 3
+
+
+def test_serve_run_n_open_alias_warns(smoke_model, smoke_params):
+    from repro.launch.serve import serve_run
+    with pytest.warns(DeprecationWarning, match="n_open"):
+        serve_run(requests=2, model=smoke_model, params=smoke_params,
+                  n_open=2, verbose=False)
+
+
+# ------------------------------------------------------------- chaos lane
+
+def test_kill_between_move_and_commit_recovers(smoke_model, smoke_params,
+                                               tmp_path):
+    """Kill the session in the exact crash window the refactor opens — a
+    sub-plan's move dispatched ("mv" journaled) but its remap not yet
+    committed (no "mvc") — and recover: replay rebuilds placement from
+    scratch, so the half-moved device state is abandoned wholesale and
+    every request still drains to bit-identical tokens."""
+    kw = dict(n_slabs=7, blocks_per_slab=2, page_T=8, max_batch=3,
+              max_seq=96, policy="mdc", params=smoke_params,
+              compact_trigger=2, compact_batch=2,
+              pool_dtype=jnp.float32)
+    reqs = _reqs(smoke_model.cfg.vocab_size)
+
+    ref = PagedServingEngine(smoke_model, **kw)
+    rids = [ref.submit(p, n) for p, n in reqs]
+    while ref.has_work():
+        ref.step()
+    want = {r: ref.finished[r] for r in rids}
+
+    jd = tmp_path / "journal"
+    eng = PagedServingEngine(smoke_model, journal_dir=jd,
+                             async_compaction=True, clean_budget=4, **kw)
+    assert [eng.submit(p, n) for p, n in reqs] == rids
+    while eng.has_work() and not eng._inflight_plans:
+        eng.step()
+    assert eng._inflight_plans, "never caught the mv→mvc crash window"
+    eng = None                                     # SIGKILL-equivalent
+
+    reng, rep = recover_engine(smoke_model, jd, async_compaction=True,
+                               clean_budget=4, **kw)
+    while reng.has_work():
+        reng.step()
+    assert {r: reng.finished.get(r) for r in rids} == want, \
+        "kill inside the mv→mvc window lost bit-identity"
+    reng.audit()
